@@ -1,0 +1,119 @@
+"""Paper Fig. 6 / Table A: generation efficiency — MiKV (full attention, full
+score matrix) vs ZipCache (flash + 10% probes).
+
+Two layers of evidence, no GPU/TPU wall-clock available in-container:
+  1. ANALYTIC (v5e roofline, LLaMA3-8B shape, the paper's setting): FLOPs +
+     HBM bytes for prefill and per-token decode under each method, converted
+     to time via the roofline max(compute, memory); reports the % reductions
+     to compare with the paper's 37.3% (prefill) / 56.9% (decode) / 19.8%
+     (memory).
+  2. MEASURED (CPU, smoke model): relative wall-clock of the two saliency
+     paths (full-attention scores vs probe side-output) at growing lengths.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import configs
+from repro.core import saliency as sal
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
+from repro.models import attention as attn_mod
+
+
+# ---------------------------------------------------------------------------
+# analytic model (paper's LLaMA3-8B, bf16, v5e constants)
+# ---------------------------------------------------------------------------
+
+def _analytic(l: int = 4096, b: int = 1, n_layers: int = 32, d_model: int = 4096,
+              n_heads: int = 32, n_kv: int = 8, d_ff: int = 14336,
+              probe_ratio: float = 0.10, avg_bits: float = 2.8):
+    """v5e roofline model of ZipCache vs MiKV-style full-attention serving.
+
+    `b` is the serving batch (the paper's Fig. 6 regime is batched serving
+    where the KV cache, not the weights, dominates decode traffic — at b=1
+    on TPU the weights dominate and the reductions shrink; both regimes are
+    reported, see EXPERIMENTS.md §Reproduction)."""
+    hd = d_model // n_heads
+    n_params = 8.03e9
+    w_bytes = 2 * n_params
+    # ---- prefill
+    proj_flops = b * 2 * l * n_params
+    attn_flops_flash = b * n_layers * 2 * 2 * n_heads * (l * l // 2) * hd
+    # MiKV: standard attention — materializes + re-reads the fp32 score matrix
+    score_bytes = b * n_layers * n_heads * (l * l // 2) * 4 * 2
+    probe_flops = attn_flops_flash * probe_ratio
+    act_bytes = b * n_layers * l * d_model * 2 * 8  # residual-stream traffic
+    pre_zip_t = max((proj_flops + attn_flops_flash + probe_flops) / PEAK_FLOPS,
+                    (w_bytes + act_bytes) / HBM_BW)
+    pre_mikv_t = max((proj_flops + attn_flops_flash) / PEAK_FLOPS,
+                     (w_bytes + act_bytes + score_bytes) / HBM_BW)
+    # ---- decode (per token, whole batch): weights read once, cache per seq
+    kv_bytes_fp16 = b * n_layers * 2 * l * n_kv * hd * 2
+    kv_bytes_zip = kv_bytes_fp16 * avg_bits / 16.0
+    dec_flops = b * (2 * n_params + n_layers * 4 * n_heads * l * hd)
+    mikv_score_bytes = b * n_layers * n_heads * l * 4 * 2  # per-step score rows
+    dec_zip_t = max(dec_flops / PEAK_FLOPS, (w_bytes + kv_bytes_zip) / HBM_BW)
+    dec_mikv_t = max(dec_flops / PEAK_FLOPS,
+                     (w_bytes + kv_bytes_fp16 + mikv_score_bytes) / HBM_BW)
+    mem_zip = w_bytes + kv_bytes_zip
+    mem_fp16 = w_bytes + kv_bytes_fp16
+    return {
+        "prefill_reduction": 1 - pre_zip_t / pre_mikv_t,
+        "decode_reduction": 1 - dec_zip_t / dec_mikv_t,
+        "memory_reduction": 1 - mem_zip / mem_fp16,
+        "kv_bytes_fp16": kv_bytes_fp16, "kv_bytes_zip": kv_bytes_zip,
+    }
+
+
+# ---------------------------------------------------------------------------
+
+def run():
+    # paper at l=4096 (A100, batched serving): prefill -37.3%, decode -56.9%,
+    # GPU memory -19.8%.  On v5e the same claim is regime-dependent:
+    for l, b in ((4096, 1), (4096, 16), (32768, 128)):
+        a = _analytic(l=l, b=b)
+        common.emit(f"fig6.analytic.l{l}.b{b}", 0.0,
+                    f"prefill{a['prefill_reduction']*100:+.1f}%;"
+                    f"decode{a['decode_reduction']*100:+.1f}%;"
+                    f"kvmem{a['memory_reduction']*100:+.1f}%")
+
+    # ---- measured (CPU): saliency via full scores vs probe side-output
+    rng = np.random.default_rng(0)
+    for l in (256, 512):
+        b, h, hk, d = 1, 8, 4, 64
+        q = jnp.asarray(rng.normal(size=(b, h, l, d)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(b, hk, l, d)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, hk, l, d)).astype(np.float32))
+        probe = sal.select_probes(l, "random+recent", 0.10, 0)
+
+        @jax.jit
+        def zip_path(q, k, v):
+            out, colsum = attn_mod.blocked_attention(q, k, v, causal=True,
+                                                     q_block=128, probe=probe)
+            return out, colsum
+
+        @jax.jit
+        def mikv_path(q, k, v):
+            # full attention with materialized scores (Eq. 7 needs them all)
+            g = q.shape[1] // k.shape[1]
+            logits = jnp.einsum("bhqd,bhkd->bhqk", q / (d ** 0.5),
+                                jnp.repeat(k, g, 1))
+            mask = jnp.tril(jnp.ones((l, l))) > 0
+            A = jax.nn.softmax(jnp.where(mask[None, None], logits, -1e30), -1)
+            out = jnp.einsum("bhqk,bhkd->bhqd", A, jnp.repeat(v, g, 1))
+            return out, jnp.sum(A, axis=(1, 2))
+
+        t_zip = common.timeit(lambda: jax.block_until_ready(zip_path(q, k, v)), n=5)
+        t_mikv = common.timeit(lambda: jax.block_until_ready(mikv_path(q, k, v)), n=5)
+        common.emit(f"fig6.measured_prefill.l{l}", t_zip,
+                    f"vs_full_scores:{t_mikv/t_zip:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

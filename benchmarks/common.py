@@ -1,0 +1,88 @@
+"""Shared benchmark helpers: a tiny trained LM (quality proxies need a model
+with structure — random init is quantization's worst case and shows nothing),
+timing, and CSV emission."""
+
+from __future__ import annotations
+
+import os
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ShapeConfig
+from repro.data import DataConfig, TokenPipeline
+from repro.models import registry
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+CACHE_DIR = Path(os.environ.get("REPRO_BENCH_CACHE", "/tmp/repro_bench"))
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn, n=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def trained_tiny_lm(steps: int = 300, seq_len: int = 128, seed: int = 0):
+    """Train the smollm smoke config on synthetic copy-structured data; cache
+    the params so every benchmark shares one model.  Returns (cfg, params,
+    eval_batches)."""
+    cfg = configs.get_arch("smollm-360m", smoke=True)
+    ck = Checkpointer(str(CACHE_DIR / "tiny_lm"), keep=1)
+    params = registry.materialize_params(cfg, seed)
+    dcfg = DataConfig(seq_len=seq_len, global_batch=16, vocab=cfg.vocab, seed=seed)
+
+    latest = ck.latest()
+    if latest == steps:
+        params, _ = ck.restore(steps, params)
+    else:
+        opt = adamw_init(params)
+        ocfg = AdamWConfig(lr=2e-3, weight_decay=0.0)
+
+        @jax.jit
+        def step(params, opt, batch):
+            (l, m), g = jax.value_and_grad(
+                lambda p: registry.loss_fn(p, batch, cfg), has_aux=True)(params)
+            params, opt, _ = adamw_update(ocfg, g, opt)
+            return params, opt, l
+
+        pipe = TokenPipeline(dcfg)
+        for i in range(steps):
+            b = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+            params, opt, l = step(params, opt, b)
+            if i % 100 == 0:
+                print(f"  [tiny-lm] step {i} loss {float(l):.3f}", flush=True)
+        pipe.close()
+        print(f"  [tiny-lm] final loss {float(l):.3f}", flush=True)
+        ck.save(steps, params, blocking=True)
+
+    eval_pipe = TokenPipeline(DataConfig(seq_len=seq_len, global_batch=16,
+                                         vocab=cfg.vocab, seed=seed + 999))
+    eval_batches = [next(eval_pipe) for _ in range(4)]
+    eval_pipe.close()
+    return cfg, params, eval_batches
+
+
+def eval_ce(cfg, params, batches) -> float:
+    @jax.jit
+    def ce(p, b):
+        return registry.loss_fn(p, b, cfg)[0]
+
+    return float(np.mean([float(ce(params, {k: jnp.asarray(v) for k, v in b.items()}))
+                          for b in batches]))

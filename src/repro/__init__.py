@@ -1,0 +1,8 @@
+"""repro: ZipCache — accurate & efficient KV cache quantization, on TPU in JAX.
+
+Reproduction + beyond-paper optimization of:
+  He et al., "ZipCache: Accurate and Efficient KV Cache Quantization with
+  Salient Token Identification", NeurIPS 2024.
+"""
+
+__version__ = "0.1.0"

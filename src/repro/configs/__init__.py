@@ -1,0 +1,41 @@
+"""Architecture registry: --arch <id> resolution for launchers and tests."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, shape_applicable  # noqa: F401
+
+_MODULES = {
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "yi-34b": "repro.configs.yi_34b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "yi-6b": "repro.configs.yi_6b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "zipcache-paper-8b": "repro.configs.zipcache_paper",
+}
+
+ARCH_IDS = tuple(k for k in _MODULES if k != "zipcache-paper-8b")  # the assigned ten
+
+
+def get_arch(name: str, smoke: bool = False) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[name])
+    cfg = mod.SMOKE if smoke else mod.CONFIG
+    cfg.validate_periodicity()
+    return cfg
+
+
+def all_archs(smoke: bool = False) -> Dict[str, ArchConfig]:
+    return {k: get_arch(k, smoke) for k in ARCH_IDS}
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]

@@ -1,0 +1,187 @@
+"""Architecture configuration schema + shape/mesh assignment tables."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    norm_eps: float = 1e-5
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    first_dense_layers: int = 0
+    moe_layer_period: int = 1    # layer i is MoE iff i % period == offset
+    moe_layer_offset: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+
+    # --- MLA (deepseek-v2) ---
+    mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 0
+    nope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- SSM / hybrid ---
+    attn_layer_period: int = 0   # 0 => all layers attention (or all ssm if ssm=True)
+    attn_layer_offset: int = 0
+    ssm: bool = False            # True => attention-free (mamba2)
+    ssm_d_state: int = 0
+    ssm_d_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_n_groups: int = 1
+
+    # --- encoder-decoder ---
+    encdec: bool = False
+    n_enc_layers: int = 0
+
+    # --- modality frontend stubs ---
+    frontend: str = "none"       # none | audio | vision
+    n_frontend_tokens: int = 0
+
+    # ----------------------------------------------------------------
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.n_experts == 0 or i < self.first_dense_layers:
+            return False
+        return (i % self.moe_layer_period) == self.moe_layer_offset
+
+    def is_attn_layer(self, i: int) -> bool:
+        if self.ssm:
+            return False
+        if self.attn_layer_period == 0:
+            return True
+        return (i % self.attn_layer_period) == self.attn_layer_offset
+
+    @property
+    def scan_group(self) -> int:
+        """Layers per scanned group (homogeneous across groups)."""
+        g = 1
+        if self.attn_layer_period:
+            g = self.attn_layer_period
+        if self.n_experts and self.moe_layer_period > 1:
+            import math
+            g = math.lcm(g, self.moe_layer_period)
+        return g
+
+    @property
+    def n_scan_groups(self) -> int:
+        body = self.n_layers - self.first_dense_layers
+        assert body % self.scan_group == 0, (self.name, body, self.scan_group)
+        return body // self.scan_group
+
+    def layer_kinds(self, group_idx_base: int = 0) -> Tuple[Tuple[str, str], ...]:
+        """Per-layer (mixer, ffn) kinds within one scan group (group-invariant)."""
+        base = self.first_dense_layers
+        kinds = []
+        for j in range(self.scan_group):
+            i = base + j  # kinds are periodic => group 0 is representative
+            mixer = "ssm" if (self.ssm or not self.is_attn_layer(i)) else ("mla" if self.mla else "attn")
+            ffn = "moe" if self.is_moe_layer(i) else ("dense" if self.d_ff else "none")
+            kinds.append((mixer, ffn))
+        return tuple(kinds)
+
+    def validate_periodicity(self) -> None:
+        """Layer-kind pattern must repeat exactly every scan_group layers."""
+        base = self.first_dense_layers
+        for i in range(base, self.n_layers):
+            j = base + (i - base) % self.scan_group
+            a = (self.is_attn_layer(i), self.is_moe_layer(i))
+            b = (self.is_attn_layer(j), self.is_moe_layer(j))
+            assert a == b, f"{self.name}: layer {i} kind differs from group pattern"
+
+    def param_count(self) -> int:
+        """Approximate total parameters (embeddings + blocks)."""
+        e = self.d_model
+        n = self.vocab * e * (1 if self.tie_embeddings else 2)
+        for i in range(self.n_layers):
+            if self.ssm or not self.is_attn_layer(i):
+                d_in = self.ssm_expand * e
+                heads = d_in // self.ssm_head_dim
+                n += e * (2 * d_in + 2 * self.ssm_n_groups * self.ssm_d_state + heads)
+                n += d_in * self.ssm_d_conv + d_in * e + heads
+            elif self.mla:
+                n += e * (self.kv_lora_rank + self.rope_head_dim)
+                q_in = self.q_lora_rank if self.q_lora_rank else e
+                if self.q_lora_rank:
+                    n += e * self.q_lora_rank
+                n += q_in * self.n_heads * (self.nope_head_dim + self.rope_head_dim)
+                n += self.kv_lora_rank * self.n_heads * (self.nope_head_dim + self.v_head_dim)
+                n += self.n_heads * self.v_head_dim * e
+            else:
+                n += e * self.hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+            if self.is_moe_layer(i):
+                n += self.n_experts * 3 * e * self.moe_d_ff
+                n += self.n_shared_experts * 3 * e * self.moe_d_ff
+                n += e * self.n_experts
+            elif self.d_ff:
+                n += 3 * e * self.d_ff
+        if self.encdec:
+            # encoder blocks + decoder cross-attn (rough: add same-size encoder)
+            n += self.n_enc_layers * (4 * e * e + 3 * e * self.d_ff)
+            n += self.n_layers * 4 * e * e  # cross attention
+        return n
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: routed top-k + shared only)."""
+        if not self.n_experts:
+            return self.param_count()
+        e = self.d_model
+        full = self.param_count()
+        n_moe_layers = sum(self.is_moe_layer(i) for i in range(self.n_layers))
+        inactive = n_moe_layers * (self.n_experts - self.top_k) * 3 * e * self.moe_d_ff
+        return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# Input-shape assignment (LM-family: seq_len x global_batch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention: only SSM/hybrid archs run it
+LONG_CONTEXT_ARCHS = ("mamba2-2.7b", "jamba-v0.1-52b")
+
+
+def shape_applicable(arch: "ArchConfig", shape: str) -> bool:
+    if shape == "long_500k":
+        return arch.name in LONG_CONTEXT_ARCHS
+    return True

@@ -1,0 +1,3 @@
+# The paper's primary contribution: KV cache quantization with salient-token
+# identification (ZipCache) plus the baselines it compares against.
+from repro.core import packing, quant, saliency, policy, kvcache  # noqa: F401

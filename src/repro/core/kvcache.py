@@ -1,0 +1,661 @@
+"""Mixed-precision quantized KV cache (the ZipCache runtime artifact).
+
+Structure (all shapes static so the cache is a pjit-shardable pytree):
+
+  MixedKVCache
+    ├── hi : TokenStore   — salient tokens at high_bits   (capacity S_hi)
+    ├── lo : TokenStore   — regular tokens at low_bits    (capacity S_lo)
+    ├── window            — bf16 staging buffer for freshly decoded tokens
+    │                       (recompressed into hi/lo every `recompress_interval`
+    │                        steps — paper Alg. 3)
+    └── saliency state    — per-slot accumulated probe attention mass `acc`
+                            and probe counts `nnz` (Eq. 8 numerator/denominator)
+
+Token layout inside a store: (batch, kv_heads, slots, head_dim); positions,
+acc, nnz are per (batch, slots) — the paper quantizes whole tokens, with
+saliency pooled across heads.  Empty slots carry pos == -1 and are masked out
+of attention.
+
+This module is per-layer; the model stacks caches along a leading layer axis
+and scans over them.  Baseline policies (H2O eviction, KIVI window, GEAR
+uniform, fp16) reuse the same structure with degenerate capacities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant, saliency as sal
+from repro.core.policy import CompressionConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# TokenStore
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TokenStore:
+    """Fixed-capacity store of quantized (K, V) tokens + saliency state."""
+
+    k: quant.QuantizedTensor     # (b, h_kv, S, d) logical
+    v: quant.QuantizedTensor
+    pos: jnp.ndarray             # (b, S) int32 absolute positions, -1 = empty
+    acc: jnp.ndarray             # (b, S) f32 accumulated probe attention
+    nnz: jnp.ndarray             # (b, S) f32 probe counts
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.pos, self.acc, self.nnz), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.pos.shape[-1]
+
+    @property
+    def valid(self) -> jnp.ndarray:
+        return self.pos >= 0
+
+    def dequantize(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self.k.dequantize(), self.v.dequantize()
+
+    def nbytes_packed(self) -> int:
+        return self.k.nbytes_packed() + self.v.nbytes_packed()
+
+
+def _empty_quant(x: jnp.ndarray, bits: int) -> quant.QuantizedTensor:
+    """Zero-capacity store: no reductions over the empty token axis."""
+    from repro.core import packing
+
+    pf = packing.pack_factor(min(bits, 8))
+    codes = jnp.zeros((*x.shape[:-1], x.shape[-1] // pf), jnp.int8)
+    scale = jnp.ones((*x.shape[:-2], 0, 1), jnp.float32)
+    zero = jnp.zeros((*x.shape[:-2], 0, 1), jnp.float32)
+    return quant.QuantizedTensor(codes, scale, zero, None, min(bits, 8), x.shape)
+
+
+def _quantize_kv(
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    bits: int,
+    cfg: CompressionConfig,
+) -> Tuple[quant.QuantizedTensor, quant.QuantizedTensor]:
+    """Quantize gathered K/V token blocks per the policy's schemes."""
+    if k.shape[-2] == 0:
+        return _empty_quant(k, bits), _empty_quant(v, bits)
+    if bits >= 16:
+        return quant.quantize_raw16(k), quant.quantize_raw16(v)
+    gk = min(cfg.group_size, k.shape[-1])
+    gv = min(cfg.group_size, v.shape[-1])
+    kw_k = {"group_size": gk} if cfg.key_scheme == "groupwise" else {}
+    kw_v = {"group_size": gv} if cfg.value_scheme == "groupwise" else {}
+    qk = quant.quantize(k, bits, cfg.key_scheme, **kw_k)
+    qv = quant.quantize(v, bits, cfg.value_scheme, **kw_v)
+    return qk, qv
+
+
+def build_store(
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    pos: jnp.ndarray,
+    acc: jnp.ndarray,
+    nnz: jnp.ndarray,
+    bits: int,
+    cfg: CompressionConfig,
+) -> TokenStore:
+    qk, qv = _quantize_kv(k, v, bits, cfg)
+    return TokenStore(qk, qv, pos.astype(jnp.int32), acc.astype(jnp.float32), nnz.astype(jnp.float32))
+
+
+def empty_store(
+    b: int, h_kv: int, capacity: int, d: int, bits: int, cfg: CompressionConfig,
+    dtype=jnp.bfloat16, d_v: Optional[int] = None,
+) -> TokenStore:
+    k = jnp.zeros((b, h_kv, capacity, d), dtype)
+    v = jnp.zeros((b, h_kv, capacity, d_v if d_v is not None else d), dtype)
+    pos = jnp.full((b, capacity), -1, jnp.int32)
+    acc = jnp.zeros((b, capacity), jnp.float32)
+    nnz = jnp.zeros((b, capacity), jnp.float32)
+    return build_store(k, v, pos, acc, nnz, bits, cfg)
+
+
+# ---------------------------------------------------------------------------
+# MixedKVCache
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MixedKVCache:
+    hi: TokenStore
+    lo: TokenStore
+    k_win: jnp.ndarray        # (b, h_kv, W, d) bf16 staging window
+    v_win: jnp.ndarray
+    win_pos: jnp.ndarray      # (b, W) int32, -1 empty
+    win_acc: jnp.ndarray      # (b, W) f32
+    win_nnz: jnp.ndarray      # (b, W) f32
+    length: jnp.ndarray       # (b,) int32: total live tokens (incl. evicted-from count for positions)
+    win_fill: jnp.ndarray     # () int32: occupied window slots (uniform across batch)
+
+    def tree_flatten(self):
+        children = (self.hi, self.lo, self.k_win, self.v_win, self.win_pos,
+                    self.win_acc, self.win_nnz, self.length, self.win_fill)
+        return children, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def window(self) -> int:
+        return self.win_pos.shape[-1]
+
+    @property
+    def capacity(self) -> int:
+        return self.hi.capacity + self.lo.capacity + self.window
+
+    def nbytes_packed(self) -> int:
+        n = self.hi.nbytes_packed() + self.lo.nbytes_packed()
+        for t in (self.k_win, self.v_win):
+            n += t.size * t.dtype.itemsize
+        return n
+
+
+SLOT_ALIGN = 128  # store capacities align to this for big caches so the slot
+                  # axis shards evenly over a 16-way model axis (split-KV)
+
+
+def _align(n: int, a: int, up: bool = False) -> int:
+    return ((n + (a - 1 if up else a // 2)) // a) * a
+
+
+def capacities(cfg: CompressionConfig, max_len: int) -> Tuple[int, int, int]:
+    """Static (S_hi, S_lo, W) slot capacities for a max sequence length.
+
+    For long caches the hi/lo/window capacities are rounded to SLOT_ALIGN so
+    the slot axis is shardable over the model mesh axis."""
+    a = SLOT_ALIGN if max_len >= 2048 else 1
+    w = max(cfg.recompress_interval, 8)
+    if cfg.method == "kivi":
+        w = max(w, cfg.fp_window)
+    w = _align(w, a, up=True) if w else 0
+    if cfg.method == "fp16":
+        return max_len, 0, w
+    if cfg.method == "h2o":
+        s_hi = max(_align(cfg.n_salient(max_len), a), a)
+        return s_hi, 0, w
+    if cfg.method in ("gear", "kivi"):
+        return 0, max_len, w
+    # zipcache / mikv: split by saliency ratio
+    s_hi = min(max(_align(cfg.n_salient(max_len), a), a), max_len)
+    return s_hi, max_len - s_hi, w
+
+
+def init_cache(
+    cfg: CompressionConfig, b: int, h_kv: int, d: int, max_len: int,
+    dtype=jnp.bfloat16, d_v: Optional[int] = None,
+) -> MixedKVCache:
+    dv = d_v if d_v is not None else d
+    s_hi, s_lo, w = capacities(cfg, max_len)
+    hi = empty_store(b, h_kv, s_hi, d, cfg.high_bits, cfg, dtype, d_v=dv)
+    lo = empty_store(b, h_kv, s_lo, d, max(cfg.low_bits, 2) if cfg.low_bits else 2, cfg, dtype, d_v=dv)
+    if cfg.low_bits == 0:  # h2o: no lo store at all (capacity 0 handles it)
+        lo = empty_store(b, h_kv, 0, d, 2, cfg, dtype, d_v=dv)
+    return MixedKVCache(
+        hi=hi, lo=lo,
+        k_win=jnp.zeros((b, h_kv, w, d), dtype),
+        v_win=jnp.zeros((b, h_kv, w, dv), dtype),
+        win_pos=jnp.full((b, w), -1, jnp.int32),
+        win_acc=jnp.zeros((b, w), jnp.float32),
+        win_nnz=jnp.zeros((b, w), jnp.float32),
+        length=jnp.zeros((b,), jnp.int32),
+        win_fill=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefill compression (paper Alg. 2)
+# ---------------------------------------------------------------------------
+
+def _gather_tokens(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """x: (b, h, l, d); idx: (b, n) -> (b, h, n, d)."""
+    return jnp.take_along_axis(x, idx[:, None, :, None], axis=2)
+
+
+def _gather_slots(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """x: (b, l); idx: (b, n) -> (b, n)."""
+    return jnp.take_along_axis(x, idx, axis=1)
+
+
+def compress_prefill(
+    cfg: CompressionConfig,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    token_saliency: Optional[jnp.ndarray],
+    max_len: int,
+    probe_nnz: Optional[jnp.ndarray] = None,
+    dtype=jnp.bfloat16,
+) -> MixedKVCache:
+    """Compress prefill K/V (b, h_kv, l, d) into a MixedKVCache sized max_len.
+
+    token_saliency: (b, l) pooled saliency (None for saliency-free policies).
+    probe_nnz: (b, l) probe counts backing `token_saliency` (carried so
+    streaming recompression keeps a consistent Eq. 8 denominator).
+    """
+    b, h_kv, l, d = k.shape
+    s_hi, s_lo, w = capacities(cfg, max_len)
+    cache = init_cache(cfg, b, h_kv, d, max_len, dtype, d_v=v.shape[-1])
+    positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+    acc = token_saliency.astype(jnp.float32) if token_saliency is not None else jnp.zeros((b, l), jnp.float32)
+    nnz = probe_nnz.astype(jnp.float32) if probe_nnz is not None else jnp.ones((b, l), jnp.float32)
+    # `acc` convention: store the RAW accumulated probe mass; saliency =
+    # acc / max(nnz, 1).  If caller passed normalized saliency directly,
+    # acc = saliency * nnz keeps the convention.
+    acc = acc * jnp.maximum(nnz, 1.0)
+
+    if cfg.method == "fp16":
+        k_pad, v_pad, pos_pad, acc_pad, nnz_pad = _pad_tokens(k, v, positions, acc, nnz, s_hi)
+        hi = build_store(k_pad, v_pad, pos_pad, acc_pad, nnz_pad, 16, cfg)
+        return dataclasses.replace(cache, hi=hi, length=jnp.full((b,), l, jnp.int32))
+
+    if cfg.method in ("gear", "kivi"):
+        if cfg.method == "kivi" and w > 0:
+            # recent fp window; the rest quantized at low bits
+            n_body = max(l - w, 0)
+            body = slice(0, n_body)
+            k_pad, v_pad, pos_pad, acc_pad, nnz_pad = _pad_tokens(
+                k[:, :, body], v[:, :, body], positions[:, body], acc[:, body], nnz[:, body], s_lo)
+            lo = build_store(k_pad, v_pad, pos_pad, acc_pad, nnz_pad, cfg.low_bits, cfg)
+            n_win = l - n_body
+            k_w = jnp.zeros((b, h_kv, w, d), dtype).at[:, :, :n_win].set(k[:, :, n_body:].astype(dtype))
+            v_w = jnp.zeros((b, h_kv, w, v.shape[-1]), dtype).at[:, :, :n_win].set(v[:, :, n_body:].astype(dtype))
+            win_pos = jnp.full((b, w), -1, jnp.int32).at[:, :n_win].set(positions[:, n_body:])
+            return dataclasses.replace(
+                cache, lo=lo, k_win=k_w, v_win=v_w, win_pos=win_pos,
+                length=jnp.full((b,), l, jnp.int32), win_fill=jnp.asarray(n_win, jnp.int32))
+        k_pad, v_pad, pos_pad, acc_pad, nnz_pad = _pad_tokens(k, v, positions, acc, nnz, s_lo)
+        lo = build_store(k_pad, v_pad, pos_pad, acc_pad, nnz_pad, cfg.low_bits, cfg)
+        return dataclasses.replace(cache, lo=lo, length=jnp.full((b,), l, jnp.int32))
+
+    # saliency-based: zipcache / mikv / h2o
+    assert token_saliency is not None, f"{cfg.method} needs token saliency"
+    n_hi = min(cfg.n_salient(l), s_hi)
+    salient_idx, regular_idx = sal.salient_split(token_saliency, n_hi)
+
+    k_hi = _gather_tokens(k, salient_idx)
+    v_hi = _gather_tokens(v, salient_idx)
+    k_hi, v_hi, pos_hi, acc_hi, nnz_hi = _pad_tokens(
+        k_hi, v_hi, _gather_slots(positions, salient_idx),
+        _gather_slots(acc, salient_idx), _gather_slots(nnz, salient_idx), s_hi)
+    hi = build_store(k_hi, v_hi, pos_hi, acc_hi, nnz_hi, cfg.high_bits, cfg)
+
+    if cfg.low_bits > 0:
+        k_lo = _gather_tokens(k, regular_idx)
+        v_lo = _gather_tokens(v, regular_idx)
+        k_lo, v_lo, pos_lo, acc_lo, nnz_lo = _pad_tokens(
+            k_lo, v_lo, _gather_slots(positions, regular_idx),
+            _gather_slots(acc, regular_idx), _gather_slots(nnz, regular_idx), s_lo)
+        lo = build_store(k_lo, v_lo, pos_lo, acc_lo, nnz_lo, cfg.low_bits, cfg)
+    else:
+        lo = cache.lo  # h2o: regular tokens evicted
+    return dataclasses.replace(cache, hi=hi, lo=lo, length=jnp.full((b,), l, jnp.int32))
+
+
+def _pad_tokens(k, v, pos, acc, nnz, capacity: int):
+    """Right-pad token blocks (b,h,n,d)/(b,n) to a static capacity."""
+    b, h, n, d = k.shape
+    if n > capacity:
+        raise ValueError(f"{n} tokens exceed store capacity {capacity}")
+    if n == capacity:
+        return k, v, pos, acc, nnz
+    pad = capacity - n
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+    acc = jnp.pad(acc, ((0, 0), (0, pad)))
+    nnz = jnp.pad(nnz, ((0, 0), (0, pad)))
+    return k, v, pos, acc, nnz
+
+
+# ---------------------------------------------------------------------------
+# Decode: attend over the cache, append new token, update probe state
+# ---------------------------------------------------------------------------
+
+class DecodeAttnOut(NamedTuple):
+    out: jnp.ndarray            # (b, h_q, d)
+    slot_weights: jnp.ndarray   # (b, S_total) head-pooled attention over slots
+
+
+def cache_keys_values(cache: MixedKVCache):
+    """Dequantize + concat all segments. Returns (k, v, valid, positions).
+
+    This is the REFERENCE decode path (pure jnp). The Pallas decode kernel
+    (kernels/decode_qattn) consumes the packed stores directly.
+    """
+    k_hi, v_hi = cache.hi.dequantize()
+    k_lo, v_lo = cache.lo.dequantize()
+    k = jnp.concatenate([k_hi, k_lo, cache.k_win], axis=2)
+    v = jnp.concatenate([v_hi, v_lo, cache.v_win], axis=2)
+    pos = jnp.concatenate([cache.hi.pos, cache.lo.pos, cache.win_pos], axis=1)
+    valid = pos >= 0
+    return k, v, valid, pos
+
+
+def attend_decode(q: jnp.ndarray, cache: MixedKVCache, scale: Optional[float] = None,
+                  impl: str = "ref", ctx=None) -> DecodeAttnOut:
+    """One-token decode attention over the mixed cache (GQA-aware reference).
+
+    q: (b, h_q, d). h_q must be a multiple of the cache's kv heads.
+    impl="int8_algebra" folds the dequantization scales into the attention
+    algebra (hillclimb lever; see attend_decode_int8).
+    """
+    if impl == "int8_algebra":
+        return attend_decode_int8(q, cache, scale, ctx=ctx)
+    k, v, valid, _ = cache_keys_values(cache)
+    b, h_kv, s_tot, d = k.shape
+    h_q = q.shape[1]
+    g = h_q // h_kv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, h_kv, g, d).astype(jnp.float32) * scale
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32))
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w, v.astype(jnp.float32))
+    out = out.reshape(b, h_q, d).astype(q.dtype)
+    slot_w = jnp.mean(w, axis=(1, 2))  # (b, s_tot) pooled over heads
+    return DecodeAttnOut(out, slot_w)
+
+
+def _store_logits_int8(qg: jnp.ndarray, store: TokenStore) -> jnp.ndarray:
+    """q·dequant(K)ᵀ without materializing dequantized K in fp32.
+
+    Channelwise K (scale_c, zero_c per channel):
+        dequant(K)[s,d] = (C[s,d] - zero_c[d]) * scale_c[d]
+        logits[s] = Σ_d q'[d]·C[s,d] - const(q),  q' = q * scale_c
+    Only the unpacked int-code tensor is materialized (bf16, one pass) —
+    no (S,d)-sized fp32 intermediates."""
+    from repro.core import packing
+
+    kq = store.k
+    if kq.bits >= 16:
+        k = kq.dequantize().astype(jnp.float32)
+        return jnp.einsum("bhgd,bhsd->bhgs", qg, k)
+    codes = packing.unpack(kq.codes, kq.bits, out_dtype=jnp.bfloat16)
+    scale_c = kq.scale.astype(jnp.float32)[:, :, 0]   # (b,hk,d)
+    zero_c = kq.zero.astype(jnp.float32)[:, :, 0]
+    qp = qg * scale_c[:, :, None, :]                  # (b,hk,g,d)
+    lin = jnp.einsum("bhgd,bhsd->bhgs", qp.astype(jnp.bfloat16), codes).astype(jnp.float32)
+    const = jnp.einsum("bhgd,bhd->bhg", qg, scale_c * zero_c)
+    return lin - const[..., None]
+
+
+def _store_values_int8(w: jnp.ndarray, store: TokenStore) -> jnp.ndarray:
+    """w·dequant(V) with CST scales folded into the weights:
+
+        V[s,d] = (C[s,d] - zt[s]) * ts[s] * cs[d]
+        out[d] = cs[d]·( Σ_s (w·ts)[s] C[s,d] − Σ_s w[s]·ts[s]·zt[s] )"""
+    from repro.core import packing
+
+    vq = store.v
+    if vq.bits >= 16:
+        v = vq.dequantize().astype(jnp.float32)
+        return jnp.einsum("bhgs,bhsd->bhgd", w, v)
+    codes = packing.unpack(vq.codes, vq.bits, out_dtype=jnp.bfloat16)
+    ts = vq.scale.astype(jnp.float32)[..., 0]         # (b,hk,S)
+    zt = vq.zero.astype(jnp.float32)[..., 0]
+    cs = vq.channel_scale.astype(jnp.float32)[:, :, 0]  # (b,hk,d)
+    w2 = w * ts[:, :, None, :]                        # (b,hk,g,S)
+    lin = jnp.einsum("bhgs,bhsd->bhgd", w2.astype(jnp.bfloat16), codes).astype(jnp.float32)
+    corr = jnp.einsum("bhgs,bhs->bhg", w, ts * zt)
+    return (lin - corr[..., None]) * cs[:, :, None, :]
+
+
+def _store_logits_vstream_int8(qv: jnp.ndarray, store: TokenStore) -> jnp.ndarray:
+    """q·dequant(V)ᵀ for a CST-quantized V stream (MLA: the latent cache is
+    the *value*-scheme stream but also carries the keys of the absorbed
+    attention).
+
+        V[s,r] = (C[s,r] - zt[s]) * ts[s] * cs[r]
+        logits[s] = ts[s]·( (q∘cs)·C[s] ) - ts[s]·zt[s]·( (q∘cs)·1 )
+
+    qv: (b, hk, g, r). Returns (b, hk, g, S) f32."""
+    from repro.core import packing
+
+    vq = store.v
+    if vq.bits >= 16:
+        v = vq.dequantize().astype(jnp.float32)
+        return jnp.einsum("bhgr,bhsr->bhgs", qv, v)
+    codes = packing.unpack(vq.codes, vq.bits, out_dtype=jnp.bfloat16)
+    ts = vq.scale.astype(jnp.float32)[..., 0]          # (b,hk,S)
+    zt = vq.zero.astype(jnp.float32)[..., 0]
+    cs = vq.channel_scale.astype(jnp.float32)[:, :, 0]  # (b,hk,r)
+    qc = qv * cs[:, :, None, :]
+    lin = jnp.einsum("bhgr,bhsr->bhgs", qc.astype(jnp.bfloat16), codes).astype(jnp.float32)
+    qsum = jnp.sum(qc, axis=-1)                        # (b,hk,g)
+    return ts[:, :, None, :] * lin - (ts * zt)[:, :, None, :] * qsum[..., None]
+
+
+def attend_decode_mla_int8(
+    q_abs: jnp.ndarray,       # (b, h, r)  absorbed queries (q_nope · W_uk)
+    q_pe: jnp.ndarray,        # (b, h, p)  rope queries
+    cache: MixedKVCache,      # k stream = rope-key (b,1,S,p), v = latent (b,1,S,r)
+    scale: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Absorbed MLA decode with dequant folded into the attention algebra.
+
+    logits = scale·(q_abs·latent + q_pe·k_pe); out_latent = softmax·latent.
+    Only bf16 code tensors feed the matmuls (no fp32 dequant chains).
+    Returns (out_latent (b,h,r) f32, slot_weights (b,S))."""
+    b, h, r = q_abs.shape
+    qa = q_abs.reshape(b, 1, h, r).astype(jnp.float32) * scale
+    qp = q_pe.reshape(b, 1, h, -1).astype(jnp.float32) * scale
+
+    segs = []
+    for store in (cache.hi, cache.lo):
+        if store.capacity:
+            lg = _store_logits_vstream_int8(qa, store) + _store_logits_int8(qp, store)
+            segs.append((lg, store))
+    logits_win = (
+        jnp.einsum("bhgr,bhsr->bhgs", qa, cache.v_win.astype(jnp.float32))
+        + jnp.einsum("bhgp,bhsp->bhgs", qp, cache.k_win.astype(jnp.float32)))
+    all_logits = jnp.concatenate([l for l, _ in segs] + [logits_win], axis=-1)
+    valid = jnp.concatenate(
+        [s.valid for _, s in segs] + [cache.win_pos >= 0], axis=-1)
+    all_logits = jnp.where(valid[:, None, None, :], all_logits, NEG_INF)
+    w = jax.nn.softmax(all_logits, axis=-1)            # (b,1,h,S_tot)
+
+    out = jnp.zeros((b, 1, h, r), jnp.float32)
+    off = 0
+    for lg, store in segs:
+        n = store.capacity
+        out = out + _store_values_int8(w[..., off:off + n], store)
+        off += n
+    out = out + jnp.einsum("bhgs,bhsr->bhgr", w[..., off:],
+                           cache.v_win.astype(jnp.float32))
+    return out.reshape(b, h, r), jnp.mean(w[:, 0], axis=1)
+
+
+def attend_decode_int8(q: jnp.ndarray, cache: MixedKVCache,
+                       scale: Optional[float] = None, ctx=None) -> DecodeAttnOut:
+    """Decode attention with dequant folded into the attention algebra
+    (beyond-paper optimization; EXPERIMENTS.md §Perf).
+
+    The reference path materializes fp32 dequantized K/V (≈16-20 bytes/elem of
+    HBM traffic per chain stage); here the only (S,d) tensors are the unpacked
+    bf16 codes feeding the matmuls directly — ~4-6x less decode traffic in
+    the lowered HLO, exact same math (validated in tests)."""
+    b = q.shape[0]
+    h_q = q.shape[1]
+    h_kv = cache.k_win.shape[1]
+    d = q.shape[-1]
+    g = h_q // h_kv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, h_kv, g, d).astype(jnp.float32) * scale
+
+    def split_kv(t, slot_axis):
+        # SPLIT-KV constraint: keep slot-sharded partials slot-sharded
+        # (otherwise GSPMD all-gathers the packed stores over `model` —
+        # measured 11.6 GB/step on yi-34b decode; EXPERIMENTS.md §Perf).
+        if ctx is None or getattr(ctx, "mesh", None) is None:
+            return t
+        parts = [None] * t.ndim
+        parts[0] = ctx.data_axes
+        parts[slot_axis] = "model"
+        return ctx.shard(t, tuple(parts))
+
+    segs = []
+    for store in (cache.hi, cache.lo):
+        if store.capacity:
+            segs.append((split_kv(_store_logits_int8(qg, store), 3), store))
+    # window (bf16 raw)
+    logits_win = jnp.einsum("bhgd,bhsd->bhgs", qg, cache.k_win.astype(jnp.float32))
+
+    all_logits = jnp.concatenate(
+        [l for l, _ in segs] + [logits_win], axis=-1)
+    valid = jnp.concatenate(
+        [s.valid for _, s in segs] + [cache.win_pos >= 0], axis=-1)
+    all_logits = jnp.where(valid[:, None, None, :], all_logits, NEG_INF)
+    w = jax.nn.softmax(all_logits, axis=-1)
+
+    out = jnp.zeros((b, h_kv, g, cache.v_win.shape[-1]), jnp.float32)
+    off = 0
+    for lg, store in segs:
+        n = store.capacity
+        out = out + _store_values_int8(w[..., off:off + n], store)
+        off += n
+    out = out + jnp.einsum("bhgs,bhsd->bhgd", w[..., off:],
+                           cache.v_win.astype(jnp.float32))
+    slot_w = jnp.mean(w, axis=(1, 2))
+    return DecodeAttnOut(out.reshape(b, h_q, -1).astype(q.dtype), slot_w)
+
+
+def update_probe_state(
+    cache: MixedKVCache, slot_weights: jnp.ndarray, is_probe: jnp.ndarray
+) -> MixedKVCache:
+    """Accumulate a decode-step probe row into per-slot saliency state.
+
+    slot_weights: (b, S_total) in hi/lo/window slot order (from attend_decode).
+    is_probe: scalar bool/int — whether this decode step is a probe row
+    (paper Alg. 3: the most recent 5% + a 5% random subsample of steps).
+    """
+    s_hi, s_lo = cache.hi.capacity, cache.lo.capacity
+    w_hi = slot_weights[:, :s_hi]
+    w_lo = slot_weights[:, s_hi:s_hi + s_lo]
+    w_win = slot_weights[:, s_hi + s_lo:]
+    p = is_probe.astype(jnp.float32)
+    hi = dataclasses.replace(
+        cache.hi, acc=cache.hi.acc + p * w_hi,
+        nnz=cache.hi.nnz + p * cache.hi.valid.astype(jnp.float32))
+    lo = dataclasses.replace(
+        cache.lo, acc=cache.lo.acc + p * w_lo,
+        nnz=cache.lo.nnz + p * cache.lo.valid.astype(jnp.float32))
+    return dataclasses.replace(
+        cache, hi=hi, lo=lo,
+        win_acc=cache.win_acc + p * w_win,
+        win_nnz=cache.win_nnz + p * (cache.win_pos >= 0).astype(jnp.float32))
+
+
+def append_token(cache: MixedKVCache, k_t: jnp.ndarray, v_t: jnp.ndarray) -> MixedKVCache:
+    """Append one decoded token's K/V (b, h_kv, d) into the staging window."""
+    slot = cache.win_fill
+    k_win = jax.lax.dynamic_update_index_in_dim(
+        cache.k_win, k_t.astype(cache.k_win.dtype)[:, :, None, :], slot, axis=2)[:, :, : cache.window]
+    v_win = jax.lax.dynamic_update_index_in_dim(
+        cache.v_win, v_t.astype(cache.v_win.dtype)[:, :, None, :], slot, axis=2)[:, :, : cache.window]
+    win_pos = jax.lax.dynamic_update_index_in_dim(
+        cache.win_pos, cache.length[:, None], slot, axis=1)[:, : cache.window]
+    return dataclasses.replace(
+        cache, k_win=k_win, v_win=v_win, win_pos=win_pos,
+        length=cache.length + 1, win_fill=cache.win_fill + 1)
+
+
+def window_is_full(cache: MixedKVCache) -> jnp.ndarray:
+    return cache.win_fill >= cache.window
+
+
+# ---------------------------------------------------------------------------
+# Streaming recompression (paper Alg. 3)
+# ---------------------------------------------------------------------------
+
+def recompress(cfg: CompressionConfig, cache: MixedKVCache) -> MixedKVCache:
+    """Fold the staging window back into the quantized stores.
+
+    Dequantizes all segments, re-ranks every token by its CURRENT estimated
+    saliency (acc / nnz for 'normalized', raw acc for 'accumulated'), and
+    rebuilds the hi/lo stores.  Empties the window.  Static shapes throughout.
+    """
+    k, v, valid, pos = cache_keys_values(cache)
+    b = k.shape[0]
+    acc = jnp.concatenate([cache.hi.acc, cache.lo.acc, cache.win_acc], axis=1)
+    nnz = jnp.concatenate([cache.hi.nnz, cache.lo.nnz, cache.win_nnz], axis=1)
+    if cfg.method == "fp16":
+        scores = pos.astype(jnp.float32)  # lossless; any valid ordering works
+    elif cfg.saliency_metric == "normalized":
+        scores = acc / jnp.maximum(nnz, 1.0)
+    elif cfg.saliency_metric == "accumulated":
+        scores = acc
+    else:  # saliency-free (kivi / gear): recency ordering — newest stay fp
+        scores = pos.astype(jnp.float32)
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    s_hi, s_lo, w = cache.hi.capacity, cache.lo.capacity, cache.window
+    vf = valid.astype(jnp.float32)
+
+    if cfg.method == "h2o":
+        # keep top (half heavy-hitter / half recent) — H2O's retention rule
+        n_recent = s_hi // 2
+        recency = jnp.where(valid, pos.astype(jnp.float32), NEG_INF)
+        _, recent_idx = jax.lax.top_k(recency, n_recent)
+        keep_mask = jnp.zeros_like(scores).at[
+            jnp.arange(b)[:, None], recent_idx].set(NEG_INF * -1.0)  # +inf for recents
+        hh_scores = scores + keep_mask
+        _, hi_idx = jax.lax.top_k(hh_scores, s_hi)
+        hi_idx = jnp.sort(hi_idx, axis=-1)
+        hi = build_store(
+            _gather_tokens(k, hi_idx), _gather_tokens(v, hi_idx),
+            _gather_slots(pos, hi_idx), _gather_slots(acc, hi_idx),
+            _gather_slots(nnz, hi_idx), 16, cfg)
+        return _emptied_window(dataclasses.replace(cache, hi=hi))
+
+    if s_hi == 0:  # gear / kivi: everything back to lo at low bits
+        order = jnp.argsort(-scores, axis=-1)[:, :s_lo].astype(jnp.int32)
+        order = jnp.sort(order, axis=-1)
+        lo = build_store(
+            _gather_tokens(k, order), _gather_tokens(v, order),
+            jnp.where(_gather_slots(vf, order) > 0, _gather_slots(pos, order), -1),
+            _gather_slots(acc, order), _gather_slots(nnz, order), cfg.low_bits, cfg)
+        return _emptied_window(dataclasses.replace(cache, lo=lo))
+
+    # zipcache / mikv: re-split by saliency. hi gets the top s_hi VALID slots.
+    _, idx = jax.lax.top_k(scores, s_hi + s_lo)
+    hi_idx = jnp.sort(idx[:, :s_hi], axis=-1).astype(jnp.int32)
+    lo_idx = jnp.sort(idx[:, s_hi:s_hi + s_lo], axis=-1).astype(jnp.int32)
+    # invalid slots sort to the bottom; keep their pos at -1 after gather
+    def _mk(idx_, bits):
+        p = _gather_slots(pos, idx_)
+        return build_store(
+            _gather_tokens(k, idx_), _gather_tokens(v, idx_), p,
+            _gather_slots(acc, idx_), _gather_slots(nnz, idx_), bits, cfg)
+    hi = _mk(hi_idx, cfg.high_bits)
+    lo = _mk(lo_idx, cfg.low_bits)
+    return _emptied_window(dataclasses.replace(cache, hi=hi, lo=lo))
+
+
+def _emptied_window(cache: MixedKVCache) -> MixedKVCache:
+    return dataclasses.replace(
+        cache,
+        k_win=jnp.zeros_like(cache.k_win),
+        v_win=jnp.zeros_like(cache.v_win),
+        win_pos=jnp.full_like(cache.win_pos, -1),
+        win_acc=jnp.zeros_like(cache.win_acc),
+        win_nnz=jnp.zeros_like(cache.win_nnz),
+        win_fill=jnp.zeros_like(cache.win_fill),
+    )

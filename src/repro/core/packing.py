@@ -1,0 +1,65 @@
+"""Sub-byte packing for quantized KV caches.
+
+Quantized codes (2-bit or 4-bit unsigned integers) are packed along the LAST
+axis into int8 lanes so the stored cache actually occupies 2/4 bits per
+element in HBM.  All functions are jit-safe and shape-static.
+
+Layout: ``pack_factor = 8 // bits`` consecutive elements of the last axis share
+one int8 byte, little-endian within the byte:
+
+    byte = sum_j code[..., i*pf + j] << (bits * j)
+
+The last axis must be divisible by ``pack_factor`` (all head/channel dims in
+this codebase are multiples of 4).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_factor(bits: int) -> int:
+    if bits not in (1, 2, 4, 8):
+        raise ValueError(f"unsupported bit-width {bits}")
+    return 8 // bits
+
+
+def packed_dim(dim: int, bits: int) -> int:
+    pf = pack_factor(bits)
+    if dim % pf:
+        raise ValueError(f"last dim {dim} not divisible by pack factor {pf}")
+    return dim // pf
+
+
+def pack(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack unsigned integer codes (any int dtype, values < 2**bits) to int8.
+
+    codes: (..., d) -> (..., d // pack_factor) int8.
+    """
+    pf = pack_factor(bits)
+    if pf == 1:
+        return codes.astype(jnp.int8)
+    d = codes.shape[-1]
+    out_d = packed_dim(d, bits)
+    c = codes.astype(jnp.uint8).reshape(*codes.shape[:-1], out_d, pf)
+    shifts = (jnp.arange(pf, dtype=jnp.uint8) * bits).astype(jnp.uint8)
+    word = jnp.sum(
+        (c << shifts).astype(jnp.uint8), axis=-1, dtype=jnp.uint8
+    )  # bitwise-or via sum: fields are disjoint
+    return word.astype(jnp.int8)
+
+
+def unpack(packed: jnp.ndarray, bits: int, out_dtype=jnp.int32) -> jnp.ndarray:
+    """Unpack int8 lanes back to integer codes.
+
+    packed: (..., d_packed) int8 -> (..., d_packed * pack_factor) out_dtype.
+    """
+    pf = pack_factor(bits)
+    if pf == 1:
+        return packed.astype(jnp.uint8).astype(out_dtype)
+    w = packed.astype(jnp.uint8)
+    mask = jnp.uint8(2**bits - 1)
+    shifts = (jnp.arange(pf, dtype=jnp.uint8) * bits).astype(jnp.uint8)
+    # (..., d_packed, pf)
+    fields = (w[..., None] >> shifts) & mask
+    return fields.reshape(*packed.shape[:-1], packed.shape[-1] * pf).astype(out_dtype)

@@ -1,0 +1,277 @@
+"""Quantization primitives for KV cache compression (paper §3.2, §4.1).
+
+Implements, with identical APIs (quantize -> QuantizedTensor -> dequantize):
+
+  * tokenwise uniform quantization        (per-token scale/zero)   Fig.2(b)
+  * channelwise uniform quantization      (per-channel scale/zero) Fig.2 text
+  * groupwise uniform quantization        (KIVI-style, group n)    Fig.2(c)
+  * channel-separable tokenwise (CSTQuant)                          Fig.2(d), Alg.1
+
+All quantizers operate on the LAST two axes interpreted as (tokens, channels);
+leading axes are batch-like.  Codes are bit-packed (see packing.py) so the
+stored representation is the real compressed artifact, and every scheme
+reports its true quantization-parameter overhead so the paper's compression
+ratio algebra (Appendix A) is reproduced exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+_EPS = 1e-8
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """A bit-packed uniform-quantized tensor plus its quantization parameters.
+
+    codes:  int8 packed codes, shape (..., T, C // pack_factor)
+    scale:  broadcastable to (..., T, C) after expanding packed axis
+    zero:   same shape as scale (stored as float, represents integer zero-point)
+    channel_scale: optional per-channel normalizer (CSTQuant's ``c``), shape (C,)
+                   or (..., 1, C); applied multiplicatively after dequant.
+    bits:   bit-width
+    shape:  logical unpacked shape (..., T, C)
+    """
+
+    codes: jnp.ndarray
+    scale: Optional[jnp.ndarray]
+    zero: Optional[jnp.ndarray]
+    channel_scale: Optional[jnp.ndarray]
+    bits: int
+    shape: tuple
+
+    def tree_flatten(self):
+        children = (self.codes, self.scale, self.zero, self.channel_scale)
+        aux = (self.bits, self.shape)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scale, zero, channel_scale = children
+        bits, shape = aux
+        return cls(codes, scale, zero, channel_scale, bits, shape)
+
+    @property
+    def dtype(self):
+        return self.codes.dtype if self.scale is None else self.scale.dtype
+
+    def dequantize(self) -> jnp.ndarray:
+        if self.bits == 16:  # raw storage (fp16/bf16 "quantization" = identity)
+            return self.codes.reshape(self.shape)
+        x = packing.unpack(self.codes, self.bits, out_dtype=jnp.float32)
+        c = self.shape[-1]
+        if self.scale.shape[-1] not in (1, c):
+            # grouped params: scale (..., T, C/g) for codes (..., T, C)
+            g = c // self.scale.shape[-1]
+            xg = x.reshape(*x.shape[:-1], c // g, g)
+            xg = (xg - self.zero.astype(jnp.float32)[..., None]) * self.scale.astype(jnp.float32)[..., None]
+            x = xg.reshape(*x.shape[:-1], c)
+        else:
+            x = (x - self.zero.astype(jnp.float32)) * self.scale.astype(jnp.float32)
+        if self.channel_scale is not None:
+            x = x * self.channel_scale.astype(jnp.float32)
+        return x.reshape(self.shape).astype(self.dtype)
+
+    def nbytes_packed(self) -> int:
+        """Bytes of the packed representation incl. quantization parameters."""
+        n = self.codes.size * self.codes.dtype.itemsize
+        for t in (self.scale, self.zero, self.channel_scale):
+            if t is not None:
+                n += t.size * t.dtype.itemsize
+        return int(n)
+
+
+def _minmax_params(x: jnp.ndarray, bits: int, axis, keepdims=True):
+    """Uniform asymmetric min/max quantization parameters (paper Eq. 5)."""
+    qmax = 2**bits - 1
+    xmin = jnp.min(x, axis=axis, keepdims=keepdims)
+    xmax = jnp.max(x, axis=axis, keepdims=keepdims)
+    scale = jnp.maximum((xmax - xmin) / qmax, _EPS).astype(jnp.float32)
+    zero = jnp.round(-xmin / scale)
+    return scale, zero
+
+
+def _encode(x: jnp.ndarray, scale, zero, bits: int) -> jnp.ndarray:
+    qmax = 2**bits - 1
+    q = jnp.clip(jnp.round(x / scale + zero), 0, qmax)
+    return packing.pack(q.astype(jnp.uint8), bits)
+
+
+def quantize_tokenwise(x: jnp.ndarray, bits: int) -> QuantizedTensor:
+    """Per-token (last-axis-reduced) uniform quantization. x: (..., T, C)."""
+    scale, zero = _minmax_params(x.astype(jnp.float32), bits, axis=-1)
+    codes = _encode(x.astype(jnp.float32), scale, zero, bits)
+    return QuantizedTensor(codes, scale.astype(x.dtype), zero.astype(x.dtype), None, bits, x.shape)
+
+
+def quantize_channelwise(x: jnp.ndarray, bits: int) -> QuantizedTensor:
+    """Per-channel uniform quantization (reduce over tokens). x: (..., T, C).
+
+    Paper §4.1: used for the KEY cache (token representations are similar,
+    outliers live in channels).  Parameters: 2*C per leading batch slice.
+    """
+    scale, zero = _minmax_params(x.astype(jnp.float32), bits, axis=-2)
+    codes = _encode(x.astype(jnp.float32), scale, zero, bits)
+    return QuantizedTensor(codes, scale.astype(x.dtype), zero.astype(x.dtype), None, bits, x.shape)
+
+
+def quantize_groupwise(x: jnp.ndarray, bits: int, group_size: int = 32) -> QuantizedTensor:
+    """KIVI-style fine-grained groupwise quantization along channels.
+
+    Each contiguous group of ``group_size`` channels within each token is
+    quantized independently -> 2 * T * C / n parameters (paper Table 1 row 2).
+    """
+    *lead, t, c = x.shape
+    if c % group_size:
+        raise ValueError(f"channels {c} not divisible by group size {group_size}")
+    xg = x.astype(jnp.float32).reshape(*lead, t, c // group_size, group_size)
+    scale, zero = _minmax_params(xg, bits, axis=-1)
+    qmax = 2**bits - 1
+    q = jnp.clip(jnp.round(xg / scale + zero), 0, qmax)
+    q = q.reshape(*lead, t, c)
+    codes = packing.pack(q.astype(jnp.uint8), bits)
+    # params stored GROUPED: (..., t, c/g) — the true 2*T*C/n overhead.
+    return QuantizedTensor(
+        codes, scale[..., 0].astype(x.dtype), zero[..., 0].astype(x.dtype), None, bits, x.shape
+    )
+
+
+def quantize_raw16(x: jnp.ndarray) -> QuantizedTensor:
+    """Identity 'quantization' — raw bf16 storage wrapped in the same API
+    (fp16 baseline / H2O kept tokens / KIVI recent window)."""
+    return QuantizedTensor(x, None, None, None, 16, x.shape)
+
+
+def channel_norm_scale(x: jnp.ndarray) -> jnp.ndarray:
+    """CSTQuant channel normalizer c_i = sqrt(max|X_i|) (paper Eq. 6)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-2, keepdims=True)
+    return jnp.sqrt(jnp.maximum(amax, _EPS))
+
+
+def quantize_cst(x: jnp.ndarray, bits: int, channel_scale: Optional[jnp.ndarray] = None) -> QuantizedTensor:
+    """Channel-separable tokenwise quantization (paper Alg. 1).
+
+    1. normalize each channel by c_i = sqrt(max|X_i|)
+    2. tokenwise uniform quantization of the normalized tensor
+    3. dequant multiplies c_i back.
+
+    Parameters: C channel scales + 2*T tokenwise (scale, zero) -> the paper's
+    ``hd + 2bl`` accounting (3hd + 2bl for the K-channelwise + V-CST combo).
+    """
+    xf = x.astype(jnp.float32)
+    c = channel_norm_scale(xf) if channel_scale is None else channel_scale.astype(jnp.float32)
+    xn = xf / c
+    scale, zero = _minmax_params(xn, bits, axis=-1)
+    codes = _encode(xn, scale, zero, bits)
+    return QuantizedTensor(
+        codes, scale.astype(x.dtype), zero.astype(x.dtype), c.astype(x.dtype), bits, x.shape
+    )
+
+
+_SCHEMES = {
+    "tokenwise": quantize_tokenwise,
+    "channelwise": quantize_channelwise,
+    "groupwise": quantize_groupwise,
+    "cst": quantize_cst,
+}
+
+
+def quantize(x: jnp.ndarray, bits: int, scheme: str, **kw) -> QuantizedTensor:
+    try:
+        fn = _SCHEMES[scheme]
+    except KeyError:
+        raise ValueError(f"unknown scheme {scheme!r}; one of {sorted(_SCHEMES)}") from None
+    return fn(x, bits, **kw)
+
+
+def fake_quant(x: jnp.ndarray, bits: int, scheme: str, **kw) -> jnp.ndarray:
+    """Quantize+dequantize round trip (for quality evaluation paths)."""
+    return quantize(x, bits, scheme, **kw).dequantize().astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Compression-ratio algebra (paper Appendix A).  Pure arithmetic — these are
+# asserted against the paper's printed numbers in tests/benchmarks.
+# ---------------------------------------------------------------------------
+
+def param_count(scheme: str, b: int, h: int, l: int, d: int, group_size: int = 32) -> int:
+    """Number of fp16 quantization parameters for quantizing K *and* V.
+
+    Mirrors the paper's accounting: b=batch, h=heads, l=tokens, d=head_dim,
+    hd = h*d flattened channels.
+    """
+    hd = h * d
+    if scheme == "groupwise":
+        return 4 * b * hd * l // group_size  # 2 tensors * 2 params * groups
+    if scheme == "tokenwise":
+        return 4 * b * l
+    if scheme == "channelwise_k_tokenwise_v":
+        return 2 * hd + 2 * b * l
+    if scheme == "zipcache_baseline":  # channelwise K + CST V  (paper Table 1 last row)
+        return 3 * hd + 2 * b * l
+    raise ValueError(scheme)
+
+
+def compression_ratio(
+    scheme: str,
+    bits: int,
+    b: int,
+    h: int,
+    l: int,
+    d: int,
+    group_size: int = 32,
+    fp_bits: int = 16,
+) -> float:
+    """KV compression ratio incl. parameter overhead (paper Eq. A-C)."""
+    hd = h * d
+    total_fp = 2 * b * hd * l * fp_bits
+    payload = 2 * b * hd * l * bits
+    overhead = param_count(scheme, b, h, l, d, group_size) * fp_bits
+    return total_fp / (payload + overhead)
+
+
+def mixed_precision_ratio(
+    high_bits: int,
+    low_bits: int,
+    saliency_ratio: float,
+    b: int,
+    h: int,
+    l: int,
+    d: int,
+    fp_bits: int = 16,
+    param_scheme: str = "zipcache_baseline",
+    fp_window: int = 0,
+    evict: bool = False,
+) -> float:
+    """Compression ratio for mixed-precision / windowed / eviction policies.
+
+    Covers the paper's Table 3 / Table A / Table B ratio arithmetic:
+      * ZipCache / MiKV: r% tokens at high_bits, rest at low_bits
+      * KIVI:  fp_window recent tokens at fp16, rest at low_bits
+      * H2O:   r% tokens kept at fp16, rest evicted (0 bits, no params)
+      * GEAR:  high_bits == low_bits uniform
+    """
+    hd = h * d
+    total_fp = 2.0 * b * hd * l * fp_bits
+    l_hi = saliency_ratio * l
+    l_lo = l - l_hi
+    if evict:
+        payload = 2.0 * b * hd * l_hi * fp_bits  # kept tokens stay fp16
+        overhead = 0.0
+    elif fp_window:
+        l_w = min(fp_window, l)
+        payload = 2.0 * b * hd * (l_w * fp_bits + (l - l_w) * low_bits)
+        overhead = param_count(param_scheme, b, h, int(l - l_w), d) * fp_bits
+    else:
+        payload = 2.0 * b * hd * (l_hi * high_bits + l_lo * low_bits)
+        overhead = param_count(param_scheme, b, h, l, d) * fp_bits
+    return total_fp / (payload + overhead)

@@ -1,0 +1,191 @@
+"""Token-saliency metrics and probe-token approximation (paper §4.2, §4.3).
+
+Exact metrics (require the full l×l attention matrix):
+
+  * accumulated attention score  p_i  = Σ_k A[k, i]            (Eq. 7, H2O/MiKV)
+  * normalized attention score   p̃_i = p_i / nnz(A[:, i])      (Eq. 8, ZipCache)
+
+Probe approximation (FlashAttention-compatible, Eq. 9): compute attention rows
+only for a small set of probe queries and substitute A_probe into Eq. 8.
+
+Probe selection strategies (paper Table 2): random / special / recent /
+random+recent (the paper's default: 5% recent + 5% random).
+
+Everything is jit-safe: probe positions are computed with static counts; the
+"random" component is drawn from a counter-based hash (splittable, reproducible
+across hosts — no Python RNG at trace time).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Exact metrics
+# ---------------------------------------------------------------------------
+
+def accumulated_scores(attn: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 7: column sums of the (causal) attention matrix.
+
+    attn: (..., q_len, kv_len) -> (..., kv_len)
+    """
+    return jnp.sum(attn, axis=-2)
+
+
+def causal_nnz(q_len: int, kv_len: int, dtype=jnp.float32) -> jnp.ndarray:
+    """nnz(A[:, i]) for a causal matrix whose queries are the LAST q_len
+    positions of a kv_len-long sequence.
+
+    Column i is attended by queries at absolute positions >= i, of which
+    q_len - max(0, i - (kv_len - q_len)) ... formally:
+      nnz_i = number of q in [kv_len - q_len, kv_len) with q >= i
+            = min(q_len, kv_len - i)
+    """
+    i = jnp.arange(kv_len)
+    return jnp.minimum(q_len, kv_len - i).astype(dtype)
+
+
+def normalized_scores(attn: jnp.ndarray, nnz: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Eq. 8: accumulated scores divided by per-column non-zero counts.
+
+    attn: (..., q_len, kv_len). If ``nnz`` is None it is derived from the
+    causal structure (queries are the last q_len positions).
+    """
+    q_len, kv_len = attn.shape[-2], attn.shape[-1]
+    if nnz is None:
+        nnz = causal_nnz(q_len, kv_len, dtype=attn.dtype)
+    return accumulated_scores(attn) / jnp.maximum(nnz, 1.0)
+
+
+def head_mean(saliency: jnp.ndarray, head_axis: int = -2) -> jnp.ndarray:
+    """Average saliency over heads: the cache policy is per-token (paper
+    quantizes whole tokens), so per-head scores are pooled."""
+    return jnp.mean(saliency, axis=head_axis)
+
+
+# ---------------------------------------------------------------------------
+# Probe selection (paper §4.3, Table 2)
+# ---------------------------------------------------------------------------
+
+class ProbeSpec(NamedTuple):
+    """Static probe layout: absolute query positions used as probes."""
+
+    positions: jnp.ndarray  # (n_probes,) int32, sorted unique query positions
+    n_recent: int
+    n_random: int
+
+
+def _hash_positions(n: int, lo: int, hi: int, seed) -> jnp.ndarray:
+    """n pseudo-random positions in [lo, hi) via threefry — jit-safe, static n."""
+    key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+    return lo + jax.random.randint(key, (n,), 0, jnp.maximum(hi - lo, 1))
+
+
+def select_probes(
+    seq_len: int,
+    strategy: str = "random+recent",
+    probe_ratio: float = 0.10,
+    seed: int = 0,
+    special_positions: Optional[jnp.ndarray] = None,
+) -> ProbeSpec:
+    """Choose probe QUERY rows (static count = ceil(probe_ratio * seq_len)).
+
+    Strategies (paper Table 2): 'all' | 'random' | 'special' | 'recent'
+    | 'random+recent' (default; half recent, half random — the paper's 5%+5%).
+    """
+    n = max(1, int(round(probe_ratio * seq_len)))
+    if strategy == "all":
+        pos = jnp.arange(seq_len, dtype=jnp.int32)
+        return ProbeSpec(pos, 0, 0)
+    if strategy == "recent":
+        pos = jnp.arange(seq_len - n, seq_len, dtype=jnp.int32)
+        return ProbeSpec(pos, n, 0)
+    if strategy == "random":
+        pos = jnp.sort(_hash_positions(n, 0, seq_len, seed).astype(jnp.int32))
+        return ProbeSpec(pos, 0, n)
+    if strategy == "special":
+        if special_positions is None:
+            raise ValueError("'special' strategy needs special_positions")
+        pos = special_positions.astype(jnp.int32)[:n]
+        return ProbeSpec(pos, 0, 0)
+    if strategy == "random+recent":
+        n_recent = n // 2
+        n_random = n - n_recent
+        recent = jnp.arange(seq_len - n_recent, seq_len, dtype=jnp.int32)
+        rand = _hash_positions(n_random, 0, max(seq_len - n_recent, 1), seed).astype(jnp.int32)
+        pos = jnp.sort(jnp.concatenate([rand, recent]))
+        return ProbeSpec(pos, n_recent, n_random)
+    raise ValueError(f"unknown probe strategy {strategy!r}")
+
+
+def probe_normalized_scores(
+    attn_probe: jnp.ndarray,
+    probe_positions: jnp.ndarray,
+    kv_len: int,
+) -> jnp.ndarray:
+    """Eq. 8 evaluated on probe rows only (Eq. 9 substitution).
+
+    attn_probe: (..., n_probes, kv_len) softmax rows for probe queries at
+    absolute positions ``probe_positions`` (each row causal-masked).
+    nnz per column = number of probes at positions >= column index.
+    """
+    pos = probe_positions[:, None]  # (n_probes, 1)
+    col = jnp.arange(kv_len)[None, :]
+    nnz = jnp.sum((pos >= col).astype(attn_probe.dtype), axis=0)  # (kv_len,)
+    acc = jnp.sum(attn_probe, axis=-2)
+    return acc / jnp.maximum(nnz, 1.0)
+
+
+def probe_scores_from_qk(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    probe: ProbeSpec,
+    scale: Optional[float] = None,
+    pool_heads: bool = True,
+) -> jnp.ndarray:
+    """Compute probe-row attention (standard softmax) and the approximated
+    normalized saliency, directly from Q/K (paper Eq. 9 → Eq. 8).
+
+    q: (..., h, q_len, d)  k: (..., h, kv_len, d)
+    Returns saliency (..., kv_len) if pool_heads else (..., h, kv_len).
+
+    This is the REFERENCE path; the fused Pallas kernel
+    (kernels/probe_flash) produces the same quantity as a side output of
+    blocked attention.
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    qp = jnp.take(q, probe.positions, axis=-2)  # (..., h, n_probes, d)
+    logits = jnp.einsum("...pd,...kd->...pk", qp * scale, k).astype(jnp.float32)
+    kv_len = k.shape[-2]
+    col = jnp.arange(kv_len)
+    mask = probe.positions[:, None] >= col[None, :]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    a = jax.nn.softmax(logits, axis=-1)
+    sal = probe_normalized_scores(a, probe.positions, kv_len)
+    if pool_heads:
+        sal = jnp.mean(sal, axis=-2) if sal.ndim >= 2 else sal
+    return sal
+
+
+# ---------------------------------------------------------------------------
+# Salient-token partition
+# ---------------------------------------------------------------------------
+
+def salient_split(saliency: jnp.ndarray, n_salient: int):
+    """Top-k split into (salient_idx, regular_idx), both sorted ascending.
+
+    saliency: (..., l). n_salient is STATIC so the mixed-precision cache has
+    fixed shapes. Returns int32 index tensors (..., n_salient) and
+    (..., l - n_salient).
+    """
+    l = saliency.shape[-1]
+    n_salient = int(n_salient)
+    _, idx = jax.lax.top_k(saliency, l)  # full sort, descending saliency
+    salient = jnp.sort(idx[..., :n_salient], axis=-1)
+    regular = jnp.sort(idx[..., n_salient:], axis=-1)
+    return salient.astype(jnp.int32), regular.astype(jnp.int32)

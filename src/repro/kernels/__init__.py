@@ -1,0 +1,6 @@
+# Pallas TPU kernels for ZipCache's compute hot-spots:
+#   cst_quant     — fused channel-separable tokenwise quantization + bit-pack
+#   probe_flash   — blocked flash attention with probe-score side output (Eq. 9)
+#   decode_qattn  — decode attention reading the PACKED quantized KV cache
+# Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper with
+# interpret fallback on CPU), ref.py (pure-jnp oracle used by the tests).

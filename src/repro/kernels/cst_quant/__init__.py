@@ -1,0 +1,1 @@
+from repro.kernels.cst_quant.ops import cst_quantize  # noqa: F401

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused CSTQuant kernel (paper Alg. 1).
+
+Matches core/quant.quantize_cst but expressed at the kernel's granularity:
+inputs (T, C), outputs packed codes + per-token scale/zero + per-channel c.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing
+
+EPS = 1e-8
+
+
+def cst_quantize_ref(x: jnp.ndarray, bits: int, channel_scale: jnp.ndarray = None):
+    """x: (T, C) float -> (codes_packed (T, C//pf) int8, token_scale (T,1),
+    token_zero (T,1), channel_scale (1, C))."""
+    xf = x.astype(jnp.float32)
+    if channel_scale is None:
+        amax = jnp.max(jnp.abs(xf), axis=0, keepdims=True)
+        c = jnp.sqrt(jnp.maximum(amax, EPS))
+    else:
+        c = channel_scale.astype(jnp.float32)
+    xn = xf / c
+    qmax = 2**bits - 1
+    xmin = jnp.min(xn, axis=1, keepdims=True)
+    xmax = jnp.max(xn, axis=1, keepdims=True)
+    scale = jnp.maximum((xmax - xmin) / qmax, EPS)
+    zero = jnp.round(-xmin / scale)
+    q = jnp.clip(jnp.round(xn / scale + zero), 0, qmax).astype(jnp.uint8)
+    return packing.pack(q, bits), scale, zero, c
+
+
+def cst_dequantize_ref(codes, scale, zero, c, bits: int, out_dtype=jnp.float32):
+    q = packing.unpack(codes, bits, jnp.float32)
+    return ((q - zero) * scale * c).astype(out_dtype)

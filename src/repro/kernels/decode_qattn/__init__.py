@@ -1,0 +1,1 @@
+from repro.kernels.decode_qattn.ops import decode_attend_mixed  # noqa: F401

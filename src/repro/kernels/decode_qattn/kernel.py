@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: one-token decode attention over a PACKED quantized store.
+
+Decode is HBM-bandwidth bound: every generated token reads the whole KV
+cache.  This kernel reads the 2/4-bit PACKED codes (the true stored artifact),
+unpacks + dequantizes in VMEM/VREGs, and runs the q·Kᵀ / p·V matvecs on-chip —
+the cache never exists in bf16 in HBM.  At ZipCache's mixed 4/2 setting the
+dominant roofline term drops ~5x vs a bf16 cache (EXPERIMENTS.md §Perf).
+
+Grid (b, hk, nS): online-softmax accumulation over slot blocks in VMEM
+scratch; emits flash-decoding merge stats (acc, m, l) per (batch, kv-head)
+so the wrapper can combine the hi/lo/window segments exactly.
+
+Dequant schemes match core/quant.py:
+  K: channelwise  — k = (codes - zero_c) * scale_c                (b,hk,1,d)
+  V: CST          — v = (codes - zero_t) * scale_t * c_chan       (Alg. 1)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _unpack(codes, bits, d):
+    """codes (S, d//pf) int8 -> (S, d) f32 via shift/mask (lane-dim packing)."""
+    pf = 8 // bits
+    if pf == 1:
+        return codes.astype(jnp.uint8).astype(jnp.float32)
+    w = codes.astype(jnp.uint8)
+    mask = jnp.uint8(2**bits - 1)
+    shifts = (jnp.arange(pf, dtype=jnp.uint8) * bits).astype(jnp.uint8)
+    fields = (w[..., None] >> shifts) & mask          # (S, d//pf, pf)
+    return fields.reshape(codes.shape[0], d).astype(jnp.float32)
+
+
+def _qattn_kernel(q_ref, kc_ref, ks_ref, kz_ref, vc_ref, vcs_ref, vts_ref,
+                  vtz_ref, pos_ref, acc_out, m_out, l_out,
+                  acc_ref, m_ref, l_ref,
+                  *, scale: float, k_bits: int, v_bits: int, d: int, dv: int,
+                  block_s: int):
+    i_s = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(i_s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (g, d)
+    k = _unpack(kc_ref[0, 0], k_bits, d)                # (bs, d)
+    k = (k - kz_ref[0, 0, 0].astype(jnp.float32)[None, :]) \
+        * ks_ref[0, 0, 0].astype(jnp.float32)[None, :]
+    s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())))  # (g, bs)
+    valid = (pos_ref[0] >= 0)[None, :]                  # (1, bs)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)       # (g, bs)
+
+    v = _unpack(vc_ref[0, 0], v_bits, dv)               # (bs, dv)
+    v = (v - vtz_ref[0, 0].astype(jnp.float32)) * vts_ref[0, 0].astype(jnp.float32)
+    v = v * vcs_ref[0, 0, 0].astype(jnp.float32)[None, :]
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i_s == ns - 1)
+    def _fin():
+        acc_out[0, 0] = acc_ref[...]
+        m_out[0, 0] = m_ref[...][:, 0]
+        l_out[0, 0] = l_ref[...][:, 0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_bits", "v_bits", "block_s", "interpret"))
+def qattn_segment(q, k_codes, k_scale, k_zero, v_codes, v_cscale, v_tscale,
+                  v_tzero, pos, *, k_bits: int, v_bits: int, block_s: int = 512,
+                  interpret: bool = False):
+    """One-token attention over a packed store segment.
+
+    q (b,h,d) | k_codes (b,hk,S,d/pf_k) int8 | k params (b,hk,1,d)
+    v_codes (b,hk,S,dv/pf_v) int8 | v_cscale (b,hk,1,dv) | v_t* (b,hk,S,1)
+    pos (b,S) int32 (<0 = empty slot).
+    Returns flash-decoding stats: acc (b,h,dv) f32, m (b,h), l (b,h).
+    S % block_s == 0 (wrapper pads with pos=-1).
+    """
+    b, h, d = q.shape
+    _, hk, s_len, _ = k_codes.shape
+    dv = v_cscale.shape[-1]
+    g = h // hk
+    scale = 1.0 / (d ** 0.5)
+    q4 = q.reshape(b, hk, g, d)
+    grid = (b, hk, s_len // block_s)
+    kernel = functools.partial(
+        _qattn_kernel, scale=scale, k_bits=k_bits, v_bits=v_bits, d=d, dv=dv,
+        block_s=block_s)
+    pf_k, pf_v = 8 // k_bits, 8 // v_bits
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, d // pf_k), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, dv // pf_v), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, 1, dv), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, 1), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, block_s, 1), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, block_s), lambda b_, h_, i: (b_, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, dv), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda b_, h_, i: (b_, h_, 0)),
+            pl.BlockSpec((1, 1, g), lambda b_, h_, i: (b_, h_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hk, g, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, hk, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hk, g), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, dv), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q4, k_codes, k_scale, k_zero, v_codes, v_cscale, v_tscale, v_tzero, pos)
+    return acc.reshape(b, h, dv), m.reshape(b, h), l.reshape(b, h)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for quantized-cache decode attention.
+
+Dequantizes a packed store segment and runs one-token attention, returning
+flash-decoding merge stats (acc, m, l) so segments combine exactly like the
+kernel does.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+NEG_INF = -1e30
+
+
+def dequant_k_ref(k_codes, k_scale, k_zero, bits):
+    """Channelwise K dequant. codes (b,hk,S,d/pf) -> (b,hk,S,d) f32."""
+    x = packing.unpack(k_codes, bits, jnp.float32)
+    return (x - k_zero.astype(jnp.float32)) * k_scale.astype(jnp.float32)
+
+
+def dequant_v_ref(v_codes, v_cscale, v_tscale, v_tzero, bits):
+    """CST V dequant. codes (b,hk,S,d/pf) -> (b,hk,S,d) f32."""
+    x = packing.unpack(v_codes, bits, jnp.float32)
+    x = (x - v_tzero.astype(jnp.float32)) * v_tscale.astype(jnp.float32)
+    return x * v_cscale.astype(jnp.float32)
+
+
+def segment_attend_ref(
+    q: jnp.ndarray,           # (b, h, d)
+    k: jnp.ndarray,           # (b, hk, S, d) f32 (dequantized)
+    v: jnp.ndarray,           # (b, hk, S, dv)
+    valid: jnp.ndarray,       # (b, S)
+    scale: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Unnormalized single-token attention over one segment.
+
+    Returns (acc (b,h,dv) f32, m (b,h), l (b,h)) flash-decoding stats."""
+    b, h, d = q.shape
+    hk = k.shape[1]
+    g = h // hk
+    qg = q.reshape(b, hk, g, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, k)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgs,bhsv->bhgv", p, v)
+    return (acc.reshape(b, h, -1), m.reshape(b, h), l.reshape(b, h))
+
+
+def merge_segments_ref(stats):
+    """Combine [(acc, m, l), ...] -> normalized out (b, h, dv) f32 + pooled
+    per-segment slot weights are NOT produced here (see ops)."""
+    m = jnp.stack([s[1] for s in stats], 0)
+    m_all = jnp.max(m, axis=0)
+    out = 0.0
+    l_all = 0.0
+    for acc, mi, li in stats:
+        w = jnp.exp(mi - m_all)
+        out = out + acc * w[..., None]
+        l_all = l_all + li * w
+    return out / jnp.maximum(l_all, 1e-30)[..., None]

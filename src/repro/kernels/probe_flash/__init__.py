@@ -1,0 +1,1 @@
+from repro.kernels.probe_flash.ops import probe_flash_attention  # noqa: F401

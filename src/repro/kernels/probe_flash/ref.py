@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for probe-flash attention.
+
+Standard softmax attention + the probe column-sum (Eq. 9 numerator), both
+computed with materialized attention — the thing the kernel must never do.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool = True
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q (b,h,lq,d), k/v (b,hk,lkv,d). Returns (out (b,h,lq,dv), lse (b,h,lq))."""
+    b, h, lq, d = q.shape
+    hk = k.shape[1]
+    g = h // hk
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hk, g, lq, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    if causal:
+        lkv = k.shape[2]
+        mask = jnp.arange(lq)[:, None] + (lkv - lq) >= jnp.arange(lkv)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p / l, v.astype(jnp.float32))
+    lse = (m + jnp.log(l))[..., 0]
+    return (out.reshape(b, h, lq, -1).astype(q.dtype),
+            lse.reshape(b, h, lq))
+
+
+def probe_colsum_ref(
+    q: jnp.ndarray, k: jnp.ndarray, lse: jnp.ndarray,
+    probe_positions: jnp.ndarray, causal: bool = True,
+) -> jnp.ndarray:
+    """Column sums of softmax probs over probe rows, pooled (mean) over heads.
+
+    q (b,h,lq,d), k (b,hk,lkv,d), lse (b,h,lq) from attention_ref.
+    Returns (b, lkv) f32."""
+    b, h, lq, d = q.shape
+    hk = k.shape[1]
+    g = h // hk
+    lkv = k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    qp = jnp.take(q, probe_positions, axis=2)               # (b,h,np,d)
+    lse_p = jnp.take(lse, probe_positions, axis=2)          # (b,h,np)
+    qg = qp.reshape(b, hk, g, -1, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgpd,bhkd->bhgpk", qg, k.astype(jnp.float32))
+    s = s.reshape(b, h, -1, lkv)
+    p = jnp.exp(s - lse_p[..., None])
+    if causal:
+        mask = probe_positions[:, None] + (lkv - lq) >= jnp.arange(lkv)[None, :]
+        p = p * mask[None, None]
+    return jnp.sum(jnp.mean(p, axis=1), axis=1)             # (b, lkv)

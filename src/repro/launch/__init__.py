@@ -1,0 +1,2 @@
+# Launch layer: production mesh, sharding rules, step factories, dry-run,
+# train/serve drivers, roofline analysis.

@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without hardware:
+``jax.jit(step, in_shardings=..., out_shardings=...).lower(**input_specs)
+.compile()`` must succeed on the 16×16 single-pod mesh and the 2×16×16
+multi-pod mesh for every assigned architecture and shape.  The compiled
+artifact yields memory_analysis (fits-per-device proof) and cost_analysis
+(FLOPs/bytes for §Roofline); collective wire bytes are parsed from the
+optimized HLO.
+
+Results are persisted incrementally to results/dryrun/<cell>.json so the
+roofline table and EXPERIMENTS.md are generated from artifacts, not memory.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh single
+  python -m repro.launch.dryrun --all --mesh multi   # the 512-chip pass
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SHAPES, shape_applicable
+from repro.core.policy import CompressionConfig
+from repro.launch import hlo_analysis as hlo
+from repro.launch import hlo_cost
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def input_specs(arch: str, shape: str, mesh, ccfg=None, policy: str = "zipcache",
+                q_block: int = 512, decode_impl: str = "ref",
+                compact_softmax: bool = False):
+    """ShapeDtypeStruct stand-ins + shardings for one cell (no allocation)."""
+    cfg = configs.get_arch(arch)
+    shp = configs.get_shape(shape)
+    ccfg = ccfg or CompressionConfig.preset(policy)
+    if shp.kind == "train":
+        fn = steps_lib.make_train_step(
+            cfg, mesh, grad_accum=steps_lib.pick_grad_accum(cfg, shp, mesh),
+            q_block=q_block, compact_softmax=compact_softmax)
+        args, in_sh, out_sh = steps_lib.train_lowering_inputs(cfg, shp, mesh)
+    elif shp.kind == "prefill":
+        fn, ctx = steps_lib.make_prefill_step(cfg, shp, mesh, ccfg, q_block=q_block)
+        args, in_sh, out_sh = steps_lib.prefill_lowering_inputs(cfg, shp, mesh, ctx)
+    elif shp.kind == "decode":
+        fn, ctx = steps_lib.make_serve_step(cfg, shp, mesh, ccfg, q_block=q_block,
+                                            decode_impl=decode_impl)
+        args, in_sh, out_sh = steps_lib.decode_lowering_inputs(cfg, shp, mesh, ctx)
+    else:
+        raise ValueError(shp.kind)
+    return fn, args, in_sh, out_sh, cfg, shp
+
+
+def model_flops_per_device(cfg, shp, mesh) -> float:
+    """6·N_active·D useful flops, per device."""
+    n_active = cfg.active_param_count()
+    if shp.kind == "train":
+        tokens = shp.global_batch * shp.seq_len
+        mult = 6.0
+    elif shp.kind == "prefill":
+        tokens = shp.global_batch * shp.seq_len
+        mult = 2.0
+    else:  # decode: one token per sequence
+        tokens = shp.global_batch
+        mult = 2.0
+    return mult * n_active * tokens / mesh.size
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, policy: str = "zipcache",
+             q_block: int = 512, tag: str = "", save: bool = True,
+             decode_impl: str = "ref", compact_softmax: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    fn, args, in_sh, out_sh, cfg, shp = input_specs(arch, shape, mesh, policy=policy,
+                                                    q_block=q_block,
+                                                    decode_impl=decode_impl,
+                                                    compact_softmax=compact_softmax)
+    # donate the in-place state exactly as the real loops do: train donates
+    # (params, opt_state); decode donates the caches — memory_analysis then
+    # reflects aliased buffers instead of double-counting them.
+    donate = ()
+    if configs.get_shape(shape).kind == "train":
+        donate = (0, 1)
+    elif configs.get_shape(shape).kind == "decode":
+        donate = (1,)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = hlo.memory_stats(compiled)
+    try:
+        mem["resident_bytes_per_device"] = hlo.sharded_bytes(args, in_sh, mesh)
+    except Exception:
+        mem["resident_bytes_per_device"] = -1.0
+    hlo_text = compiled.as_text()
+    mem["cpu_upcast_f32_twin_bytes"] = hlo.cpu_upcast_correction(hlo_text)
+    mem["total_hbm_bytes_tpu_estimate"] = max(
+        mem["total_hbm_bytes"] - mem["cpu_upcast_f32_twin_bytes"], 0.0)
+    cost = hlo.cost_props(compiled)  # XLA's own numbers (loop bodies x1) kept for reference
+    coll = hlo.collective_summary(hlo_text)
+    # loop-aware analysis: scan/microbatch bodies scaled by trip counts —
+    # the numbers the roofline actually uses.
+    law = hlo_cost.analyze(hlo_text)
+    cost["flops_loop_aware"] = law.flops
+    cost["hbm_bytes_loop_aware"] = law.hbm_bytes
+    coll["wire_bytes_loop_aware"] = law.wire_bytes
+    coll["n_collectives_loop_aware"] = law.n_collectives
+    coll["by_op_loop_aware"] = law.by_collective
+    mf = model_flops_per_device(cfg, shp, mesh)
+    rf = hlo.roofline_terms(law.flops, law.hbm_bytes, law.wire_bytes, mf)
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "policy": policy,
+        "tag": tag, "q_block": q_block,
+        "devices": mesh.size,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem, "cost": cost, "collectives": coll,
+        "roofline": rf.to_dict(),
+        "status": "ok",
+    }
+    if save:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        name = f"{arch}__{shape}__{mesh_kind}" + (f"__{tag}" if tag else "") + ".json"
+        (RESULTS_DIR / name).write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def all_cells(mesh_kind: str):
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_arch(arch)
+        for shape in SHAPES:
+            if shape_applicable(cfg, shape):
+                yield arch, shape, mesh_kind
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--policy", default="zipcache")
+    ap.add_argument("--q-block", type=int, default=512)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--decode-impl", default="ref", choices=["ref", "int8_algebra"])
+    ap.add_argument("--compact-softmax", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    cells = (list(all_cells(args.mesh)) if args.all
+             else [(args.arch, args.shape, args.mesh)])
+    for arch, shape, mesh_kind in cells:
+        name = f"{arch}__{shape}__{mesh_kind}" + (f"__{args.tag}" if args.tag else "")
+        if args.skip_done and (RESULTS_DIR / f"{name}.json").exists():
+            print(f"[skip] {name}")
+            continue
+        print(f"[cell] {name} ...", flush=True)
+        try:
+            rec = run_cell(arch, shape, mesh_kind, args.policy, args.q_block, args.tag,
+                           decode_impl=args.decode_impl,
+                           compact_softmax=args.compact_softmax)
+            r = rec["roofline"]
+            print(f"  ok  compile={rec['compile_s']}s "
+                  f"flops/dev={r['flops']:.3e} hbm={r['hbm_bytes']:.3e} "
+                  f"wire={r['wire_bytes']:.3e} bound={r['bound']} "
+                  f"mem/dev={rec['memory']['total_hbm_bytes']/2**30:.2f}GiB "
+                  f"(tpu-est={rec['memory']['total_hbm_bytes_tpu_estimate']/2**30:.2f}"
+                  f" resident={rec['memory']['resident_bytes_per_device']/2**30:.2f})",
+                  flush=True)
+        except Exception as e:
+            RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+            (RESULTS_DIR / f"{name}.json").write_text(json.dumps(
+                {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                 "status": "error", "error": f"{type(e).__name__}: {e}"}, indent=1))
+            print(f"  FAIL {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,235 @@
+"""Post-compile HLO analysis: collective-traffic accounting + roofline terms.
+
+`compiled.cost_analysis()` gives HLO FLOPs and bytes-accessed but NOT
+collective traffic; we parse the optimized (SPMD, per-device) HLO text and sum
+wire bytes per collective with ring-algorithm multipliers.
+
+Hardware model (TPU v5e, per system prompt):
+  peak 197 TFLOP/s bf16 per chip | 819 GB/s HBM | ~50 GB/s/link ICI
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9\[\],{}]+))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]*)\}")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op: str
+    out_bytes: float
+    group_size: int
+    wire_bytes: float
+
+
+def _wire_multiplier(op: str, k: int, out_bytes: float) -> float:
+    """Per-device wire bytes for ring algorithms, from the PRINTED (per-device
+    output) shape."""
+    op = op.lower()
+    if k <= 1:
+        return 0.0
+    if op.startswith("all-reduce"):
+        return 2.0 * out_bytes * (k - 1) / k
+    if op.startswith("all-gather"):
+        return out_bytes * (k - 1) / k
+    if op.startswith("reduce-scatter"):
+        return out_bytes * (k - 1)          # input = k * output
+    if op.startswith("all-to-all"):
+        return out_bytes * (k - 1) / k
+    if op.startswith("collective-permute"):
+        return out_bytes
+    return out_bytes
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveStats]:
+    stats: List[CollectiveStats] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # paired with -start; count once
+        shape_str, op = m.group(1), m.group(2)
+        out_bytes = _shape_bytes(shape_str)
+        k = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            members = [t for t in g.group(1).replace(" ", "").split(",") if t]
+            k = max(len(members), 1)
+        else:
+            g2 = _GROUPS_ITOTA_RE.search(line)
+            if g2:
+                k = int(g2.group(2))
+        stats.append(CollectiveStats(op, out_bytes, k, _wire_multiplier(op, k, out_bytes)))
+    return stats
+
+
+def collective_summary(hlo_text: str) -> Dict[str, float]:
+    stats = parse_collectives(hlo_text)
+    by_op: Dict[str, float] = {}
+    for s in stats:
+        by_op[s.op] = by_op.get(s.op, 0.0) + s.wire_bytes
+    return {
+        "n_collectives": len(stats),
+        "wire_bytes_total": sum(s.wire_bytes for s in stats),
+        "out_bytes_total": sum(s.out_bytes for s in stats),
+        "by_op": by_op,
+    }
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for ONE step of the compiled per-device program."""
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    wire_bytes: float            # per-device collective wire bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str
+    model_flops: float           # 6*N*D useful flops per device
+    useful_ratio: float          # model_flops / hlo_flops
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(
+    flops: float, hbm_bytes: float, wire_bytes: float,
+    model_flops_per_device: float = 0.0, ici_links: int = 1,
+) -> Roofline:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = wire_bytes / (ICI_BW * max(ici_links, 1))
+    bound = max(
+        (("compute", compute_s), ("memory", memory_s), ("collective", collective_s)),
+        key=lambda kv: kv[1])[0]
+    useful = model_flops_per_device / flops if flops else 0.0
+    return Roofline(flops, hbm_bytes, wire_bytes, compute_s, memory_s,
+                    collective_s, bound, model_flops_per_device, useful)
+
+
+def cost_props(compiled) -> Dict[str, float]:
+    """Normalize compiled.cost_analysis() across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", ca.get("bytes_accessed", 0.0))),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    """XLA memory analysis.
+
+    CAVEAT (documented in EXPERIMENTS.md §Dry-run): this container compiles
+    for the XLA:CPU backend, which upcasts every bf16 dot operand to f32 —
+    hoisting full-size f32 copies of bf16 weights/activations that do NOT
+    exist on the TPU backend (the MXU consumes bf16 natively).  `temp` is
+    therefore an over-estimate; exact steady-state residency is computed from
+    shardings separately (see steps.resident_bytes)."""
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        out[k] = float(getattr(ma, k, 0) or 0)
+    out["total_hbm_bytes"] = (
+        out["argument_size_in_bytes"] + out["output_size_in_bytes"]
+        + out["temp_size_in_bytes"] - out.get("alias_size_in_bytes", 0.0))
+    return out
+
+
+def cpu_upcast_correction(hlo_text: str) -> float:
+    """Estimated bytes of XLA:CPU-only f32 upcast copies of bf16 tensors.
+
+    The CPU backend converts bf16 dot operands to f32 and hoists the converts,
+    materializing f32 twins of bf16 buffers (weights, saved scan residuals)
+    that do not exist on TPU.  Estimate: for every DISTINCT shape that appears
+    both as a bf16 tensor and as an `f32[...] convert`, count the f32 twin
+    once.  Conservative (undercounts multiplicity); reported alongside the raw
+    number, never silently applied."""
+    bf16_shapes = set(re.findall(r"bf16\[([0-9,]+)\]", hlo_text))
+    total = 0.0
+    in_fused = False
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("%fused_") or s.startswith("fused_"):
+            in_fused = True
+        elif s.startswith("%") and s.endswith("{") and "fused" not in s.split(" ")[0]:
+            in_fused = False
+        elif s.startswith("ENTRY") or (s.endswith("{") and not s.startswith("%")):
+            in_fused = False
+        if in_fused:
+            continue  # fusion-internal converts don't materialize buffers
+        m = re.search(r"=\s*f32\[([0-9,]+)\]\{[^}]*\}\s+convert\(", line)
+        if not m:
+            continue
+        dims = m.group(1)
+        if dims in bf16_shapes:
+            n = 4.0
+            for d in dims.split(","):
+                n *= int(d)
+            if n >= 2**24:  # only count MiB-scale twins
+                total += n
+    return total
+
+
+def sharded_bytes(tree_of_abstract, shardings, mesh) -> float:
+    """Exact per-device bytes of a sharded pytree (ceil per sharded dim —
+    matches GSPMD padding)."""
+    import math
+
+    import jax as _jax
+
+    total = 0.0
+    leaves_a = _jax.tree_util.tree_leaves(tree_of_abstract)
+    leaves_s = _jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "spec"))
+    for a, s in zip(leaves_a, leaves_s):
+        dims = list(a.shape)
+        spec = getattr(s, "spec", None)
+        if spec is not None:
+            for i, part in enumerate(spec):
+                if part is None or i >= len(dims):
+                    continue
+                axes = part if isinstance(part, tuple) else (part,)
+                k = math.prod(mesh.shape[ax] for ax in axes)
+                dims[i] = -(-dims[i] // k)
+        total += math.prod(dims) * (a.dtype.itemsize if hasattr(a.dtype, "itemsize") else 2)
+    return total

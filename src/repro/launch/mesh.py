@@ -1,0 +1,32 @@
+"""Production mesh construction (system-prompt contract).
+
+Functions only — importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (elastic re-scale / tests)."""
+    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=_auto(len(axes)))
+
+
+def data_axes_of(mesh) -> tuple:
+    """Mesh axes that carry pure data parallelism (pod extends data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_of(mesh) -> str:
+    return "model"

@@ -1,0 +1,255 @@
+"""Logical-axis sharding rules (MaxText-style) + cache/batch spec derivation.
+
+Params carry logical axis names (models/common.ParamDef.axes); `RULES` maps
+them to mesh axes.  Activations are sharded only at jit boundaries (batch over
+the data axes); GSPMD propagates the interior.
+
+GSPMD pads non-divisible dims (yi-34b's 56 heads on a 16-way model axis,
+smollm's 15) — the padding waste is visible in the roofline table and is one
+of the hillclimb levers (§Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import common as mcommon
+
+
+# logical axis -> mesh axis (None = replicated). "embed" -> data is the
+# FSDP/ZeRO axis: weights and optimizer state shard over data, gathered
+# on use, reduce-scattered on grad.
+DEFAULT_RULES = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "expert_in": None,
+    "moe_mlp": None,
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "embed": "data",
+    "embed_out": None,
+    "latent": None,
+    "rope_dim": None,
+    "head_dim": None,
+    "v_dim": None,
+    "ssm_state_in": None,
+    "conv": None,
+    "layers": None,
+    "stage": None,
+}
+
+
+# Serving overrides (beyond-paper §Perf lever): FSDP (embed->data) weight
+# sharding makes every decode step re-gather the un-TP-shardable attention
+# matrices (yi-34b: 11.6 GB/token of all-gather for wo alone).  Serving has
+# no optimizer state, so weights drop the data axis and non-divisible-head
+# attention matrices shard over head_dim instead (the contraction adds one
+# tiny (b, e) all-reduce per layer).
+SERVE_OVERRIDES = {
+    "embed": None,
+    "head_dim": "model",
+    "v_dim": "model",
+}
+
+# Prefill amortizes weight gathers over the whole sequence, so FSDP stays —
+# and extends to the expert weights (jamba's 45B of experts at /16 model-only
+# = 5.6 GiB/device; with data-FSDP /256 = 0.35 GiB, one 350 MB all-gather per
+# MoE layer per prefill, negligible against 1M tokens of compute).
+PREFILL_OVERRIDES = {
+    "expert_in": "data",
+}
+
+
+def rules_for_mesh(mesh: Mesh, overrides: Optional[dict] = None) -> dict:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    # drop rules that reference axes the mesh doesn't have
+    names = set(mesh.axis_names)
+    return {k: (v if (v is None or (v in names if isinstance(v, str) else set(v) <= names)) else None)
+            for k, v in rules.items()}
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    return int(np.prod([mesh.shape[a] for a in axis]))
+
+
+def spec_from_axes(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                   rules: dict, mesh: Mesh) -> P:
+    """Logical axes -> PartitionSpec. pjit argument shardings must divide
+    evenly, so non-divisible dims fall back to replication here; the
+    corresponding ACTIVATIONS still get TP via with_sharding_constraint
+    (which tolerates GSPMD padding) — see blocks.RunCtx.shard_heads."""
+    used = set()
+    parts = []
+    for ax, dim in zip(axes, shape):
+        m = rules.get(ax) if ax is not None else None
+        if m is not None and (m in used or dim % _axis_size(mesh, m) != 0):
+            m = None
+        if m is not None:
+            used.add(m)
+        parts.append(m)
+    return P(*parts)
+
+
+def param_pspecs(cfg: ArchConfig, mesh: Mesh, overrides: Optional[dict] = None):
+    from repro.models import registry
+    from repro.models.common import is_def
+
+    rules = rules_for_mesh(mesh, overrides)
+    schema = registry.schema(cfg)
+    return jax.tree_util.tree_map(
+        lambda d: spec_from_axes(d.axes, d.shape, rules, mesh), schema, is_leaf=is_def)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, overrides: Optional[dict] = None):
+    specs = param_pspecs(cfg, mesh, overrides)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero1_pspecs(cfg: ArchConfig, mesh: Mesh, overrides: Optional[dict] = None):
+    """ZeRO-1 specs for optimizer state: the param spec plus 'data' sharding
+    on the first dim that is still replicated and divides evenly.  Expert
+    weights (model-sharded only, to keep the shard_map boundary clean) get
+    their fp32 master/m/v sheared down by the full data extent this way."""
+    from repro.models import registry
+    from repro.models.common import is_def
+
+    rules = rules_for_mesh(mesh, overrides)
+    schema = registry.schema(cfg)
+    dsize = mesh.shape.get("data", 1)
+
+    msize = mesh.shape.get("model", 1)
+
+    def one(d):
+        spec = spec_from_axes(d.axes, d.shape, rules, mesh)
+        parts = list(spec) + [None] * (len(d.shape) - len(spec))
+        for axis, size in (("data", dsize), ("model", msize)):
+            if axis in parts or size <= 1:
+                continue
+            for i, (dim, pt) in enumerate(zip(d.shape, parts)):
+                if pt is None and dim % size == 0 and dim >= size:
+                    parts[i] = axis
+                    break
+        return P(*parts)
+
+    return jax.tree_util.tree_map(one, schema, is_leaf=is_def)
+
+
+def zero1_shardings(cfg: ArchConfig, mesh: Mesh, overrides: Optional[dict] = None):
+    specs = zero1_pspecs(cfg, mesh, overrides)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    from repro.launch.mesh import data_axes_of
+    return P(data_axes_of(mesh))
+
+
+def batch_shardings(spec_tree, mesh: Mesh, min_batch_divisor: bool = True):
+    """Shard dim 0 (batch) over data axes; replicate if batch < #data shards."""
+    from repro.launch.mesh import data_axes_of
+
+    daxes = data_axes_of(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in daxes]))
+
+    def one(s):
+        b = s.shape[0] if s.shape else 0
+        if b and b % dp == 0:
+            return NamedSharding(mesh, P(daxes, *([None] * (len(s.shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(s.shape))))
+
+    return jax.tree_util.tree_map(one, spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# Cache sharding: size-matching heuristics over the cache pytree
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cache_tree, cfg: ArchConfig, mesh: Mesh, global_batch: int,
+                 stacked: bool = False):
+    """PartitionSpecs for a cache pytree (one layer element, or layer-stacked
+    with ``stacked=True`` — the leading stack axis is always replicated).
+
+    Rule per leaf: shard the batch-sized axis over data axes (if divisible);
+    shard a kv-head / ssm-head / d_inner-sized axis over model (GSPMD pads
+    when not divisible; allowed up to 2x padding).  Everything else
+    replicated — notably the slot axis, which the split-KV hillclimb
+    optimization re-shards (see EXPERIMENTS.md §Perf).
+    """
+    from repro.launch.mesh import data_axes_of
+    from repro.models import ssm as ssm_mod
+
+    daxes = data_axes_of(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in daxes]))
+    mp = mesh.shape.get("model", 1)
+    kvh = max(cfg.n_kv_heads, 0)
+    has_ssm = cfg.ssm or bool(cfg.attn_layer_period)
+    ssmh = ssm_mod.n_ssm_heads(cfg) if has_ssm else -1
+    dinner = ssm_mod.d_inner(cfg) if has_ssm else -1
+
+    def one(s):
+        shape = s.shape[1:] if stacked else s.shape
+        parts: list = [None] * len(shape)
+        batch_done = model_done = False
+        for i, n in enumerate(shape):
+            if not batch_done and n == global_batch and global_batch % dp == 0:
+                parts[i] = daxes
+                batch_done = True
+                continue
+            if (batch_done and not model_done and mp > 1 and n % mp == 0
+                    and n in (kvh, ssmh, dinner)):
+                # head-sharded stores (SSM states, divisible kv heads)
+                parts[i] = "model"
+                model_done = True
+                continue
+            if (batch_done and not model_done and mp > 1 and n % mp == 0
+                    and n >= 128 and (i < len(shape) - 1 or len(shape) == 2)):
+                # SLOT sharding: split the token-slot axis of the quantized
+                # stores over `model` — the TPU analogue of FlashDecoding's
+                # split-KV.  Decode attention reduces over slots; GSPMD emits
+                # small per-layer all-reduces for softmax stats + output.
+                # Required for the big decode cells to fit 16 GB/chip.
+                parts[i] = "model"
+                model_done = True
+        if stacked:
+            parts = [None] + parts
+        return P(*parts)
+
+    return jax.tree_util.tree_map(one, jax.eval_shape(lambda t: t, cache_tree))
+
+
+def full_cache_pspecs(caches, cfg: ArchConfig, mesh: Mesh, global_batch: int):
+    """Specs for the registry cache structure ({'prefix': [...], 'groups': stacked}
+    for LMs, or a fully layer-stacked pytree for enc-dec)."""
+    if isinstance(caches, dict) and "groups" in caches:
+        prefix = [cache_pspecs(el, cfg, mesh, global_batch) for el in caches["prefix"]]
+        groups = cache_pspecs(caches["groups"], cfg, mesh, global_batch, stacked=True)
+        return {"prefix": prefix, "groups": groups}
+    return cache_pspecs(caches, cfg, mesh, global_batch, stacked=True)
+
+
+def cache_shardings(caches, cfg: ArchConfig, mesh: Mesh, global_batch: int):
+    specs = full_cache_pspecs(caches, cfg, mesh, global_batch)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,211 @@
+"""Step factories: the jit-able programs that the launchers, dry-run and
+roofline all share.  Each factory returns (fn, in_shardings, out_shardings,
+abstract_inputs) so `.lower(*abstract_inputs)` is one call away.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import saliency as sal
+from repro.core.policy import CompressionConfig
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shd
+from repro.models import blocks, registry
+from repro.optim import adamw
+
+
+def _run_ctx(cfg: ArchConfig, mesh, ccfg=None, probe=None, max_cache_len=0,
+             q_block=512, decode_impl="ref", compact_softmax=False) -> blocks.RunCtx:
+    data_axes = mesh_lib.data_axes_of(mesh) if mesh is not None else ("data",)
+    return blocks.RunCtx(mesh=mesh, data_axes=data_axes, ccfg=ccfg, probe=probe,
+                         max_cache_len=max_cache_len, q_block=q_block,
+                         decode_impl=decode_impl, compact_softmax=compact_softmax)
+
+
+def pick_grad_accum(cfg: ArchConfig, shape: ShapeConfig, mesh) -> int:
+    """Microbatch count targeting ~1 sequence per device per microbatch for
+    wide models (activation-carry residency dominates at 4k seq), ~2 for
+    small ones."""
+    dp = int(np.prod([mesh.shape[a] for a in mesh_lib.data_axes_of(mesh)])) if mesh else 1
+    per_dev = max(shape.global_batch // max(dp, 1), 1)
+    target = 1 if cfg.d_model >= 2048 else 2
+    accum = max(per_dev // target, 1)
+    while shape.global_batch % (accum) or (shape.global_batch // accum) % max(dp, 1):
+        accum -= 1
+    return max(accum, 1)
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def make_train_step(
+    cfg: ArchConfig,
+    mesh,
+    opt_cfg: Optional[adamw.AdamWConfig] = None,
+    grad_accum: int = 1,
+    q_block: int = 512,
+    compact_softmax: bool = False,
+):
+    """Returns (train_step, donate_argnums-ready signature).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    Gradient accumulation over `grad_accum` microbatches.  Accumulators are
+    constrained to the ZeRO-1 specs (data-sharded) — ZeRO-2 semantics: each
+    microbatch's gradient is reduce-SCATTERED over data instead of
+    all-reduced, and the fp32 accumulator never exists model-axis-replicated
+    (for MoE archs the expert-grad accumulator would otherwise be GBs/device).
+    """
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    ctx = _run_ctx(cfg, mesh, q_block=q_block, compact_softmax=compact_softmax)
+    grad_specs = None
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        grad_specs = shd.zero1_shardings(cfg, mesh)
+
+    def constrain(tree):
+        if grad_specs is None:
+            return tree
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, grad_specs)
+
+    def loss_of(params, mb):
+        loss, met = registry.loss_fn(params, mb, cfg, ctx)
+        return loss, met
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, met), grads = jax.value_and_grad(loss_of, has_aux=True)(params, batch)
+            grads = constrain(grads)
+        else:
+            def split(x):
+                return x.reshape(grad_accum, x.shape[0] // grad_accum, *x.shape[1:])
+            mbs = jax.tree_util.tree_map(split, batch)
+            zero = constrain(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+            def mb_step(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, met), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                # constrain the INCOMING grad: XLA reduce-scatters the
+                # per-microbatch partials over data (ZeRO-2) instead of
+                # all-gathering the accumulator.
+                g = constrain(g)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + loss), met
+
+            (grads, loss), met = jax.lax.scan(mb_step, (zero, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            met = jax.tree_util.tree_map(lambda m: jnp.mean(m, 0), met)
+        params, opt_state, opt_met = adamw.adamw_update(opt_cfg, grads, opt_state)
+        metrics = {"loss": loss, **met, **opt_met}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_lowering_inputs(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """Abstract (params, opt_state, batch) + shardings for .lower()."""
+    aparams = registry.abstract_params(cfg)
+    aopt = adamw.adamw_init_abstract(aparams)
+    abatch = registry.train_batch_spec(cfg, shape)
+
+    p_shard = shd.param_shardings(cfg, mesh)
+    z_shard = shd.zero1_shardings(cfg, mesh)  # ZeRO-1: opt state data-sharded
+    o_shard = adamw.AdamWState(z_shard, z_shard, z_shard, shd.replicated(mesh))
+    b_shard = shd.batch_shardings(abatch, mesh)
+    in_shardings = (p_shard, o_shard, b_shard)
+    out_shardings = (p_shard, o_shard, None)
+    return (aparams, aopt, abatch), in_shardings, out_shardings
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+def serve_ctx(cfg: ArchConfig, shape: ShapeConfig, mesh,
+              ccfg: Optional[CompressionConfig] = None,
+              decode_budget: int = 512, q_block: int = 512,
+              decode_impl: str = "ref"):
+    """RunCtx + probe for a serving shape. max cache = seq_len + decode budget."""
+    ccfg = ccfg or CompressionConfig.zipcache()
+    qlen, src = registry.prefill_lengths(cfg, shape)
+    probe = sal.select_probes(qlen, ccfg.probe_strategy, ccfg.probe_ratio, ccfg.seed) \
+        if ccfg.uses_saliency and ccfg.probe_strategy not in ("none", "exact") else None
+    if ccfg.needs_full_attention:
+        probe = sal.select_probes(qlen, "all", 1.0)
+    max_cache_len = (shape.seq_len if not cfg.encdec else qlen) + decode_budget
+    return _run_ctx(cfg, mesh, ccfg=ccfg, probe=probe,
+                    max_cache_len=max_cache_len, q_block=q_block,
+                    decode_impl=decode_impl)
+
+
+def make_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                      ccfg: Optional[CompressionConfig] = None, q_block: int = 512):
+    ctx = serve_ctx(cfg, shape, mesh, ccfg, q_block=q_block)
+
+    def prefill_step(params, batch):
+        logits, caches = registry.prefill(params, batch, cfg, ctx)
+        return logits, caches
+
+    return prefill_step, ctx
+
+
+def make_serve_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                    ccfg: Optional[CompressionConfig] = None, q_block: int = 512,
+                    decode_impl: str = "ref"):
+    """decode: serve_step(params, caches, token, is_probe) -> (logits, caches)."""
+    ctx = serve_ctx(cfg, shape, mesh, ccfg, q_block=q_block, decode_impl=decode_impl)
+
+    def serve_step(params, caches, token, is_probe):
+        logits, caches = registry.decode_step(params, token, caches, cfg, ctx, is_probe)
+        return logits, caches
+
+    return serve_step, ctx
+
+
+def make_recompress_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                         ccfg: Optional[CompressionConfig] = None):
+    ctx = serve_ctx(cfg, shape, mesh, ccfg)
+
+    def recompress_step(caches):
+        return registry.recompress(caches, cfg, ctx)
+
+    return recompress_step, ctx
+
+
+def decode_lowering_inputs(cfg: ArchConfig, shape: ShapeConfig, mesh, ctx):
+    """Abstract (params, caches, token, is_probe) + shardings."""
+    aparams = registry.abstract_params(cfg)
+    b = shape.global_batch
+    l_src = shape.seq_len if cfg.encdec else 0
+    acaches = jax.eval_shape(
+        lambda: registry.init_caches(cfg, ctx, b, l_src=l_src))
+    atoken = registry.decode_token_spec(cfg, shape)
+    aprobe = jax.ShapeDtypeStruct((), jnp.bool_)
+
+    p_shard = shd.param_shardings(cfg, mesh, overrides=shd.SERVE_OVERRIDES)
+    c_shard = shd.cache_shardings(acaches, cfg, mesh, b)
+    t_shard = shd.batch_shardings(atoken, mesh)
+    r_shard = shd.replicated(mesh)
+    in_sh = (p_shard, c_shard, t_shard, r_shard)
+    out_sh = (None, c_shard)
+    return (aparams, acaches, atoken, aprobe), in_sh, out_sh
+
+
+def prefill_lowering_inputs(cfg: ArchConfig, shape: ShapeConfig, mesh, ctx):
+    aparams = registry.abstract_params(cfg)
+    abatch = registry.prefill_batch_spec(cfg, shape)
+    p_shard = shd.param_shardings(cfg, mesh, overrides=shd.PREFILL_OVERRIDES)
+    b_shard = shd.batch_shardings(abatch, mesh)
+    return (aparams, abatch), (p_shard, b_shard), None

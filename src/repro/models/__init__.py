@@ -1,0 +1,2 @@
+# Model zoo: unified decoder stack (GQA / MLA / SSD mixers, dense / MoE FFNs),
+# encoder-decoder wrapper, schema-first parameter system (dry-run friendly).

@@ -1,0 +1,360 @@
+"""Attention mixers: GQA (+QKV bias) and MLA (DeepSeek-V2), ZipCache-aware.
+
+Three execution modes:
+  * train / prefill: BLOCKED causal attention (flash-style scan over q-blocks,
+    online per-row softmax completed within a block since each block sees the
+    full KV) with an optional PROBE side-output — the per-column sum of
+    post-softmax probabilities over probe rows (paper Eq. 9), pooled over
+    heads.  This is the pure-JAX mirror of kernels/probe_flash; on TPU the
+    Pallas kernel replaces it 1:1.
+  * decode: one-token attention against a MixedKVCache (core/kvcache.py) —
+    reference path dequantizes; the Pallas decode_qattn kernel consumes packed
+    stores directly.
+
+Shapes: activations (b, l, e); heads layout (b, h, l, d).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import saliency as sal
+from repro.models import common
+from repro.models.common import ParamDef
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter schemas
+# ---------------------------------------------------------------------------
+
+def gqa_schema(cfg: ArchConfig) -> dict:
+    e, h, hk, d = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = {
+        "wq": ParamDef((e, h, d), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((e, hk, d), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((e, hk, d), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((h, d, e), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamDef((h, d), ("heads", "head_dim"), init="zeros")
+        s["bk"] = ParamDef((hk, d), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = ParamDef((hk, d), ("kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+def mla_schema(cfg: ArchConfig) -> dict:
+    e, h = cfg.d_model, cfg.n_heads
+    r, p, nd, vd = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.nope_head_dim, cfg.v_head_dim
+    return {
+        "w_dkv": ParamDef((e, r), ("embed", "latent")),        # down-proj to latent
+        "w_kpe": ParamDef((e, p), ("embed", "rope_dim")),      # shared rope key
+        "w_q_nope": ParamDef((e, h, nd), ("embed", "heads", "head_dim")),
+        "w_q_pe": ParamDef((e, h, p), ("embed", "heads", "rope_dim")),
+        "w_uk": ParamDef((r, h, nd), ("latent", "heads", "head_dim")),  # up-proj keys
+        "w_uv": ParamDef((r, h, vd), ("latent", "heads", "v_dim")),     # up-proj values
+        "wo": ParamDef((h, vd, e), ("heads", "v_dim", "embed")),
+        "kv_norm": ParamDef((r,), ("latent",), init="ones"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blocked causal attention with probe side-output (pure JAX flash mirror)
+# ---------------------------------------------------------------------------
+
+class AttnAux(NamedTuple):
+    k: jnp.ndarray                      # (b, h_kv, l, d) post-rotary keys
+    v: jnp.ndarray                      # (b, h_kv, l, d)
+    saliency: Optional[jnp.ndarray]     # (b, l) normalized probe saliency
+    probe_nnz: Optional[jnp.ndarray]    # (b, l) Eq. 8 denominators
+
+
+def _probe_row_mask(probe: Optional[sal.ProbeSpec], lq: int) -> Optional[jnp.ndarray]:
+    if probe is None:
+        return None
+    return jnp.zeros((lq,), jnp.float32).at[probe.positions].set(1.0)
+
+
+def blocked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_block: int = 512,
+    probe: Optional[sal.ProbeSpec] = None,
+    use_kernel: bool = False,
+    compact: bool = False,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """q: (b,h,lq,d) k/v: (b,h_kv,lkv,d). Returns (out, probe_colsum|None).
+
+    probe_colsum: (b, lkv) = Σ_{probe rows} softmax probs, pooled (mean) over
+    q heads — the numerator of Eq. 8 under the Eq. 9 approximation.
+    Scan over q-blocks; every block sees full KV so row softmax closes within
+    the block.  Each block body is rematerialized (jax.checkpoint) so AD does
+    not store per-block logits.
+
+    compact=True materializes the per-block logits/probs in bf16 (softmax
+    statistics still reduce in fp32 inside fusions) — halves the dominant
+    HBM traffic of the reference path (§Perf lever; probabilities in [0,1]
+    lose <1e-2 at bf16).
+    """
+    if use_kernel:
+        from repro.kernels.probe_flash import ops as pf_ops
+        return pf_ops.probe_flash_attention(q, k, v, causal=causal, probe=probe, q_block=q_block)
+
+    b, h, lq, d = q.shape
+    hk = k.shape[1]
+    g = h // hk
+    lkv = k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    nb = -(-lq // q_block)
+    pad = nb * q_block - lq
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else q
+    qp = qp.reshape(b, hk, g, nb, q_block, d).transpose(3, 0, 1, 2, 4, 5)  # (nb,b,hk,g,qb,d)
+    probe_rows = _probe_row_mask(probe, lq)
+    if probe_rows is not None and pad:
+        probe_rows = jnp.pad(probe_rows, (0, pad))
+
+    mat_dtype = jnp.bfloat16 if compact else jnp.float32
+    kf = k.astype(mat_dtype)
+    vf = v.astype(jnp.float32 if not compact else jnp.bfloat16)
+    col = jnp.arange(lkv)
+
+    def block(carry, inp):
+        colsum = carry
+        qb, idx = inp
+        row = idx * q_block + jnp.arange(q_block)
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk",
+                            (qb.astype(jnp.float32) * scale).astype(mat_dtype), kf,
+                            preferred_element_type=mat_dtype)
+        if causal:
+            mask = row[:, None] >= col[None, :]
+            logits = jnp.where(mask[None, None, None], logits,
+                               jnp.asarray(NEG_INF, mat_dtype))
+        if compact:
+            m = jnp.max(logits.astype(jnp.float32), axis=-1, keepdims=True)
+            probs = jnp.exp(logits.astype(jnp.float32) - m).astype(jnp.bfloat16)
+            denom = jnp.sum(probs.astype(jnp.float32), axis=-1, keepdims=True)
+            out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf,
+                             preferred_element_type=jnp.float32) / denom
+            probs_f = probs.astype(jnp.float32) / denom
+        else:
+            probs = jax.nn.softmax(logits, axis=-1)
+            out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+            probs_f = probs
+        if probe_rows is not None:
+            pr = jax.lax.dynamic_slice_in_dim(probe_rows, idx * q_block, q_block)
+            colsum = colsum + jnp.einsum("bhgqk,q->bk", probs_f, pr) / (h)
+        return colsum, out.astype(q.dtype)
+
+    init = jnp.zeros((b, lkv), jnp.float32) if probe_rows is not None else jnp.zeros((b, 0), jnp.float32)
+    colsum, outs = jax.lax.scan(
+        jax.checkpoint(block), init, (qp, jnp.arange(nb)))
+    dv = outs.shape[-1]  # v head dim (may differ from q's, e.g. MLA)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, h, nb * q_block, dv)[:, :, :lq]
+    return out, (colsum if probe_rows is not None else None)
+
+
+def probe_saliency_from_colsum(
+    colsum: jnp.ndarray, probe: sal.ProbeSpec, lkv: int, causal: bool = True
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Normalize probe column sums into Eq. 8 saliency + its denominators.
+
+    Non-causal (encoder / cross-attention): every probe row sees every column,
+    so nnz is the constant probe count (the triangular bias the paper fixes
+    only exists under causal masking)."""
+    if causal:
+        col = jnp.arange(lkv)
+        nnz = jnp.sum((probe.positions[:, None] >= col[None, :]).astype(jnp.float32), axis=0)
+    else:
+        nnz = jnp.full((lkv,), probe.positions.shape[0], jnp.float32)
+    return colsum / jnp.maximum(nnz, 1.0), jnp.broadcast_to(nnz, colsum.shape)
+
+
+# ---------------------------------------------------------------------------
+# GQA forward paths
+# ---------------------------------------------------------------------------
+
+def gqa_project_qkv(params: dict, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray):
+    """x: (b,l,e) -> q (b,h,l,d), k/v (b,hk,l,d), rotary applied."""
+    q = jnp.einsum("ble,ehd->bhld", x, params["wq"])
+    k = jnp.einsum("ble,ehd->bhld", x, params["wk"])
+    v = jnp.einsum("ble,ehd->bhld", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"][None, :, None, :]
+        k = k + params["bk"][None, :, None, :]
+        v = v + params["bv"][None, :, None, :]
+    cos, sin = common.rotary_cos_sin(positions, cfg.hd, cfg.rope_theta, jnp.float32)
+    # positions: (l,) -> cos (l, d/2); broadcast over batch/head
+    q = common.apply_rotary(q, cos[None, None], sin[None, None])
+    k = common.apply_rotary(k, cos[None, None], sin[None, None])
+    return q, k, v
+
+
+def gqa_forward(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    *,
+    causal: bool = True,
+    probe: Optional[sal.ProbeSpec] = None,
+    kv_x: Optional[jnp.ndarray] = None,
+    q_block: int = 512,
+    use_kernel: bool = False,
+    ctx=None,
+    compact: bool = False,
+) -> Tuple[jnp.ndarray, AttnAux]:
+    """Full-sequence GQA (train / prefill / encoder / cross-attention).
+
+    kv_x: separate KV source (cross-attention). probe: enables the ZipCache
+    saliency side-output. ctx: RunCtx for activation sharding constraints.
+    """
+    b, l, e = x.shape
+    src = x if kv_x is None else kv_x
+    lkv = src.shape[1]
+    pos_q = jnp.arange(l)
+    pos_kv = jnp.arange(lkv)
+    q = jnp.einsum("ble,ehd->bhld", x, params["wq"])
+    k = jnp.einsum("ble,ehd->bhld", src, params["wk"])
+    v = jnp.einsum("ble,ehd->bhld", src, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"][None, :, None, :]
+        k = k + params["bk"][None, :, None, :]
+        v = v + params["bv"][None, :, None, :]
+    if ctx is not None:
+        q = ctx.shard_heads(q)
+        k = ctx.shard_heads(k)
+        v = ctx.shard_heads(v)
+    if causal or kv_x is None:  # rotary only for self-attention
+        cos_q, sin_q = common.rotary_cos_sin(pos_q, cfg.hd, cfg.rope_theta)
+        cos_k, sin_k = common.rotary_cos_sin(pos_kv, cfg.hd, cfg.rope_theta)
+        q = common.apply_rotary(q, cos_q[None, None], sin_q[None, None])
+        k = common.apply_rotary(k, cos_k[None, None], sin_k[None, None])
+    out, colsum = blocked_attention(
+        q, k, v, causal=causal, q_block=q_block, probe=probe, use_kernel=use_kernel,
+        compact=compact)
+    if ctx is not None:
+        out = ctx.shard_heads(out)
+    y = jnp.einsum("bhld,hde->ble", out, params["wo"])
+    saliency = nnz = None
+    if probe is not None and colsum is not None:
+        saliency, nnz = probe_saliency_from_colsum(colsum, probe, lkv, causal=causal)
+    return y, AttnAux(k=k, v=v, saliency=saliency, probe_nnz=nnz)
+
+
+def gqa_decode_qkv(params: dict, x_t: jnp.ndarray, cfg: ArchConfig, position: jnp.ndarray):
+    """x_t: (b, e), position: (b,) -> q_t (b,h,d), k_t/v_t (b,hk,d)."""
+    q = jnp.einsum("be,ehd->bhd", x_t, params["wq"])
+    k = jnp.einsum("be,ehd->bhd", x_t, params["wk"])
+    v = jnp.einsum("be,ehd->bhd", x_t, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    cos, sin = common.rotary_cos_sin(position, cfg.hd, cfg.rope_theta)  # (b, d/2)
+    q = common.apply_rotary(q, cos[:, None], sin[:, None])
+    k = common.apply_rotary(k, cos[:, None], sin[:, None])
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — materialized for prefill/train, absorbed for decode
+# ---------------------------------------------------------------------------
+
+def mla_forward(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    *,
+    probe: Optional[sal.ProbeSpec] = None,
+    q_block: int = 512,
+    use_kernel: bool = False,
+    ctx=None,
+    compact: bool = False,
+) -> Tuple[jnp.ndarray, AttnAux]:
+    """Full-sequence MLA. Returns latent cache streams in AttnAux:
+    aux.k = rope-key (b,1,l,p), aux.v = latent (b,1,l,r)."""
+    b, l, e = x.shape
+    h, r, p = cfg.n_heads, cfg.kv_lora_rank, cfg.rope_head_dim
+    nd, vd = cfg.nope_head_dim, cfg.v_head_dim
+    pos = jnp.arange(l)
+    cos, sin = common.rotary_cos_sin(pos, p, cfg.rope_theta)
+
+    latent = common.rms_norm(jnp.einsum("ble,er->blr", x, params["w_dkv"]), params["kv_norm"], cfg.norm_eps)
+    k_pe = jnp.einsum("ble,ep->blp", x, params["w_kpe"])
+    k_pe = common.apply_rotary(k_pe, cos, sin)
+
+    q_nope = jnp.einsum("ble,ehd->bhld", x, params["w_q_nope"])
+    q_pe = jnp.einsum("ble,ehp->bhlp", x, params["w_q_pe"])
+    q_pe = common.apply_rotary(q_pe, cos[None, None], sin[None, None])
+
+    k_nope = jnp.einsum("blr,rhd->bhld", latent, params["w_uk"])
+    val = jnp.einsum("blr,rhv->bhlv", latent, params["w_uv"])
+    if ctx is not None:
+        q_nope = ctx.shard_heads(q_nope)
+        k_nope = ctx.shard_heads(k_nope)
+        val = ctx.shard_heads(val)
+
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)        # (b,h,l,nd+p)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[:, None], (b, h, l, p))], axis=-1)
+    # softmax scale = 1/sqrt(nd+p) (deepseek convention) — blocked_attention
+    # derives it from q's last dim, which is exactly nd+p here; v's head dim
+    # (vd) is independent and handled by the output einsum.
+    out, colsum = blocked_attention(
+        q_full, k_full, val, causal=True, q_block=q_block, probe=probe,
+        use_kernel=use_kernel, compact=compact)
+    y = jnp.einsum("bhlv,hve->ble", out, params["wo"])
+    saliency = nnz = None
+    if probe is not None and colsum is not None:
+        saliency, nnz = probe_saliency_from_colsum(colsum, probe, l)
+    return y, AttnAux(k=k_pe[:, None], v=latent[:, None], saliency=saliency, probe_nnz=nnz)
+
+
+def mla_decode(
+    params: dict,
+    x_t: jnp.ndarray,
+    cache,
+    cfg: ArchConfig,
+    position: jnp.ndarray,
+    impl: str = "ref",
+):
+    """Absorbed-matmul MLA decode (one token) against the latent cache.
+
+    cache stores k = rope-key (b,1,S,p), v = latent (b,1,S,r).
+    impl="int8_algebra" folds the CST/channelwise dequant into the attention
+    algebra (kvcache.attend_decode_mla_int8) — no fp32 dequant chains.
+    Returns (y_t (b,e), k_pe_t (b,1,p), latent_t (b,1,r), slot_weights (b,S)).
+    """
+    from repro.core import kvcache as kvc
+
+    h, r, p, nd = cfg.n_heads, cfg.kv_lora_rank, cfg.rope_head_dim, cfg.nope_head_dim
+    cos, sin = common.rotary_cos_sin(position, p, cfg.rope_theta)  # (b, p/2)
+
+    latent_t = common.rms_norm(jnp.einsum("be,er->br", x_t, params["w_dkv"]), params["kv_norm"], cfg.norm_eps)
+    k_pe_t = common.apply_rotary(jnp.einsum("be,ep->bp", x_t, params["w_kpe"]), cos, sin)
+    q_nope = jnp.einsum("be,ehd->bhd", x_t, params["w_q_nope"])
+    q_pe = common.apply_rotary(jnp.einsum("be,ehp->bhp", x_t, params["w_q_pe"]), cos[:, None], sin[:, None])
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope, params["w_uk"])   # absorb W_uk
+    scale = 1.0 / ((nd + p) ** 0.5)
+
+    if impl == "int8_algebra":
+        out_latent, slot_w = kvc.attend_decode_mla_int8(q_abs, q_pe, cache, scale)
+    else:
+        k_pe_all, latent_all, valid, _ = kvc.cache_keys_values(cache)
+        k_pe_all = k_pe_all[:, 0]      # (b,S,p)
+        latent_all = latent_all[:, 0]  # (b,S,r)
+        logits = (
+            jnp.einsum("bhr,bsr->bhs", q_abs.astype(jnp.float32), latent_all.astype(jnp.float32))
+            + jnp.einsum("bhp,bsp->bhs", q_pe.astype(jnp.float32), k_pe_all.astype(jnp.float32))
+        ) * scale
+        logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        out_latent = jnp.einsum("bhs,bsr->bhr", w, latent_all.astype(jnp.float32))
+        slot_w = jnp.mean(w, axis=1)
+    out = jnp.einsum("bhr,rhv->bhv", out_latent.astype(x_t.dtype), params["w_uv"])
+    y = jnp.einsum("bhv,hve->be", out, params["wo"])
+    return y, k_pe_t[:, None], latent_t[:, None], slot_w

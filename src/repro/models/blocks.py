@@ -1,0 +1,227 @@
+"""Decoder blocks: (mixer, ffn) assembly, scan groups, and the three
+execution modes (train/full-seq, prefill, decode).
+
+A "scan group" is the repeating layer pattern (1 layer for homogeneous archs,
+8 for Jamba's [7×mamba : 1×attn] interleave).  Group parameters are stacked
+along a leading axis and scanned; non-periodic prefix layers (DeepSeek's first
+dense layer) are unrolled separately.
+
+Per-layer cache element (collected/consumed by lm.py):
+  * attn layer  -> MixedKVCache (core/kvcache.py)
+  * mla layer   -> MixedKVCache holding (rope-key, latent) streams
+  * ssm layer   -> SSMState
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import kvcache as kvc
+from repro.core import saliency as sal
+from repro.core.policy import CompressionConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+from repro.models import common
+from repro.models.common import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+
+def layer_schema(cfg: ArchConfig, mixer: str, ffn: str) -> dict:
+    e = cfg.d_model
+    s: Dict[str, Any] = {"ln1": ParamDef((e,), ("embed",), init="ones")}
+    if mixer == "attn":
+        s["attn"] = attn.gqa_schema(cfg)
+    elif mixer == "mla":
+        s["attn"] = attn.mla_schema(cfg)
+    elif mixer == "ssm":
+        s["ssm"] = ssm_mod.ssm_schema(cfg)
+    else:
+        raise ValueError(mixer)
+    if ffn == "dense":
+        s["ln2"] = ParamDef((e,), ("embed",), init="ones")
+        s["mlp"] = mlp_mod.dense_mlp_schema(cfg)
+    elif ffn == "moe":
+        s["ln2"] = ParamDef((e,), ("embed",), init="ones")
+        s["moe"] = mlp_mod.moe_schema(cfg)
+    elif ffn != "none":
+        raise ValueError(ffn)
+    return s
+
+
+def group_schema(cfg: ArchConfig) -> dict:
+    return {f"sub{j}": layer_schema(cfg, m, f) for j, (m, f) in enumerate(cfg.layer_kinds())}
+
+
+# ---------------------------------------------------------------------------
+# Execution context
+# ---------------------------------------------------------------------------
+
+class RunCtx:
+    """Static per-call context: mesh (or None), compression policy, probes."""
+
+    def __init__(self, mesh=None, data_axes=("data",), ccfg: Optional[CompressionConfig] = None,
+                 probe: Optional[sal.ProbeSpec] = None, max_cache_len: int = 0,
+                 q_block: int = 512, use_kernels: bool = False,
+                 decode_impl: str = "ref", compact_softmax: bool = False):
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+        self.ccfg = ccfg
+        self.probe = probe
+        self.max_cache_len = max_cache_len
+        self.q_block = q_block
+        self.use_kernels = use_kernels
+        self.decode_impl = decode_impl
+        self.compact_softmax = compact_softmax
+
+    def shard(self, x, parts):
+        if self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, P(*parts)))
+
+    def shard_heads(self, x):
+        """(b, h, l, d) activation TP constraint. Unlike pjit argument
+        shardings, this tolerates non-divisible head counts (GSPMD pads) —
+        how yi-34b's 56 heads stay model-parallel on a 16-way axis."""
+        return self.shard(x, (self.data_axes, "model", None, None))
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+def apply_layer_full(
+    params: dict, x: jnp.ndarray, cfg: ArchConfig, mixer: str, ffn: str, ctx: RunCtx,
+    build_cache: bool,
+) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+    """One layer, full sequence. Returns (x, cache_element|None, aux_loss)."""
+    aux_loss = jnp.zeros((), jnp.float32)
+    h = common.rms_norm(x, params["ln1"], cfg.norm_eps)
+    cache_el = None
+    if mixer in ("attn", "mla"):
+        fwd = attn.gqa_forward if mixer == "attn" else attn.mla_forward
+        y, aux = fwd(params["attn"], h, cfg, probe=ctx.probe,
+                     q_block=ctx.q_block, use_kernel=ctx.use_kernels, ctx=ctx,
+                     compact=ctx.compact_softmax)
+        if build_cache:
+            cache_el = kvc.compress_prefill(
+                ctx.ccfg, aux.k, aux.v, aux.saliency, ctx.max_cache_len,
+                probe_nnz=aux.probe_nnz, dtype=x.dtype)
+    else:
+        y, state = ssm_mod.ssm_forward(params["ssm"], h, cfg)
+        if build_cache:
+            cache_el = state
+    x = x + y
+    if ffn == "dense":
+        h2 = common.rms_norm(x, params["ln2"], cfg.norm_eps)
+        x = x + mlp_mod.dense_mlp(params["mlp"], h2)
+    elif ffn == "moe":
+        h2 = common.rms_norm(x, params["ln2"], cfg.norm_eps)
+        out = mlp_mod.moe_ffn(params["moe"], h2, cfg, mesh=ctx.mesh, data_axes=ctx.data_axes)
+        x = x + out.y
+        aux_loss = aux_loss + out.aux_loss
+    return x, cache_el, aux_loss
+
+
+def apply_group_full(params: dict, x, cfg: ArchConfig, ctx: RunCtx, build_cache: bool):
+    caches: Dict[str, Any] = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for j, (mixer, ffn) in enumerate(cfg.layer_kinds()):
+        x, cache_el, aux = apply_layer_full(
+            params[f"sub{j}"], x, cfg, mixer, ffn, ctx, build_cache)
+        aux_total = aux_total + aux
+        if build_cache and cache_el is not None:
+            caches[f"sub{j}"] = cache_el
+    return x, caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token)
+# ---------------------------------------------------------------------------
+
+def apply_layer_decode(
+    params: dict, x_t: jnp.ndarray, cfg: ArchConfig, mixer: str, ffn: str,
+    cache_el: Any, ctx: RunCtx, is_probe: jnp.ndarray,
+) -> Tuple[jnp.ndarray, Any]:
+    h = common.rms_norm(x_t, params["ln1"], cfg.norm_eps)
+    if mixer == "attn":
+        position = cache_el.length  # (b,)
+        q_t, k_t, v_t = attn.gqa_decode_qkv(params["attn"], h, cfg, position)
+        cache_el = kvc.append_token(cache_el, k_t, v_t)
+        dec = kvc.attend_decode(q_t, cache_el, impl=ctx.decode_impl, ctx=ctx)
+        cache_el = kvc.update_probe_state(cache_el, dec.slot_weights, is_probe)
+        y = jnp.einsum("bhd,hde->be", dec.out, params["attn"]["wo"])
+    elif mixer == "mla":
+        position = cache_el.length
+        # order: append latent first so the current token attends to itself
+        lat_t = common.rms_norm(
+            jnp.einsum("be,er->br", h, params["attn"]["w_dkv"]), params["attn"]["kv_norm"], cfg.norm_eps)
+        cos, sin = common.rotary_cos_sin(position, cfg.rope_head_dim, cfg.rope_theta)
+        kpe_t = common.apply_rotary(
+            jnp.einsum("be,ep->bp", h, params["attn"]["w_kpe"]), cos, sin)
+        cache_el = kvc.append_token(cache_el, kpe_t[:, None], lat_t[:, None])
+        y, _, _, slot_w = attn.mla_decode(params["attn"], h, cache_el, cfg, position,
+                                          impl=ctx.decode_impl)
+        cache_el = kvc.update_probe_state(cache_el, slot_w, is_probe)
+    else:
+        y, cache_el = ssm_mod.ssm_decode(params["ssm"], h, cfg, cache_el)
+    x_t = x_t + y
+    if ffn == "dense":
+        h2 = common.rms_norm(x_t, params["ln2"], cfg.norm_eps)
+        x_t = x_t + mlp_mod.dense_mlp(params["mlp"], h2)
+    elif ffn == "moe":
+        h2 = common.rms_norm(x_t, params["ln2"], cfg.norm_eps)
+        out = mlp_mod.moe_ffn(params["moe"], h2[:, None, :], cfg,
+                              mesh=ctx.mesh, data_axes=ctx.data_axes)
+        x_t = x_t + out.y[:, 0]
+    return x_t, cache_el
+
+
+def apply_group_decode(params: dict, x_t, cfg: ArchConfig, caches: Dict[str, Any],
+                       ctx: RunCtx, is_probe: jnp.ndarray):
+    new_caches: Dict[str, Any] = {}
+    for j, (mixer, ffn) in enumerate(cfg.layer_kinds()):
+        key = f"sub{j}"
+        x_t, el = apply_layer_decode(
+            params[key], x_t, cfg, mixer, ffn, caches[key], ctx, is_probe)
+        new_caches[key] = el
+    return x_t, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache schema helpers (abstract caches for dry-run)
+# ---------------------------------------------------------------------------
+
+def group_cache_struct(cfg: ArchConfig, ctx: RunCtx, b: int, dtype=jnp.bfloat16):
+    """Build a concrete (zero) cache element for one scan group."""
+    caches: Dict[str, Any] = {}
+    for j, (mixer, ffn) in enumerate(cfg.layer_kinds()):
+        if mixer == "attn":
+            caches[f"sub{j}"] = kvc.init_cache(
+                ctx.ccfg, b, cfg.n_kv_heads, cfg.hd, ctx.max_cache_len, dtype)
+        elif mixer == "mla":
+            # streams: k = rope-key (b,1,S,p), v = latent (b,1,S,r)
+            caches[f"sub{j}"] = init_mla_cache(cfg, ctx, b, dtype)
+        else:
+            caches[f"sub{j}"] = ssm_mod.init_state(cfg, b, dtype)
+    return caches
+
+
+def init_mla_cache(cfg: ArchConfig, ctx: RunCtx, b: int, dtype=jnp.bfloat16):
+    """MLA latent cache: k stream = rope-key (dim p), v stream = latent (rank r).
+
+    ZipCache adaptation (DESIGN.md §Arch-applicability): CSTQuant on the
+    latent (value-like), channelwise on the rope-key — the policy's
+    key/value schemes map onto the two streams directly.
+    """
+    return kvc.init_cache(
+        ctx.ccfg, b, 1, cfg.rope_head_dim, ctx.max_cache_len, dtype,
+        d_v=cfg.kv_lora_rank)

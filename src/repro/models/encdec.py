@@ -1,0 +1,201 @@
+"""Encoder-decoder backbone (seamless-m4t): 12L encoder + 12L decoder with
+cross-attention.  The audio frontend is a stub — inputs are precomputed frame
+embeddings (b, l_src, e).
+
+ZipCache applies to BOTH decoder caches:
+  * self-attention cache — standard streaming ZipCache (Alg. 2/3)
+  * cross-attention cache — the encoder memory is static after encode, so it
+    is compressed ONCE using probe saliency measured from decoder-prefill
+    cross-attention rows (non-causal nnz; see attention.probe_saliency_from_colsum).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import kvcache as kvc
+from repro.core import saliency as sal
+from repro.models import attention as attn
+from repro.models import blocks, common
+from repro.models import mlp as mlp_mod
+from repro.models.common import ParamDef
+
+
+def enc_layer_schema(cfg: ArchConfig) -> dict:
+    e = cfg.d_model
+    return {
+        "ln1": ParamDef((e,), ("embed",), init="ones"),
+        "attn": attn.gqa_schema(cfg),
+        "ln2": ParamDef((e,), ("embed",), init="ones"),
+        "mlp": mlp_mod.dense_mlp_schema(cfg),
+    }
+
+
+def dec_layer_schema(cfg: ArchConfig) -> dict:
+    e = cfg.d_model
+    return {
+        "ln1": ParamDef((e,), ("embed",), init="ones"),
+        "self_attn": attn.gqa_schema(cfg),
+        "ln_x": ParamDef((e,), ("embed",), init="ones"),
+        "cross_attn": attn.gqa_schema(cfg),
+        "ln2": ParamDef((e,), ("embed",), init="ones"),
+        "mlp": mlp_mod.dense_mlp_schema(cfg),
+    }
+
+
+def encdec_schema(cfg: ArchConfig) -> dict:
+    from repro.models.lm import padded_vocab
+
+    e = cfg.d_model
+    v = padded_vocab(cfg)
+    return {
+        "embed": ParamDef((v, e), ("vocab", "embed"), init="embed"),
+        "audio_proj": ParamDef((e, e), ("embed", "embed_out")),
+        "enc_layers": common.stack_schema(enc_layer_schema(cfg), cfg.n_enc_layers),
+        "enc_norm": ParamDef((e,), ("embed",), init="ones"),
+        "dec_layers": common.stack_schema(dec_layer_schema(cfg), cfg.n_layers),
+        "final_norm": ParamDef((e,), ("embed",), init="ones"),
+        "lm_head": ParamDef((e, v), ("embed", "vocab")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+def encode(params: dict, src_embeds: jnp.ndarray, cfg: ArchConfig,
+           ctx: Optional[blocks.RunCtx] = None, remat: bool = True) -> jnp.ndarray:
+    ctx = ctx or blocks.RunCtx()
+    x = jnp.einsum("ble,ef->blf", src_embeds, params["audio_proj"])
+    # keep the residual stream batch-sharded: the FSDP (embed->data) weight
+    # contraction otherwise makes SPMD replicate activations over batch and
+    # every downstream layer inherits it (measured 176 GB/step of all-reduce
+    # — EXPERIMENTS.md §Perf cell C).
+    if ctx.mesh is not None:
+        x = ctx.shard(x, (ctx.data_axes, None, None))
+
+    def layer(x, p):
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, _ = attn.gqa_forward(p["attn"], h, cfg, causal=False, q_block=ctx.q_block)
+        x = x + y
+        h2 = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + mlp_mod.dense_mlp(p["mlp"], h2), None
+
+    body = jax.checkpoint(layer, policy=jax.checkpoint_policies.nothing_saveable) if remat else layer
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return common.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder full-sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+class DecLayerCaches(NamedTuple):
+    self_cache: Any
+    cross_cache: Any
+
+
+def _dec_layer_full(p: dict, x, enc_out, cfg: ArchConfig, ctx: blocks.RunCtx,
+                    build_cache: bool, cross_probe: Optional[sal.ProbeSpec]):
+    h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, aux_self = attn.gqa_forward(p["self_attn"], h, cfg, causal=True,
+                                   probe=ctx.probe, q_block=ctx.q_block,
+                                   use_kernel=ctx.use_kernels)
+    x = x + y
+    hx = common.rms_norm(x, p["ln_x"], cfg.norm_eps)
+    yx, aux_cross = attn.gqa_forward(p["cross_attn"], hx, cfg, causal=False,
+                                     kv_x=enc_out, probe=cross_probe, q_block=ctx.q_block)
+    x = x + yx
+    h2 = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + mlp_mod.dense_mlp(p["mlp"], h2)
+    caches = None
+    if build_cache:
+        self_cache = kvc.compress_prefill(
+            ctx.ccfg, aux_self.k, aux_self.v, aux_self.saliency,
+            ctx.max_cache_len, probe_nnz=aux_self.probe_nnz, dtype=x.dtype)
+        cross_cache = kvc.compress_prefill(
+            ctx.ccfg, aux_cross.k, aux_cross.v, aux_cross.saliency,
+            enc_out.shape[1], probe_nnz=aux_cross.probe_nnz, dtype=x.dtype)
+        caches = DecLayerCaches(self_cache, cross_cache)
+    return x, caches
+
+
+def forward(params: dict, src_embeds: jnp.ndarray, tokens: jnp.ndarray,
+            cfg: ArchConfig, ctx: Optional[blocks.RunCtx] = None,
+            build_cache: bool = False, remat: bool = True):
+    """Teacher-forced seq2seq forward. Returns (logits, caches|None)."""
+    ctx = ctx or blocks.RunCtx()
+    enc_out = encode(params, src_embeds, cfg, ctx, remat=remat)
+    x = common.embed_lookup(params["embed"], tokens, ctx=ctx)
+    cross_probe = None
+    if build_cache and ctx.probe is not None:
+        cross_probe = ctx.probe
+
+    def layer(x, p):
+        x, caches = _dec_layer_full(p, x, enc_out, cfg, ctx, build_cache, cross_probe)
+        return x, caches
+
+    body = layer if build_cache or not remat else jax.checkpoint(
+        layer, policy=jax.checkpoint_policies.nothing_saveable)
+    x, caches = jax.lax.scan(body, x, params["dec_layers"])
+    if build_cache:
+        x = x[:, -1:]  # prefill: only the last position's logits are needed
+    from repro.models.lm import mask_padded_vocab
+    logits = jnp.einsum("ble,ev->blv", common.rms_norm(x, params["final_norm"], cfg.norm_eps),
+                        params["lm_head"])
+    return mask_padded_vocab(logits, cfg.vocab), caches
+
+
+def loss_fn(params: dict, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
+            ctx: Optional[blocks.RunCtx] = None):
+    logits, _ = forward(params, batch["frontend_embeds"], batch["tokens"], cfg, ctx)
+    ce = common.cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params: dict, token: jnp.ndarray, caches: Any, cfg: ArchConfig,
+                ctx: blocks.RunCtx, is_probe: jnp.ndarray):
+    """One decoder token. caches = scanned DecLayerCaches pytree."""
+    x_t = common.embed_lookup(params["embed"], token, ctx=ctx)
+
+    def layer(x_t, scanned):
+        p, (self_cache, cross_cache) = scanned
+        h = common.rms_norm(x_t, p["ln1"], cfg.norm_eps)
+        position = self_cache.length
+        q_t, k_t, v_t = attn.gqa_decode_qkv(p["self_attn"], h, cfg, position)
+        self_cache = kvc.append_token(self_cache, k_t, v_t)
+        dec = kvc.attend_decode(q_t, self_cache)
+        self_cache = kvc.update_probe_state(self_cache, dec.slot_weights, is_probe)
+        x_t = x_t + jnp.einsum("bhd,hde->be", dec.out, p["self_attn"]["wo"])
+
+        hx = common.rms_norm(x_t, p["ln_x"], cfg.norm_eps)
+        qx = jnp.einsum("be,ehd->bhd", hx, p["cross_attn"]["wq"])
+        decx = kvc.attend_decode(qx, cross_cache)
+        cross_cache = kvc.update_probe_state(cross_cache, decx.slot_weights, is_probe)
+        x_t = x_t + jnp.einsum("bhd,hde->be", decx.out, p["cross_attn"]["wo"])
+
+        h2 = common.rms_norm(x_t, p["ln2"], cfg.norm_eps)
+        x_t = x_t + mlp_mod.dense_mlp(p["mlp"], h2)
+        return x_t, DecLayerCaches(self_cache, cross_cache)
+
+    x_t, new_caches = jax.lax.scan(layer, x_t, (params["dec_layers"], caches))
+    from repro.models.lm import mask_padded_vocab
+    logits = jnp.einsum("be,ev->bv", common.rms_norm(x_t, params["final_norm"], cfg.norm_eps),
+                        params["lm_head"])
+    return mask_padded_vocab(logits, cfg.vocab), new_caches
+
+
+def init_caches(cfg: ArchConfig, ctx: blocks.RunCtx, b: int, l_src: int, dtype=jnp.bfloat16):
+    self_cache = kvc.init_cache(ctx.ccfg, b, cfg.n_kv_heads, cfg.hd, ctx.max_cache_len, dtype)
+    cross_cache = kvc.init_cache(ctx.ccfg, b, cfg.n_kv_heads, cfg.hd, l_src, dtype)
+    one = DecLayerCaches(self_cache, cross_cache)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers, *x.shape)), one)

@@ -1,0 +1,245 @@
+"""Decoder-only LM (and the shared trunk for the VLM/audio variants).
+
+Schema-first: `lm_schema(cfg)` declares every parameter; `forward` /
+`prefill` / `decode_step` consume materialized or abstract params identically
+(dry-run lowers with ShapeDtypeStructs, smoke tests with real arrays).
+
+Layer stack = optional prefix layers (unrolled) + scanned groups.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import saliency as sal
+from repro.core.policy import CompressionConfig
+from repro.models import blocks, common
+from repro.models.common import ParamDef
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    """Vocab rounded up to a 256 multiple so the vocab axis shards evenly
+    (seamless's 256206 -> 256256); unembed slices back to the true vocab."""
+    return -(-cfg.vocab // 256) * 256
+
+
+def lm_schema(cfg: ArchConfig) -> dict:
+    e = cfg.d_model
+    v = padded_vocab(cfg)
+    s: Dict[str, Any] = {
+        "embed": ParamDef((v, e), ("vocab", "embed"), init="embed"),
+        "final_norm": ParamDef((e,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamDef((e, v), ("embed", "vocab"))
+    if cfg.first_dense_layers:
+        kinds = [("mla" if cfg.mla else "attn", "dense")] * cfg.first_dense_layers
+        s["prefix"] = {
+            f"layer{i}": blocks.layer_schema(cfg, m, f) for i, (m, f) in enumerate(kinds)
+        }
+    s["groups"] = common.stack_schema(blocks.group_schema(cfg), cfg.n_scan_groups)
+    if cfg.frontend == "vision":
+        s["vision_proj"] = ParamDef((e, e), ("embed", "embed_out"))
+    elif cfg.frontend == "audio":
+        s["audio_proj"] = ParamDef((e, e), ("embed", "embed_out"))
+    return s
+
+
+def _prefix_kinds(cfg: ArchConfig):
+    return [("mla" if cfg.mla else "attn", "dense")] * cfg.first_dense_layers
+
+
+def embed_inputs(params: dict, cfg: ArchConfig, tokens: jnp.ndarray,
+                 frontend_embeds: Optional[jnp.ndarray] = None, ctx=None) -> jnp.ndarray:
+    """tokens (b, l_text) [+ frontend embeds (b, l_front, e)] -> (b, l, e)."""
+    x = common.embed_lookup(params["embed"], tokens, ctx=ctx)
+    if frontend_embeds is not None:
+        proj = params.get("vision_proj", params.get("audio_proj"))
+        fe = jnp.einsum("ble,ef->blf", frontend_embeds.astype(x.dtype), proj)
+        if ctx is not None and ctx.mesh is not None:
+            fe = ctx.shard(fe, (ctx.data_axes, None, None))  # see encdec.encode
+        x = jnp.concatenate([fe, x], axis=1)
+    return x
+
+
+def mask_padded_vocab(logits: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    """Neutralize vocab-padding columns with -inf instead of slicing: slicing
+    a model-sharded vocab axis to a non-divisible length forces GSPMD to
+    replicate the full fp32 logits (measured 176 GB/step of all-reduce on
+    seamless train — EXPERIMENTS.md §Perf); an elementwise mask preserves
+    the sharding."""
+    if logits.shape[-1] == vocab:
+        return logits
+    pad_mask = jnp.arange(logits.shape[-1]) >= vocab
+    return jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+
+
+def unembed(params: dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...e,ve->...v", x, params["embed"])
+    else:
+        logits = jnp.einsum("...e,ev->...v", x, params["lm_head"])
+    return mask_padded_vocab(logits, cfg.vocab)
+
+
+class ForwardOut(NamedTuple):
+    logits: jnp.ndarray
+    aux_loss: jnp.ndarray
+    caches: Any            # None in pure-train mode
+
+
+def forward(
+    params: dict,
+    tokens: jnp.ndarray,
+    cfg: ArchConfig,
+    ctx: Optional[blocks.RunCtx] = None,
+    frontend_embeds: Optional[jnp.ndarray] = None,
+    build_cache: bool = False,
+    remat: bool = True,
+    last_only: bool = False,
+) -> ForwardOut:
+    """Full-sequence forward (train loss path or serving prefill).
+
+    build_cache=True compresses each attention layer's KV per the policy in
+    ctx.ccfg (ZipCache Alg. 2) and returns the stacked caches.
+    last_only=True unembeds only the final position (prefill: avoids
+    materializing the (b, l, vocab) logits — at 32k x 150k vocab that tensor
+    is tens of GiB).
+    """
+    ctx = ctx or blocks.RunCtx()
+    x = embed_inputs(params, cfg, tokens, frontend_embeds, ctx=ctx)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    prefix_caches = []
+    for i, (m, f) in enumerate(_prefix_kinds(cfg)):
+        x, cache_el, aux = blocks.apply_layer_full(
+            params["prefix"][f"layer{i}"], x, cfg, m, f, ctx, build_cache)
+        aux_total += aux
+        prefix_caches.append(cache_el)
+
+    def group_fn(carry, gparams):
+        x, aux_acc = carry
+        x, caches, aux = blocks.apply_group_full(gparams, x, cfg, ctx, build_cache)
+        return (x, aux_acc + aux), caches
+
+    body = group_fn
+    if remat:
+        body = jax.checkpoint(group_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux_total), group_caches = jax.lax.scan(body, (x, aux_total), params["groups"])
+
+    logits = unembed(params, cfg, x[:, -1:] if last_only else x)
+    caches = None
+    if build_cache:
+        caches = {"prefix": prefix_caches, "groups": group_caches}
+    return ForwardOut(logits, aux_total, caches)
+
+
+def loss_fn(
+    params: dict,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ArchConfig,
+    ctx: Optional[blocks.RunCtx] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token CE (+ MoE aux). batch: tokens (b,l), labels (b,l), [mask]."""
+    out = forward(params, batch["tokens"], cfg, ctx,
+                  frontend_embeds=batch.get("frontend_embeds"))
+    lf = out.logits[:, -batch["labels"].shape[1]:]  # frontend tokens carry no labels
+    ce = common.cross_entropy_loss(lf, batch["labels"], batch.get("mask"))
+    loss = ce + out.aux_loss
+    return loss, {"ce": ce, "aux": out.aux_loss}
+
+
+class PrefillOut(NamedTuple):
+    logits_last: jnp.ndarray   # (b, vocab) logits at the final position
+    caches: Any
+    aux_loss: jnp.ndarray
+
+
+def prefill(
+    params: dict,
+    tokens: jnp.ndarray,
+    cfg: ArchConfig,
+    ctx: blocks.RunCtx,
+    frontend_embeds: Optional[jnp.ndarray] = None,
+) -> PrefillOut:
+    """Serving prefill: forward + per-layer ZipCache compression (Alg. 2)."""
+    out = forward(params, tokens, cfg, ctx, frontend_embeds=frontend_embeds,
+                  build_cache=True, remat=False, last_only=True)
+    return PrefillOut(out.logits[:, -1], out.caches, out.aux_loss)
+
+
+class DecodeOut(NamedTuple):
+    logits: jnp.ndarray        # (b, vocab)
+    caches: Any
+
+
+def decode_step(
+    params: dict,
+    token: jnp.ndarray,        # (b,) current input token ids
+    caches: Any,
+    cfg: ArchConfig,
+    ctx: blocks.RunCtx,
+    is_probe: jnp.ndarray,     # () bool — Alg. 3 probe-row flag for this step
+) -> DecodeOut:
+    """One decode step against the quantized caches (paper Alg. 3)."""
+    x_t = common.embed_lookup(params["embed"], token, ctx=ctx)  # (b, e)
+
+    new_prefix = []
+    for i, (m, f) in enumerate(_prefix_kinds(cfg)):
+        x_t, el = blocks.apply_layer_decode(
+            params["prefix"][f"layer{i}"], x_t, cfg, m, f, caches["prefix"][i], ctx, is_probe)
+        new_prefix.append(el)
+
+    def group_fn(x_t, scanned):
+        gparams, gcaches = scanned
+        x_t, new_caches = blocks.apply_group_decode(gparams, x_t, cfg, gcaches, ctx, is_probe)
+        return x_t, new_caches
+
+    x_t, new_group_caches = jax.lax.scan(
+        group_fn, x_t, (params["groups"], caches["groups"]))
+
+    logits = unembed(params, cfg, x_t)
+    return DecodeOut(logits, {"prefix": new_prefix, "groups": new_group_caches})
+
+
+def recompress_caches(caches: Any, cfg: ArchConfig, ctx: blocks.RunCtx) -> Any:
+    """Streaming recompression across all layers (paper Alg. 3, every 100 tok)."""
+    from repro.core import kvcache as kvc
+
+    def maybe_recompress(el):
+        return kvc.recompress(ctx.ccfg, el) if isinstance(el, kvc.MixedKVCache) else el
+
+    is_leaf = lambda x: isinstance(x, (kvc.MixedKVCache,)) or hasattr(x, "ssm")
+    new_prefix = [maybe_recompress(el) for el in caches["prefix"]]
+
+    def group_fn(_, gcaches):
+        return (), {k: maybe_recompress(v) for k, v in gcaches.items()}
+
+    _, new_groups = jax.lax.scan(group_fn, (), caches["groups"])
+    return {"prefix": new_prefix, "groups": new_groups}
+
+
+def init_caches(cfg: ArchConfig, ctx: blocks.RunCtx, b: int, dtype=jnp.bfloat16) -> Any:
+    """Concrete zero caches (used by tests; dry-run uses eval_shape on this)."""
+    prefix = []
+    for (m, f) in _prefix_kinds(cfg):
+        if m in ("attn", "mla"):
+            from repro.core import kvcache as kvc
+            if m == "mla":
+                prefix.append(blocks.init_mla_cache(cfg, ctx, b, dtype))
+            else:
+                prefix.append(kvc.init_cache(ctx.ccfg, b, cfg.n_kv_heads, cfg.hd,
+                                             ctx.max_cache_len, dtype))
+        else:
+            from repro.models import ssm as ssm_mod
+            prefix.append(ssm_mod.init_state(cfg, b, dtype))
+
+    one_group = blocks.group_cache_struct(cfg, ctx, b, dtype)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_scan_groups, *x.shape)), one_group)
+    return {"prefix": prefix, "groups": stacked}

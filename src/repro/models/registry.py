@@ -1,0 +1,150 @@
+"""Uniform model API over the zoo: schema / loss / prefill / decode dispatch.
+
+Launchers, tests and the dry-run all consume models only through this module,
+so decoder-only and encoder-decoder families (and the frontend stubs) stay
+behind one interface.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import blocks, common, encdec, lm
+
+
+def schema(cfg: ArchConfig) -> dict:
+    return encdec.encdec_schema(cfg) if cfg.encdec else lm.lm_schema(cfg)
+
+
+def abstract_params(cfg: ArchConfig):
+    return common.abstract(schema(cfg))
+
+
+def materialize_params(cfg: ArchConfig, seed: int = 0):
+    return common.materialize(schema(cfg), seed)
+
+
+def param_logical_specs(cfg: ArchConfig):
+    return common.logical_specs(schema(cfg))
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
+            ctx: Optional[blocks.RunCtx] = None):
+    if cfg.encdec:
+        return encdec.loss_fn(params, batch, cfg, ctx)
+    return lm.loss_fn(params, batch, cfg, ctx)
+
+
+def prefill(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, ctx: blocks.RunCtx):
+    if cfg.encdec:
+        logits, caches = encdec.forward(
+            params, batch["frontend_embeds"], batch["tokens"], cfg, ctx,
+            build_cache=True, remat=False)
+        return logits[:, -1], caches
+    out = lm.prefill(params, batch["tokens"], cfg, ctx,
+                     frontend_embeds=batch.get("frontend_embeds"))
+    return out.logits_last, out.caches
+
+
+def decode_step(params, token: jnp.ndarray, caches: Any, cfg: ArchConfig,
+                ctx: blocks.RunCtx, is_probe: jnp.ndarray):
+    if cfg.encdec:
+        return encdec.decode_step(params, token, caches, cfg, ctx, is_probe)
+    out = lm.decode_step(params, token, caches, cfg, ctx, is_probe)
+    return out.logits, out.caches
+
+
+def recompress(caches: Any, cfg: ArchConfig, ctx: blocks.RunCtx):
+    from repro.core import kvcache as kvc
+
+    if cfg.encdec:
+        def fn(_, sc):
+            return (), encdec.DecLayerCaches(
+                kvc.recompress(ctx.ccfg, sc.self_cache), sc.cross_cache)
+        _, new = jax.lax.scan(fn, (), caches)
+        return new
+    return lm.recompress_caches(caches, cfg, ctx)
+
+
+def init_caches(cfg: ArchConfig, ctx: blocks.RunCtx, b: int, l_src: int = 0,
+                dtype=jnp.bfloat16):
+    if cfg.encdec:
+        return encdec.init_caches(cfg, ctx, b, l_src, dtype)
+    return lm.init_caches(cfg, ctx, b, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — the dry-run contract)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_spec(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    b, l = shape.global_batch, shape.seq_len
+    if cfg.encdec:
+        return {
+            "frontend_embeds": _sds((b, l, cfg.d_model), dtype),
+            "tokens": _sds((b, l), jnp.int32),
+            "labels": _sds((b, l), jnp.int32),
+        }
+    if cfg.frontend != "none":
+        n_f = cfg.n_frontend_tokens
+        return {
+            "frontend_embeds": _sds((b, n_f, cfg.d_model), dtype),
+            "tokens": _sds((b, l - n_f), jnp.int32),
+            "labels": _sds((b, l - n_f), jnp.int32),
+        }
+    return {"tokens": _sds((b, l), jnp.int32), "labels": _sds((b, l), jnp.int32)}
+
+
+def prefill_lengths(cfg: ArchConfig, shape: ShapeConfig):
+    """(decoder/query prefill length, encoder source length or 0).
+
+    Probe specs must be built on the QUERY length returned here."""
+    l = shape.seq_len
+    if cfg.encdec:
+        return min(128, l), l
+    if cfg.frontend != "none":
+        return l, 0  # frontend tokens are part of the query sequence
+    return l, 0
+
+
+def prefill_batch_spec(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    b, l = shape.global_batch, shape.seq_len
+    if cfg.encdec:
+        # source occupies the assigned seq_len; decoder prompt is short
+        dec_len, _ = prefill_lengths(cfg, shape)
+        return {
+            "frontend_embeds": _sds((b, l, cfg.d_model), dtype),
+            "tokens": _sds((b, dec_len), jnp.int32),
+        }
+    if cfg.frontend != "none":
+        n_f = cfg.n_frontend_tokens
+        return {
+            "frontend_embeds": _sds((b, n_f, cfg.d_model), dtype),
+            "tokens": _sds((b, l - n_f), jnp.int32),
+        }
+    return {"tokens": _sds((b, l), jnp.int32)}
+
+
+def decode_token_spec(cfg: ArchConfig, shape: ShapeConfig) -> Any:
+    return _sds((shape.global_batch,), jnp.int32)
+
+
+def materialize_batch(spec: Dict[str, Any], seed: int = 0, vocab: int = 256):
+    """Concrete random batch matching a spec (smoke tests)."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, s in spec.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, s.shape, 0, vocab, dtype=s.dtype)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype)
+    return out

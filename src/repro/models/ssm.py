@@ -1,0 +1,228 @@
+"""Mamba2 SSD (state-space duality) mixer — arXiv:2405.21060.
+
+Chunked SSD for train/prefill: within-chunk quadratic (attention-like) term +
+cross-chunk recurrent state, scanned over chunks.  O(l) memory, O(l·c) compute.
+Single-step recurrence for decode (O(1) state: (b, heads, head_dim, d_state)
+SSM state + per-stream conv tails).
+
+TP note: projections are declared PER STREAM (z / x / B / C / dt) rather than
+as mamba's fused in_proj, so the inner dimension and SSD heads shard cleanly
+over the `model` mesh axis without slicing across shard boundaries (see
+DESIGN.md §4).  B/C (ngroups·d_state) are small and replicated.
+
+ZipCache is inapplicable here (no KV cache) — see DESIGN.md
+§Arch-applicability; the recurrent state is carried in fp32/bf16.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models.common import ParamDef
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_ssm_heads(cfg: ArchConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def group_dim(cfg: ArchConfig) -> int:
+    return cfg.ssm_n_groups * cfg.ssm_d_state
+
+
+def ssm_schema(cfg: ArchConfig) -> dict:
+    e = cfg.d_model
+    di = d_inner(cfg)
+    h = n_ssm_heads(cfg)
+    gd = group_dim(cfg)
+    dc = cfg.ssm_d_conv
+    return {
+        "w_z": ParamDef((e, di), ("embed", "ssm_inner")),
+        "w_x": ParamDef((e, di), ("embed", "ssm_inner")),
+        "w_B": ParamDef((e, gd), ("embed", "ssm_state_in")),
+        "w_C": ParamDef((e, gd), ("embed", "ssm_state_in")),
+        "w_dt": ParamDef((e, h), ("embed", "ssm_heads")),
+        "conv_x_w": ParamDef((dc, di), ("conv", "ssm_inner"), init="small"),
+        "conv_x_b": ParamDef((di,), ("ssm_inner",), init="zeros"),
+        "conv_B_w": ParamDef((dc, gd), ("conv", "ssm_state_in"), init="small"),
+        "conv_B_b": ParamDef((gd,), ("ssm_state_in",), init="zeros"),
+        "conv_C_w": ParamDef((dc, gd), ("conv", "ssm_state_in"), init="small"),
+        "conv_C_b": ParamDef((gd,), ("ssm_state_in",), init="zeros"),
+        "A_log": ParamDef((h,), ("ssm_heads",), init="zeros"),   # A = -exp(A_log) ~ -1
+        "D": ParamDef((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), init="zeros"),
+        "norm_w": ParamDef((di,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamDef((di, e), ("ssm_inner", "embed")),
+    }
+
+
+class SSMState(NamedTuple):
+    """Decode-time recurrent state (the SSM analogue of a KV cache)."""
+    ssm: jnp.ndarray      # (b, h, head_dim, d_state) f32
+    conv_x: jnp.ndarray   # (b, d_conv-1, d_inner)
+    conv_B: jnp.ndarray   # (b, d_conv-1, gd)
+    conv_C: jnp.ndarray   # (b, d_conv-1, gd)
+
+
+def init_state(cfg: ArchConfig, b: int, dtype=jnp.float32) -> SSMState:
+    dc = cfg.ssm_d_conv - 1
+    return SSMState(
+        ssm=jnp.zeros((b, n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_d_state), jnp.float32),
+        conv_x=jnp.zeros((b, dc, d_inner(cfg)), dtype),
+        conv_B=jnp.zeros((b, dc, group_dim(cfg)), dtype),
+        conv_C=jnp.zeros((b, dc, group_dim(cfg)), dtype),
+    )
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b_: jnp.ndarray, tail: jnp.ndarray):
+    """Depthwise causal conv1d + SiLU. x: (b, l, c); tail: (b, d_conv-1, c)."""
+    dconv = w.shape[0]
+    xin = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(
+        xin[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(dconv)
+    ) + b_[None, None, :]
+    new_tail = xin[:, xin.shape[1] - (dconv - 1):] if dconv > 1 else tail
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype), new_tail
+
+
+def _conv_step(x_t: jnp.ndarray, w: jnp.ndarray, b_: jnp.ndarray, tail: jnp.ndarray):
+    """Single-token depthwise conv. x_t: (b, c); tail: (b, d_conv-1, c)."""
+    xin = jnp.concatenate([tail, x_t[:, None, :].astype(tail.dtype)], axis=1)
+    out = sum(xin[:, i] * w[i][None, :] for i in range(w.shape[0])) + b_[None, :]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x_t.dtype), xin[:, 1:]
+
+
+def _ssd_chunk_scan(xh, B, C, dA, dt, cfg: ArchConfig, init_state=None):
+    """Chunked SSD.
+
+    xh: (b, l, h, p)   B, C: (b, l, g, n)   dA: (b, l, h) = dt*A   dt: (b, l, h)
+    Returns (y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = xh.shape
+    g, n = B.shape[2], B.shape[3]
+    c = min(cfg.ssm_chunk, l)
+    assert l % c == 0, (l, c)
+    nc = l // c
+    rep = h // g
+
+    def resh(t, feat):
+        # (b, l, *feat) -> (nc, b, c, *feat): chunk axis leading for lax.scan,
+        # so only ONE chunk's quadratic (c x c) tensors are live at a time.
+        return t.reshape(b, nc, c, *feat).swapaxes(0, 1)
+
+    xh_, dA_, dt_ = resh(xh, (h, p)), resh(dA, (h,)), resh(dt, (h,))
+    B_c = resh(B, (g, n))
+    C_c = resh(C, (g, n))
+    ii = jnp.arange(c)
+    causal = (ii[:, None] >= ii[None, :]).astype(jnp.float32)
+
+    def chunk_fn(s_prev, inp):
+        xc, dac, dtc, Bc, Cc = inp      # (b,c,h,p) (b,c,h) (b,c,h) (b,c,g,n) ...
+        B_h = jnp.repeat(Bc, rep, axis=2)   # (b,c,h,n)
+        C_h = jnp.repeat(Cc, rep, axis=2)
+        cum = jnp.cumsum(dac, axis=1)       # (b,c,h)
+        total = cum[:, -1]                  # (b,h)
+        # within-chunk "attention": att[i,j] = (C_i·B_j) e^{cum_i - cum_j} dt_j
+        cb = jnp.einsum("bihn,bjhn->bhij", C_h, B_h)
+        ci = cum.transpose(0, 2, 1)         # (b,h,c)
+        decay = jnp.exp(jnp.clip(ci[..., :, None] - ci[..., None, :], -60.0, 0.0))
+        att = cb * decay * causal * dtc.transpose(0, 2, 1)[..., None, :]
+        y_intra = jnp.einsum("bhij,bjhp->bihp", att, xc)
+        # cross-chunk: y_inter[i] = C_i · S_prev * e^{cum_i}
+        y_inter = jnp.einsum(
+            "bihn,bhpn,bih->bihp", C_h, s_prev,
+            jnp.exp(jnp.clip(cum, -60.0, 0.0)))
+        # state update: S = S_prev e^{total} + Σ_j e^{total-cum_j} dt_j B_j⊗x_j
+        w_state = jnp.exp(jnp.clip(total[:, None, :] - cum, -60.0, 0.0)) * dtc
+        s_new = s_prev * jnp.exp(jnp.clip(total, -60.0, 0.0))[..., None, None] \
+            + jnp.einsum("bjh,bjhn,bjhp->bhpn", w_state, B_h, xc)
+        return s_new, y_intra + y_inter
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32) if init_state is None else init_state
+    s_last, y_chunks = jax.lax.scan(chunk_fn, s0, (xh_, dA_, dt_, B_c, C_c))
+    y = y_chunks.swapaxes(0, 1).reshape(b, l, h, p)
+    return y, s_last
+
+
+def ssm_forward(
+    params: dict, x: jnp.ndarray, cfg: ArchConfig, state: SSMState = None
+) -> Tuple[jnp.ndarray, SSMState]:
+    """Full-sequence SSD. x: (b, l, e) -> (y, final decode state)."""
+    b, l, e = x.shape
+    h, p = n_ssm_heads(cfg), cfg.ssm_head_dim
+    if state is None:
+        state = init_state(cfg, b, x.dtype)
+
+    z = jnp.einsum("ble,ei->bli", x, params["w_z"])
+    xi = jnp.einsum("ble,ei->bli", x, params["w_x"])
+    B = jnp.einsum("ble,eg->blg", x, params["w_B"])
+    C = jnp.einsum("ble,eg->blg", x, params["w_C"])
+    dt = jnp.einsum("ble,eh->blh", x, params["w_dt"])
+
+    xi, tail_x = _causal_conv(xi, params["conv_x_w"], params["conv_x_b"], state.conv_x)
+    B, tail_B = _causal_conv(B, params["conv_B_w"], params["conv_B_b"], state.conv_B)
+    C, tail_C = _causal_conv(C, params["conv_C_w"], params["conv_C_b"], state.conv_C)
+    B = B.reshape(b, l, cfg.ssm_n_groups, cfg.ssm_d_state)
+    C = C.reshape(b, l, cfg.ssm_n_groups, cfg.ssm_d_state)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = dt * A  # (b,l,h)
+
+    xh = xi.reshape(b, l, h, p)
+    y, s_last = _ssd_chunk_scan(
+        xh.astype(jnp.float32), B.astype(jnp.float32), C.astype(jnp.float32),
+        dA, dt, cfg, init_state=state.ssm)
+    y = y + xh.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, l, d_inner(cfg)).astype(x.dtype)
+
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                        params["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bli,ie->ble", y, params["out_proj"])
+    return out, SSMState(ssm=s_last, conv_x=tail_x, conv_B=tail_B, conv_C=tail_C)
+
+
+def ssm_decode(
+    params: dict, x_t: jnp.ndarray, cfg: ArchConfig, state: SSMState
+) -> Tuple[jnp.ndarray, SSMState]:
+    """One-token SSD recurrence. x_t: (b, e)."""
+    b, e = x_t.shape
+    h, p = n_ssm_heads(cfg), cfg.ssm_head_dim
+
+    z = jnp.einsum("be,ei->bi", x_t, params["w_z"])
+    xi = jnp.einsum("be,ei->bi", x_t, params["w_x"])
+    B = jnp.einsum("be,eg->bg", x_t, params["w_B"])
+    C = jnp.einsum("be,eg->bg", x_t, params["w_C"])
+    dt = jnp.einsum("be,eh->bh", x_t, params["w_dt"])
+
+    xi, tail_x = _conv_step(xi, params["conv_x_w"], params["conv_x_b"], state.conv_x)
+    B, tail_B = _conv_step(B, params["conv_B_w"], params["conv_B_b"], state.conv_B)
+    C, tail_C = _conv_step(C, params["conv_C_w"], params["conv_C_b"], state.conv_C)
+
+    xi = xi.reshape(b, h, p)
+    rep = h // cfg.ssm_n_groups
+    B_h = jnp.repeat(B.reshape(b, cfg.ssm_n_groups, cfg.ssm_d_state), rep, axis=1)
+    C_h = jnp.repeat(C.reshape(b, cfg.ssm_n_groups, cfg.ssm_d_state), rep, axis=1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (b,h)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(jnp.clip(dt * A, -60.0, 0.0))  # (b,h)
+
+    s = state.ssm * dA[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, B_h.astype(jnp.float32), xi.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", C_h.astype(jnp.float32), s)
+    y = y + xi.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, d_inner(cfg)).astype(x_t.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x_t.dtype),
+                        params["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bi,ie->be", y, params["out_proj"])
+    return out, SSMState(ssm=s, conv_x=tail_x, conv_B=tail_B, conv_C=tail_C)

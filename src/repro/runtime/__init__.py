@@ -1,0 +1,2 @@
+from repro.runtime.fault import FaultTolerantLoop, PreemptionGuard  # noqa: F401
+from repro.runtime.straggler import StragglerDetector  # noqa: F401

@@ -1,0 +1,37 @@
+"""Elastic re-scale: restart a job on a different device count.
+
+Checkpoints are mesh-agnostic (full logical arrays per leaf), so elasticity
+reduces to: build the new mesh, derive the new shardings from the SAME
+logical-axis rules, `device_put` each restored leaf.  The data pipeline
+re-shards by (host_id, num_hosts) and resumes from its integer state — no
+resharding of data state is ever needed.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ArchConfig
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shd
+
+
+def remesh_restore(
+    ckpt: Checkpointer,
+    cfg: ArchConfig,
+    target_tree: Any,
+    new_mesh_shape: Tuple[int, ...],
+    new_mesh_axes: Tuple[str, ...],
+    step: Optional[int] = None,
+):
+    """Restore the latest (or given) checkpoint onto a NEW mesh shape.
+
+    Returns (state_on_new_mesh, metadata, new_mesh)."""
+    mesh = mesh_lib.make_mesh(new_mesh_shape, new_mesh_axes)
+    step = ckpt.latest() if step is None else step
+    if step is None:
+        raise FileNotFoundError("no checkpoint to restore")
+    p_shard = shd.param_shardings(cfg, mesh)
+    state, meta = ckpt.restore(step, target_tree, p_shard)
+    return state, meta, mesh

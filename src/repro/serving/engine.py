@@ -1,0 +1,127 @@
+"""Batched serving engine with ZipCache streaming compression (paper Alg. 2/3).
+
+The engine owns three jitted programs:
+  * prefill_step(params, batch)            -> (last logits, compressed caches)
+  * serve_step(params, caches, tok, probe) -> (logits, caches)   [hot path]
+  * recompress_step(caches)                -> caches              [every N]
+
+and drives the paper's decoding protocol: each step is a probe row iff
+`i % 100 > 95 or hash-random < 5%` (Alg. 3's "5% recent + 5% random"), and the
+staging window folds back into the quantized stores every
+`recompress_interval` tokens.
+
+Batching: the request queue packs requests into fixed-shape batches (static
+shapes are non-negotiable on TPU); short prompts left-pad into the batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import saliency as sal
+from repro.core.policy import CompressionConfig
+from repro.launch import steps as steps_lib
+from repro.models import blocks, registry
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_size: int
+    prompt_len: int
+    max_new_tokens: int = 128
+    greedy: bool = True
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    tokens: np.ndarray            # (prompt_len,) int32 (pre-padded)
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, ccfg: CompressionConfig, scfg: ServeConfig,
+                 params, mesh=None):
+        self.cfg = cfg
+        self.ccfg = ccfg
+        self.scfg = scfg
+        self.params = params
+        shape = ShapeConfig("serve", scfg.prompt_len, scfg.batch_size, "prefill")
+        self.ctx = steps_lib.serve_ctx(cfg, shape, mesh, ccfg,
+                                       decode_budget=scfg.max_new_tokens,
+                                       q_block=min(512, scfg.prompt_len))
+        self._prefill = jax.jit(
+            lambda p, b: registry.prefill(p, b, cfg, self.ctx))
+        self._decode = jax.jit(
+            lambda p, t, c, ip: registry.decode_step(p, t, c, cfg, self.ctx, ip))
+        self._recompress = jax.jit(
+            lambda c: registry.recompress(c, cfg, self.ctx))
+        self._rng = np.random.default_rng(scfg.seed)
+
+    # ------------------------------------------------------------------
+    def _is_probe(self, i: int) -> bool:
+        """Paper Alg. 3: 5% most-recent + 5% random decode rows are probes."""
+        interval = self.ccfg.recompress_interval
+        return (i % interval) > interval - max(interval // 20, 1) \
+            or self._rng.random() < 0.05
+
+    def generate(self, batch: Dict[str, np.ndarray],
+                 max_new_tokens: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """Prefill + streaming decode for one packed batch.
+
+        batch: {"tokens": (b, prompt_len) int32[, "frontend_embeds": ...]}
+        Returns {"tokens": (b, n_new) int32, "timings": {...}}.
+        """
+        n_new = max_new_tokens or self.scfg.max_new_tokens
+        t0 = time.perf_counter()
+        jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
+        logits, caches = self._prefill(self.params, jbatch)
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+
+        outs = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        t1 = time.perf_counter()
+        since_recompress = 0
+        for i in range(n_new):
+            outs.append(np.asarray(tok))
+            logits, caches = self._decode(
+                self.params, tok, caches, jnp.asarray(self._is_probe(i)))
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            since_recompress += 1
+            if since_recompress >= self.ccfg.recompress_interval:
+                caches = self._recompress(caches)
+                since_recompress = 0
+        tok.block_until_ready()
+        t_decode = time.perf_counter() - t1
+        return {
+            "tokens": np.stack(outs, axis=1),
+            "timings": {"prefill_s": t_prefill, "decode_s": t_decode,
+                        "tok_per_s": n_new * self.scfg.batch_size / max(t_decode, 1e-9)},
+        }
+
+    # ------------------------------------------------------------------
+    def cache_bytes(self, caches) -> int:
+        """Actual packed bytes of all layer caches (compression-ratio report)."""
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(caches):
+            total += leaf.size * leaf.dtype.itemsize
+        return int(total)
+
+
+def pack_requests(requests: List[np.ndarray], batch_size: int, prompt_len: int,
+                  pad_id: int = 0) -> np.ndarray:
+    """Left-pad + stack request prompts into a fixed-shape batch."""
+    out = np.full((batch_size, prompt_len), pad_id, np.int32)
+    for i, r in enumerate(requests[:batch_size]):
+        r = r[-prompt_len:]
+        out[i, prompt_len - len(r):] = r
+    return out

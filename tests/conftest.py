@@ -1,0 +1,13 @@
+import os
+
+# Tests run single-device (the dry-run alone uses fake devices; see
+# test_sharding.py which spawns subprocesses with its own XLA_FLAGS).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,142 @@
+"""Mixed-precision KV cache behaviour tests (paper Alg. 2/3)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kvcache as kvc
+from repro.core.policy import CompressionConfig
+
+
+def _mk_kv(rng, b=2, hkv=2, l=48, d=16):
+    k = jnp.asarray(rng.normal(size=(b, hkv, l, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, hkv, l, d)).astype(np.float32))
+    s = jnp.asarray(rng.uniform(size=(b, l)).astype(np.float32))
+    return k, v, s
+
+
+POLICIES = ["zipcache", "mikv", "kivi", "gear", "h2o", "fp16"]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_prefill_compress_all_policies(policy, rng):
+    cfg = CompressionConfig.preset(policy)
+    cfg = dataclasses.replace(cfg, fp_window=8, recompress_interval=8)
+    k, v, s = _mk_kv(rng)
+    cache = kvc.compress_prefill(cfg, k, v, s, max_len=64, dtype=jnp.float32)
+    n_valid = int(cache.hi.valid.sum() + cache.lo.valid.sum() + (cache.win_pos >= 0).sum())
+    expect = 48 * 2 if policy != "h2o" else None
+    if policy == "h2o":
+        assert int(cache.hi.valid.sum()) == cfg.n_salient(48) * 2  # evicted rest
+    else:
+        assert n_valid == expect
+    q = jnp.asarray(rng.normal(size=(2, 4, 16)).astype(np.float32))
+    out = kvc.attend_decode(q, cache)
+    assert out.out.shape == (2, 4, 16)
+    assert bool(jnp.isfinite(out.out).all())
+    # softmax mass sums to one over valid slots
+    np.testing.assert_allclose(np.asarray(out.slot_weights.sum(-1)), 1.0, rtol=1e-4)
+
+
+def test_fp16_attend_matches_exact(rng):
+    """fp16 policy must reproduce exact attention over the raw KV."""
+    cfg = CompressionConfig.fp16()
+    k, v, s = _mk_kv(rng)
+    cache = kvc.compress_prefill(cfg, k, v, None, max_len=48, dtype=jnp.float32)
+    q = jnp.asarray(rng.normal(size=(2, 4, 16)).astype(np.float32))
+    out = kvc.attend_decode(q, cache).out
+    # exact reference
+    g = 2
+    qg = q.reshape(2, 2, g, 16) / (16 ** 0.5)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k)
+    w = jax.nn.softmax(logits, -1)
+    ref = jnp.einsum("bhgs,bhsd->bhgd", w, v).reshape(2, 4, 16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_quantized_attend_close_to_exact(rng):
+    cfg = CompressionConfig.zipcache(saliency_ratio=0.5)
+    cfg = dataclasses.replace(cfg, fp_window=8, recompress_interval=8)
+    k, v, s = _mk_kv(rng)
+    cache16 = kvc.compress_prefill(CompressionConfig.fp16(), k, v, None, 48, dtype=jnp.float32)
+    cacheq = kvc.compress_prefill(cfg, k, v, s, 64, dtype=jnp.float32)
+    q = jnp.asarray(rng.normal(size=(2, 4, 16)).astype(np.float32))
+    o16 = kvc.attend_decode(q, cache16).out
+    oq = kvc.attend_decode(q, cacheq).out
+    err = float(jnp.max(jnp.abs(o16 - oq)))
+    assert err < 0.35, err  # 4/2-bit mixed: small but nonzero error
+
+
+def test_append_and_recompress_roundtrip(rng):
+    cfg = CompressionConfig.zipcache(saliency_ratio=0.4)
+    cfg = dataclasses.replace(cfg, fp_window=8, recompress_interval=8)
+    k, v, s = _mk_kv(rng, l=40)
+    cache = kvc.compress_prefill(cfg, k, v, s, max_len=56, dtype=jnp.float32)
+    q = jnp.asarray(rng.normal(size=(2, 4, 16)).astype(np.float32))
+    for i in range(8):
+        kt = jnp.asarray(rng.normal(size=(2, 2, 16)).astype(np.float32))
+        cache = kvc.append_token(cache, kt, kt * 0.3)
+        dec = kvc.attend_decode(q, cache)
+        cache = kvc.update_probe_state(cache, dec.slot_weights, jnp.asarray(i % 2 == 0))
+    assert bool(kvc.window_is_full(cache))
+    assert int(cache.length[0]) == 48
+    n_valid_before = int(cache.hi.valid.sum() + cache.lo.valid.sum()
+                         + (cache.win_pos >= 0).sum())
+    cache2 = kvc.recompress(cfg, cache)
+    assert int(cache2.win_fill) == 0
+    n_valid_after = int(cache2.hi.valid.sum() + cache2.lo.valid.sum())
+    assert n_valid_after == n_valid_before == 48 * 2
+    # all positions preserved exactly once per batch row
+    pos = np.sort(np.concatenate(
+        [np.asarray(cache2.hi.pos[0]), np.asarray(cache2.lo.pos[0])]))
+    pos = pos[pos >= 0]
+    np.testing.assert_array_equal(pos, np.arange(48))
+
+
+def test_recompress_moves_salient_tokens_to_hi(rng):
+    """Tokens that accumulate probe mass must migrate into the 4-bit store."""
+    cfg = CompressionConfig.zipcache(saliency_ratio=0.25)
+    cfg = dataclasses.replace(cfg, fp_window=8, recompress_interval=8)
+    k, v, _ = _mk_kv(rng, b=1, l=32)
+    s0 = jnp.ones((1, 32)) * 0.1
+    cache = kvc.compress_prefill(cfg, k, v, s0, max_len=40, dtype=jnp.float32)
+    # artificially pour probe mass onto lo-store slot 3
+    target_pos = int(cache.lo.pos[0, 3])
+    acc = cache.lo.acc.at[0, 3].add(100.0)
+    nnz = cache.lo.nnz.at[0, 3].add(1.0)
+    cache = dataclasses.replace(cache, lo=dataclasses.replace(cache.lo, acc=acc, nnz=nnz))
+    cache2 = kvc.recompress(cfg, cache)
+    assert target_pos in np.asarray(cache2.hi.pos[0]).tolist()
+
+
+def test_mixed_cache_bytes_ordering(rng):
+    """Packed footprint: zipcache(4/2) < gear(4) < fp16 (payload-dominated
+    sizes; bf16 store dtype as in deployment)."""
+    k, v, s = _mk_kv(rng, l=256, d=64)
+    sizes = {}
+    for p in ["zipcache", "gear", "fp16"]:
+        cfg = dataclasses.replace(CompressionConfig.preset(p), fp_window=8,
+                                  recompress_interval=8)
+        cache = kvc.compress_prefill(cfg, k, v, s, 256, dtype=jnp.bfloat16)
+        sizes[p] = cache.nbytes_packed()
+    assert sizes["zipcache"] < sizes["gear"] < sizes["fp16"]
+
+
+@given(l=st.integers(16, 48), ratio=st.floats(0.1, 0.9), seed=st.integers(0, 99))
+@settings(max_examples=15, deadline=None)
+def test_prefill_position_conservation_property(l, ratio, seed):
+    """Every input position lands in exactly one store slot."""
+    rng = np.random.default_rng(seed)
+    cfg = CompressionConfig.zipcache(saliency_ratio=ratio)
+    cfg = dataclasses.replace(cfg, fp_window=8, recompress_interval=8)
+    k = jnp.asarray(rng.normal(size=(1, 2, l, 8)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, l, 8)).astype(np.float32))
+    s = jnp.asarray(rng.uniform(size=(1, l)).astype(np.float32))
+    cache = kvc.compress_prefill(cfg, k, v, s, max_len=l, dtype=jnp.float32)
+    pos = np.concatenate([np.asarray(cache.hi.pos[0]), np.asarray(cache.lo.pos[0])])
+    pos = np.sort(pos[pos >= 0])
+    np.testing.assert_array_equal(pos, np.arange(l))

@@ -1,0 +1,121 @@
+"""Loop-aware HLO cost analysis validation (launch/hlo_cost.py) + roofline
+term plumbing."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis, hlo_cost
+
+
+def _compile(f, *shapes):
+    return jax.jit(f).lower(
+        *[jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]).compile()
+
+
+def test_matmul_flops_exact():
+    m, n, k = 128, 256, 64
+    comp = _compile(lambda a, b: a @ b, (m, k), (k, n))
+    c = hlo_cost.analyze(comp.as_text())
+    assert c.flops == 2 * m * n * k
+
+
+def test_scan_trip_count_scaling():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), ()
+        c, _ = jax.lax.scan(body, x, None, length=7)
+        return c
+
+    comp = _compile(f, (16, 64), (64, 64))
+    c = hlo_cost.analyze(comp.as_text())
+    assert c.flops == 7 * 2 * 16 * 64 * 64
+
+
+def test_nested_scan_scaling():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), ()
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, ()
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c
+
+    comp = _compile(f, (8, 32), (32, 32))
+    c = hlo_cost.analyze(comp.as_text())
+    assert c.flops == 5 * 3 * 2 * 8 * 32 * 32
+
+
+def test_hbm_bytes_reasonable():
+    """Bytes model: matmul traffic within [1x, 4x] of operands+output."""
+    m = 512
+    comp = _compile(lambda a, b: a @ b, (m, m), (m, m))
+    c = hlo_cost.analyze(comp.as_text())
+    ideal = 3 * m * m * 4
+    assert ideal <= c.hbm_bytes <= 4 * ideal, (c.hbm_bytes, ideal)
+
+
+def test_dynamic_slice_not_counted_as_full_operand():
+    """Scanning slices out of a big stacked tensor must not charge the whole
+    stack per iteration (the bug that inflated scan programs 100x)."""
+    def f(stack):
+        def body(c, i):
+            sl = jax.lax.dynamic_slice_in_dim(stack, i * 4, 4, axis=0)
+            return c + jnp.sum(sl), ()
+        c, _ = jax.lax.scan(body, 0.0, jnp.arange(8))
+        return c
+
+    comp = jax.jit(f).lower(jax.ShapeDtypeStruct((32, 1024), jnp.float32)).compile()
+    c = hlo_cost.analyze(comp.as_text())
+    full = 32 * 1024 * 4
+    # 8 iterations x slice(4 rows) traffic ~ 8 * 2 * 4*1024*4 << 8 * full
+    assert c.hbm_bytes < 4 * full, (c.hbm_bytes, full)
+
+
+def test_roofline_terms_bounds():
+    rf = hlo_analysis.roofline_terms(
+        flops=197e12, hbm_bytes=819e9, wire_bytes=50e9, model_flops_per_device=98.5e12)
+    assert abs(rf.compute_s - 1.0) < 1e-6
+    assert abs(rf.memory_s - 1.0) < 1e-6
+    assert abs(rf.collective_s - 1.0) < 1e-6
+    assert rf.useful_ratio == pytest.approx(0.5)
+
+
+def test_collective_wire_model():
+    # ring all-reduce of S bytes over k=4: 2*S*(3/4)
+    assert hlo_cost._wire_mult("all-reduce", 4, 100.0) == pytest.approx(150.0)
+    assert hlo_cost._wire_mult("all-gather", 4, 100.0) == pytest.approx(75.0)
+    assert hlo_cost._wire_mult("reduce-scatter", 4, 100.0) == pytest.approx(300.0)
+    assert hlo_cost._wire_mult("collective-permute", 2, 100.0) == pytest.approx(100.0)
+
+
+def test_dryrun_artifacts_exist_and_fit():
+    """The committed dry-run artifacts must cover every applicable cell and
+    (TPU-estimate) fit 16 GB/device."""
+    import json
+    from pathlib import Path
+
+    from repro import configs
+    from repro.configs.base import SHAPES, shape_applicable
+
+    rd = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    if not rd.exists():
+        pytest.skip("dry-run artifacts not generated in this checkout")
+    missing, overweight = [], []
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_arch(arch)
+        for shape in SHAPES:
+            if not shape_applicable(cfg, shape):
+                continue
+            p = rd / f"{arch}__{shape}__single.json"
+            if not p.exists():
+                missing.append(p.name)
+                continue
+            r = json.loads(p.read_text())
+            assert r.get("status") == "ok", p.name
+            est = r["memory"]["total_hbm_bytes_tpu_estimate"]
+            if est > 16 * 2**30:
+                overweight.append((p.name, est / 2**30))
+    assert not missing, missing
+    assert not overweight, overweight

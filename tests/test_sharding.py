@@ -1,0 +1,131 @@
+"""Distribution-layer tests on an 8-fake-device mesh (subprocess: the XLA
+device-count flag must be set before jax initializes)."""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro import configs
+    from repro.configs.base import ShapeConfig
+    from repro.launch import steps as S, sharding as shd, hlo_analysis as hlo
+    from repro.core.policy import CompressionConfig
+    from repro.models import registry
+    from repro.optim import adamw
+
+    mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+    out = {}
+
+    # --- train: lower + EXECUTE 2 steps under SPMD; loss finite & decreasing-ish
+    cfg = configs.get_arch("deepseek-v2-lite-16b", smoke=True)  # MoE + MLA
+    shp = ShapeConfig("t", 64, 8, "train")
+    fn = S.make_train_step(cfg, mesh, grad_accum=2, q_block=32)
+    args, in_sh, out_sh = S.train_lowering_inputs(cfg, shp, mesh)
+    with mesh:
+        jit_step = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        comp = jit_step.lower(*args).compile()
+        out["train_wire"] = hlo.collective_summary(comp.as_text())["wire_bytes_total"]
+        params = registry.materialize_params(cfg, 0)
+        opt = adamw.adamw_init(params)
+        batch = registry.materialize_batch(
+            registry.train_batch_spec(cfg, shp, jnp.float32), 0, cfg.vocab)
+        losses = []
+        for _ in range(3):
+            params, opt, met = jit_step(params, opt, batch)
+            losses.append(float(met["loss"]))
+        out["train_losses"] = losses
+
+    # --- decode: lower + execute one step
+    shp_d = ShapeConfig("d", 128, 8, "decode")
+    fn_d, ctx = S.make_serve_step(cfg, shp_d, mesh, CompressionConfig.zipcache(), q_block=32)
+    args_d, in_sh_d, out_sh_d = S.decode_lowering_inputs(cfg, shp_d, mesh, ctx)
+    with mesh:
+        jit_d = jax.jit(fn_d, in_shardings=in_sh_d, out_shardings=out_sh_d)
+        comp_d = jit_d.lower(*args_d).compile()
+        caches = registry.init_caches(cfg, ctx, 8)
+        tok = jnp.zeros((8,), jnp.int32)
+        # params came out of train_step with TRAIN (FSDP) shardings; serving
+        # uses SERVE_OVERRIDES shardings — reshard (what a real deployment
+        # does once at model load).
+        params_serve = jax.device_put(params, in_sh_d[0])
+        logits, caches = jit_d(params_serve, caches, tok, jnp.asarray(True))
+        out["decode_finite"] = bool(jnp.isfinite(logits).all())
+
+    # --- multi-pod mesh axes resolve
+    mesh3 = Mesh(np.array(jax.devices()).reshape(2, 2, 2), ("pod", "data", "model"))
+    fn3 = S.make_train_step(cfg, mesh3, grad_accum=1, q_block=32)
+    args3, in3, out3 = S.train_lowering_inputs(cfg, shp, mesh3)
+    with mesh3:
+        comp3 = jax.jit(fn3, in_shardings=in3, out_shardings=out3).lower(*args3).compile()
+    out["multipod_ok"] = True
+    print("RESULT:" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def spmd_results():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
+        timeout=900, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                          "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][-1]
+    return json.loads(line[len("RESULT:"):])
+
+
+def test_spmd_train_executes(spmd_results):
+    losses = spmd_results["train_losses"]
+    assert all(l > 0 and l == l for l in losses)
+    assert losses[-1] < losses[0]  # learning under SPMD
+
+
+def test_spmd_collectives_present(spmd_results):
+    assert spmd_results["train_wire"] > 0  # TP/DP collectives were emitted
+
+
+def test_spmd_decode_executes(spmd_results):
+    assert spmd_results["decode_finite"]
+
+
+def test_multipod_mesh_lowers(spmd_results):
+    assert spmd_results["multipod_ok"]
+
+
+def test_sharding_rules_drop_non_divisible():
+    """Param specs never request uneven argument sharding (pjit requirement)."""
+    import os
+    # pure-python check against a FAKE mesh object (no devices needed)
+    from repro import configs as C
+    from repro.launch import sharding as shd
+    from repro.models import registry
+    from repro.models.common import is_def
+    import jax
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    for arch in C.ARCH_IDS:
+        cfg = C.get_arch(arch)
+        rules = shd.rules_for_mesh.__wrapped__(FakeMesh(), None) if hasattr(
+            shd.rules_for_mesh, "__wrapped__") else shd.rules_for_mesh(FakeMesh(), None)
+        schema = registry.schema(cfg)
+        leaves = jax.tree_util.tree_leaves(schema, is_leaf=is_def)
+        for d in leaves:
+            spec = shd.spec_from_axes(d.axes, d.shape, rules, FakeMesh())
+            for dim, part in zip(d.shape, tuple(spec)):
+                if part is None:
+                    continue
+                axes = part if isinstance(part, tuple) else (part,)
+                k = 1
+                for a in axes:
+                    k *= FakeMesh.shape[a]
+                assert dim % k == 0, (arch, d.shape, tuple(spec))

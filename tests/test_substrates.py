@@ -1,0 +1,218 @@
+"""Substrate tests: data pipeline, checkpointing, fault tolerance, optimizer,
+gradient compression, straggler detection, elastic re-mesh."""
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ShapeConfig
+from repro.data import DataConfig, TokenPipeline
+from repro.models import registry
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim import grad_compress as gc
+from repro.runtime import FaultTolerantLoop, StragglerDetector
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_determinism_and_resume():
+    cfg = DataConfig(seq_len=32, global_batch=4, vocab=256, seed=7)
+    p1 = TokenPipeline(cfg)
+    batches = [next(p1) for _ in range(5)]
+    state = p1.state()
+    later = [next(p1) for _ in range(3)]
+    p1.close()
+    # resume from state reproduces the continuation exactly
+    p2 = TokenPipeline.restore(cfg, state)
+    resumed = [next(p2) for _ in range(3)]
+    p2.close()
+    for a, b in zip(later, resumed):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(batches[0]["tokens"][:, 1:],
+                                  batches[0]["labels"][:, :-1])
+
+
+def test_pipeline_host_sharding():
+    full = DataConfig(seq_len=16, global_batch=8, vocab=128, seed=3)
+    h0 = DataConfig(seq_len=16, global_batch=8, vocab=128, seed=3, host_id=0, num_hosts=2)
+    h1 = DataConfig(seq_len=16, global_batch=8, vocab=128, seed=3, host_id=1, num_hosts=2)
+    p0, p1 = TokenPipeline(h0), TokenPipeline(h1)
+    b0, b1 = next(p0), next(p1)
+    p0.close(); p1.close()
+    assert b0["tokens"].shape == (4, 16)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])  # different shards
+
+
+# ---------------------------------------------------------------------------
+# checkpointer
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc(rng):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": [jnp.ones((2,), jnp.int32), jnp.zeros((5,), jnp.bfloat16)]}
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2)
+        for step in (10, 20, 30):
+            ck.save(step, tree, {"step": step}, blocking=True)
+        assert ck.all_steps() == [20, 30]  # keep-2 GC
+        restored, meta = ck.restore(30, tree)
+        assert meta["step"] == 30
+        np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+        assert restored["b"][1].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomic_publish():
+    """A stray .tmp directory (simulated crash) is never listed as a step."""
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(5, {"x": jnp.ones(3)}, blocking=True)
+        os.makedirs(os.path.join(d, "step_0000000009.tmp"))
+        assert ck.latest() == 5
+
+
+def test_checkpoint_async():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(1, {"x": jnp.ones((256, 256))})
+        ck.wait()
+        assert ck.latest() == 1
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant loop: crash + bit-exact restart
+# ---------------------------------------------------------------------------
+
+def _tiny_setup():
+    cfg = configs.get_arch("smollm-360m", smoke=True)
+    params = registry.materialize_params(cfg, 0)
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=1e-3)
+
+    def loss(p, batch):
+        return registry.loss_fn(p, batch, cfg)[0]
+
+    @jax.jit
+    def step(state, batch):
+        params, opt = state
+        l, g = jax.value_and_grad(loss)(params, batch)
+        params, opt, _ = adamw_update(ocfg, g, opt)
+        return (params, opt), l
+
+    def step_fn(state, batch):
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, l = step(state, jb)
+        return state, {"loss": float(l)}
+
+    dcfg = DataConfig(seq_len=32, global_batch=4, vocab=cfg.vocab, seed=1)
+    return cfg, (params, opt), step_fn, dcfg
+
+
+def test_crash_restart_bit_exact():
+    cfg, state0, step_fn, dcfg = _tiny_setup()
+    with tempfile.TemporaryDirectory() as d:
+        # uninterrupted run -> reference trajectory
+        ck_ref = Checkpointer(os.path.join(d, "ref"))
+        pipe = TokenPipeline(dcfg)
+        loop = FaultTolerantLoop(step_fn, ck_ref, checkpoint_every=4, max_steps=10)
+        ref_state, _, ref_hist = loop.run(state0, pipe, 0)
+        pipe.close()
+
+        # crashing run: fails at step 6, restarts from step-4 checkpoint
+        ck = Checkpointer(os.path.join(d, "crash"))
+        pipe = TokenPipeline(dcfg)
+        loop = FaultTolerantLoop(step_fn, ck, checkpoint_every=4, max_steps=10,
+                                 fail_at_step=6)
+        with pytest.raises(RuntimeError, match="injected failure"):
+            loop.run(state0, pipe, 0)
+        pipe.close()
+        ck.wait()  # let the in-flight async save land (a real restart would
+        #            find whatever completed; the test wants the step-4 ckpt)
+        # restart: resume from latest checkpoint, finish the run
+        loop2 = FaultTolerantLoop(step_fn, ck, checkpoint_every=4, max_steps=10)
+        state, start, data_state = loop2.resume_or(state0)
+        assert start == 4 and data_state is not None
+        pipe2 = TokenPipeline.restore(dcfg, data_state)
+        state, last, hist = loop2.run(state, pipe2, start)
+        pipe2.close()
+        assert last == 10
+        # bit-exact continuation: same final params as the uninterrupted run
+        for a, b in zip(jax.tree_util.tree_leaves(ref_state[0]),
+                        jax.tree_util.tree_leaves(state[0])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# straggler detection
+# ---------------------------------------------------------------------------
+
+def test_straggler_detector_flags_outlier():
+    det = StragglerDetector(warmup=4, z_threshold=4.0)
+    rng = np.random.default_rng(0)
+    flagged = []
+    for i in range(50):
+        dt = 0.10 + rng.normal() * 0.003
+        if i == 30:
+            dt = 0.50  # a straggling step
+        flagged.append(det.observe(i, dt))
+    assert flagged[30] is True
+    assert sum(flagged) <= 3  # low false-positive rate
+
+
+# ---------------------------------------------------------------------------
+# optimizer + gradient compression
+# ---------------------------------------------------------------------------
+
+def test_adamw_decreases_loss():
+    cfg, (params, opt), step_fn, dcfg = _tiny_setup()
+    pipe = TokenPipeline(dcfg)
+    losses = []
+    state = (params, opt)
+    for _ in range(20):
+        state, m = step_fn(state, next(pipe))
+        losses.append(m["loss"])
+    pipe.close()
+    assert losses[-1] < losses[0] - 0.2, losses[::6]
+
+
+def test_grad_compression_error_feedback():
+    """EF int8 compression: compressed-sum error shrinks vs no-feedback."""
+    rng = np.random.default_rng(0)
+    g_seq = [jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32)) * (0.5 ** i)
+             for i in range(10)]
+    resid = jnp.zeros((64, 64), jnp.float32)
+    acc_exact = jnp.zeros_like(resid)
+    acc_comp = jnp.zeros_like(resid)
+    for g in g_seq:
+        (sg,), (resid,) = (lambda t: ((t[0][0],), (t[1][0],)))(
+            gc.ef_compress_step([g], [resid], axis=None))
+        acc_exact += g
+        acc_comp += sg
+    rel = float(jnp.linalg.norm(acc_comp - acc_exact) / jnp.linalg.norm(acc_exact))
+    assert rel < 0.05, rel  # EF keeps the accumulated estimate tight
+
+
+def test_elastic_remesh_restore():
+    """Checkpoint written under one layout restores onto a different mesh."""
+    import jax
+
+    if len(jax.devices()) < 2:
+        cfg = configs.get_arch("yi-6b", smoke=True)
+        params = registry.materialize_params(cfg, 0)
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            ck.save(1, params, blocking=True)
+            # restore without mesh (device_put replicated) — structure intact
+            restored, _ = ck.restore(1, params)
+            for a, b in zip(jax.tree_util.tree_leaves(params),
+                            jax.tree_util.tree_leaves(restored)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
