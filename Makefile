@@ -1,0 +1,23 @@
+# Tier-1 verification in one word: `make test`.
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast dev serve bench
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+# skip the slow integration files while iterating
+test-fast:
+	$(PYTHON) -m pytest -x -q tests/test_kvcache.py tests/test_quant.py \
+	    tests/test_saliency.py tests/test_serving.py
+
+dev:
+	$(PYTHON) -m pip install -r requirements-dev.txt
+
+serve:
+	$(PYTHON) -m repro.launch.serve --arch yi-6b --smoke --continuous \
+	    --policy zipcache --batch 4 --prompt-len 64 --max-new 32
+
+bench:
+	$(PYTHON) benchmarks/run.py

@@ -1,6 +1,23 @@
-"""End-to-end serving driver (the paper is an inference paper — this is the
-primary example): batched requests -> prefill with probe saliency ->
-streaming decode with recompression every N tokens -> per-policy comparison.
+"""Continuous-batching serving demo (the paper is an inference paper — this
+is the primary example).
+
+Request-lifecycle API: build a `ContinuousEngine`, `submit` requests (each
+with its own sampling params, stop tokens and token budget), drive the
+scheduler with `step()`/`run()`, `poll`/`result` per request id:
+
+    eng = ContinuousEngine(cfg, ccfg, scfg, params)
+    rid = eng.submit(Request(tokens=prompt, stop_tokens=(eos,),
+                             max_new_tokens=32))
+    while eng.poll(rid) != "done":
+        eng.step()                # admit from queue / decode / retire
+    out = eng.result(rid)         # .tokens, .finish_reason, .timings
+
+Each step admits queued requests into free decode slots (prefill runs at
+batch=1 and the compressed cache slice is inserted into the running batch —
+requests join and leave mid-decode, no global barrier), decodes one token
+for every active slot, and folds each slot's staging window on its OWN
+counter (paper Alg. 3 per request).  A lockstep `ServingEngine` pass runs
+after it for the per-policy throughput comparison.
 
     PYTHONPATH=src python examples/serve_zipcache.py [--arch yi-6b]
 """
@@ -13,14 +30,15 @@ import numpy as np
 from repro import configs
 from repro.core.policy import CompressionConfig
 from repro.models import registry
-from repro.serving import ServeConfig, ServingEngine
-from repro.serving.engine import pack_requests
+from repro.serving import (ContinuousEngine, Request, SamplingParams,
+                           ServeConfig, ServingEngine, pack_requests)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--max-new", type=int, default=48)
     args = ap.parse_args()
@@ -28,23 +46,55 @@ def main():
     cfg = configs.get_arch(args.arch, smoke=True)  # reduced config: CPU-friendly
     params = registry.materialize_params(cfg, 0)
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(2, cfg.vocab, size=(args.prompt_len,)).astype(np.int32)
-               for _ in range(args.batch)]
-    batch = {"tokens": pack_requests(prompts, args.batch, args.prompt_len)}
+    ccfg = dataclasses.replace(CompressionConfig.zipcache(),
+                               fp_window=16, recompress_interval=16)
+    scfg = ServeConfig(batch_size=args.slots, prompt_len=args.prompt_len,
+                       max_new_tokens=args.max_new)
 
-    print(f"== serving {args.arch} (reduced config), batch={args.batch}, "
+    # ---- continuous batching: more requests than slots, mixed budgets ----
+    print(f"== continuous serving {args.arch} (reduced config): "
+          f"{args.requests} requests over {args.slots} slots")
+    eng = ContinuousEngine(cfg, ccfg, scfg, params)
+    rids = []
+    for i in range(args.requests):
+        n = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
+        prompt = rng.integers(2, cfg.vocab, size=(n,)).astype(np.int32)
+        rids.append(eng.submit(Request(
+            tokens=prompt,
+            sampling=SamplingParams(temperature=0.0 if i % 2 == 0 else 0.8,
+                                    seed=i),
+            max_new_tokens=int(rng.integers(8, args.max_new + 1)),
+            stop_tokens=(1,))))
+    n_steps = 0
+    while eng.pending:
+        eng.step()
+        n_steps += 1
+    for rid in rids:
+        out = eng.result(rid)
+        t = out.timings
+        print(f"  {rid:8s} {len(out.tokens):3d} tok ({out.finish_reason:6s}) "
+              f"prefill={t['prefill_s']:.2f}s decode={t['decode_s']:.2f}s "
+              f"({t['tok_per_s']:.1f} tok/s)  first={out.tokens[:6].tolist()}")
+    cb = eng.cache_bytes(eng.caches)
+    print(f"  scheduler: {n_steps} steps; cache {cb['packed_bytes']} B packed "
+          f"+ {cb['overhead_bytes']} B overhead")
+
+    # ---- lockstep per-policy throughput comparison ----
+    prompts = [rng.integers(2, cfg.vocab, size=(args.prompt_len,)).astype(np.int32)
+               for _ in range(args.slots)]
+    batch = {"tokens": pack_requests(prompts, args.slots, args.prompt_len)}
+    print(f"== lockstep policy comparison, batch={args.slots}, "
           f"prompt={args.prompt_len}, new={args.max_new}")
     for policy in ("fp16", "gear", "zipcache"):
-        ccfg = dataclasses.replace(CompressionConfig.preset(policy),
+        pcfg = dataclasses.replace(CompressionConfig.preset(policy),
                                    fp_window=16, recompress_interval=16)
-        scfg = ServeConfig(batch_size=args.batch, prompt_len=args.prompt_len,
-                           max_new_tokens=args.max_new)
-        engine = ServingEngine(cfg, ccfg, scfg, params)
+        engine = ServingEngine(cfg, pcfg, scfg, params)
         out = engine.generate(batch)
         t = out["timings"]
+        cb = engine.cache_bytes(engine.last_caches)
         print(f"  {policy:10s} prefill={t['prefill_s']:.2f}s "
               f"decode={t['decode_s']:.2f}s ({t['tok_per_s']:.1f} tok/s) "
-              f"first-tokens={out['tokens'][0][:8].tolist()}")
+              f"kv={cb['packed_bytes']} B packed")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,4 @@
 # The paper's primary contribution: KV cache quantization with salient-token
 # identification (ZipCache) plus the baselines it compares against.
-from repro.core import packing, quant, saliency, policy, kvcache  # noqa: F401
+from repro.core import packing, quant, saliency, policy, kvcache, backend  # noqa: F401
+from repro.core.backend import CacheBackend, MixedKVBackend  # noqa: F401

@@ -1,0 +1,146 @@
+"""CacheBackend: the uniform cache interface the model/serving layers consume.
+
+`core/kvcache.py` exposes the ZipCache runtime as free functions
+(`init_cache`, `compress_prefill`, `append_token`, `attend_decode*`,
+`recompress`, ...).  A `CacheBackend` wraps one compression policy's worth of
+those behind a stable protocol so that
+
+  * model code (`models/blocks.py`, `models/encdec.py`) never touches
+    `MixedKVCache` internals — a different cache layout (paged, per-head,
+    radix-tree) plugs in by implementing the protocol;
+  * the continuous-batching engine gets slot-level `insert`/`free` and
+    per-row `recompress(rows=...)` without knowing the pytree layout;
+  * byte accounting (packed KV payload vs bookkeeping overhead) lives in one
+    place instead of being re-derived per caller.
+
+Every method is jit-compatible: static shapes in, static shapes out, traced
+`slot`/`active`/`rows` operands allowed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvcache as kvc
+from repro.core.policy import CompressionConfig
+
+
+@runtime_checkable
+class CacheBackend(Protocol):
+    """Protocol for a per-layer KV cache implementation.
+
+    A "cache" below is an opaque pytree (static shapes) produced by
+    `init_cache`/`compress_prefill` and threaded through decode steps.
+    """
+
+    def init_cache(self, b: int, h_kv: int, d: int, max_len: int,
+                   dtype=jnp.bfloat16, d_v: Optional[int] = None) -> Any:
+        """Empty cache for `b` slots and a `max_len` token budget."""
+        ...
+
+    def compress_prefill(self, k, v, token_saliency, max_len: int,
+                         probe_nnz=None, dtype=jnp.bfloat16) -> Any:
+        """Compress full-sequence prefill K/V into a fresh cache (Alg. 2)."""
+        ...
+
+    def append(self, cache, k_t, v_t, active=None) -> Any:
+        """Append one decoded token's K/V per slot; `active` masks rows."""
+        ...
+
+    def attend(self, q, cache, scale: Optional[float] = None,
+               impl: str = "ref", ctx=None) -> kvc.DecodeAttnOut:
+        """One-token decode attention over the cache."""
+        ...
+
+    def update_probe(self, cache, slot_weights, is_probe) -> Any:
+        """Fold a probe row's attention mass into saliency state (Eq. 8)."""
+        ...
+
+    def recompress(self, cache, rows=None) -> Any:
+        """Fold the staging window back into the stores (Alg. 3); `rows`
+        restricts to a subset of slots (per-request cadence)."""
+        ...
+
+    def insert(self, cache, slice_cache, slot) -> Any:
+        """Insert a 1-request cache slice into batch row `slot`."""
+        ...
+
+    def free(self, cache, slot) -> Any:
+        """Retire batch row `slot` (invalidate its tokens)."""
+        ...
+
+    def nbytes(self, cache) -> Tuple[int, int]:
+        """(packed KV payload bytes, bookkeeping overhead bytes)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedKVBackend:
+    """The ZipCache mixed-precision cache (and its baselines) as a backend.
+
+    One instance per CompressionConfig; stateless — all state lives in the
+    cache pytrees, so instances are safe to close over in jitted programs.
+    """
+
+    ccfg: CompressionConfig
+
+    def init_cache(self, b, h_kv, d, max_len, dtype=jnp.bfloat16, d_v=None):
+        return kvc.init_cache(self.ccfg, b, h_kv, d, max_len, dtype, d_v=d_v)
+
+    def compress_prefill(self, k, v, token_saliency, max_len,
+                         probe_nnz=None, dtype=jnp.bfloat16):
+        return kvc.compress_prefill(self.ccfg, k, v, token_saliency, max_len,
+                                    probe_nnz=probe_nnz, dtype=dtype)
+
+    def append(self, cache, k_t, v_t, active=None):
+        return kvc.append_token(cache, k_t, v_t, active=active)
+
+    def attend(self, q, cache, scale=None, impl="ref", ctx=None):
+        return kvc.attend_decode(q, cache, scale=scale, impl=impl, ctx=ctx)
+
+    def update_probe(self, cache, slot_weights, is_probe):
+        return kvc.update_probe_state(cache, slot_weights, is_probe)
+
+    def recompress(self, cache, rows=None):
+        return kvc.recompress(self.ccfg, cache, rows=rows)
+
+    def insert(self, cache, slice_cache, slot):
+        return kvc.insert_slot(cache, slice_cache, slot)
+
+    def free(self, cache, slot):
+        return kvc.free_slot(cache, slot)
+
+    def nbytes(self, cache) -> Tuple[int, int]:
+        packed = cache.nbytes_packed()
+        return int(packed), int(cache.nbytes_total() - packed)
+
+
+def of(ccfg: Optional[CompressionConfig]) -> Optional[MixedKVBackend]:
+    """Backend for a policy config (None passes through for train-only ctxs)."""
+    return MixedKVBackend(ccfg) if ccfg is not None else None
+
+
+def cache_bytes(caches) -> dict:
+    """Walk an arbitrary cache tree (stacked layer/group axes included) and
+    report packed KV payload vs bookkeeping overhead separately.
+
+    Non-MixedKVCache elements (SSM states, raw staging trees) count entirely
+    as overhead — they are not compressed payload.
+    """
+    flat = jax.tree_util.tree_flatten(
+        caches, is_leaf=lambda x: isinstance(x, kvc.MixedKVCache))[0]
+    packed = overhead = 0
+    for el in flat:
+        if isinstance(el, kvc.MixedKVCache):
+            p = el.nbytes_packed()
+            packed += p
+            overhead += el.nbytes_total() - p
+        else:
+            overhead += sum(l.size * l.dtype.itemsize
+                            for l in jax.tree_util.tree_leaves(el))
+    return {"packed_bytes": int(packed), "overhead_bytes": int(overhead),
+            "total_bytes": int(packed + overhead)}

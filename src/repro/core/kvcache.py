@@ -143,7 +143,9 @@ class MixedKVCache:
     win_acc: jnp.ndarray      # (b, W) f32
     win_nnz: jnp.ndarray      # (b, W) f32
     length: jnp.ndarray       # (b,) int32: total live tokens (incl. evicted-from count for positions)
-    win_fill: jnp.ndarray     # () int32: occupied window slots (uniform across batch)
+    win_fill: jnp.ndarray     # (b,) int32: occupied window slots PER batch row
+                              # (continuous batching: rows fill/recompress on
+                              # their own cadence, paper Alg. 3 per request)
 
     def tree_flatten(self):
         children = (self.hi, self.lo, self.k_win, self.v_win, self.win_pos,
@@ -163,10 +165,21 @@ class MixedKVCache:
         return self.hi.capacity + self.lo.capacity + self.window
 
     def nbytes_packed(self) -> int:
+        """Bytes of the KV payload: packed hi/lo stores (codes + quantization
+        params) plus the raw staging window."""
         n = self.hi.nbytes_packed() + self.lo.nbytes_packed()
         for t in (self.k_win, self.v_win):
             n += t.size * t.dtype.itemsize
         return n
+
+    def nbytes_total(self) -> int:
+        """All leaf bytes, including bookkeeping (pos/acc/nnz/length)."""
+        return int(sum(l.size * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(self)))
+
+    def nbytes_overhead(self) -> int:
+        """Bookkeeping bytes carried on top of the packed KV payload."""
+        return self.nbytes_total() - self.nbytes_packed()
 
 
 SLOT_ALIGN = 128  # store capacities align to this for big caches so the slot
@@ -185,7 +198,11 @@ def capacities(cfg: CompressionConfig, max_len: int) -> Tuple[int, int, int]:
     a = SLOT_ALIGN if max_len >= 2048 else 1
     w = max(cfg.recompress_interval, 8)
     if cfg.method == "kivi":
-        w = max(w, cfg.fp_window)
+        # KIVI keeps the last fp_window tokens raw; stack the recompress
+        # staging room ON TOP so prefill never fills the window to capacity
+        # (a full window would silently drop decode appends until the next
+        # interval-cadenced recompression).
+        w = w + cfg.fp_window
     w = _align(w, a, up=True) if w else 0
     if cfg.method == "fp16":
         return max_len, 0, w
@@ -217,7 +234,7 @@ def init_cache(
         win_acc=jnp.zeros((b, w), jnp.float32),
         win_nnz=jnp.zeros((b, w), jnp.float32),
         length=jnp.zeros((b,), jnp.int32),
-        win_fill=jnp.zeros((), jnp.int32),
+        win_fill=jnp.zeros((b,), jnp.int32),
     )
 
 
@@ -268,8 +285,10 @@ def compress_prefill(
 
     if cfg.method in ("gear", "kivi"):
         if cfg.method == "kivi" and w > 0:
-            # recent fp window; the rest quantized at low bits
-            n_body = max(l - w, 0)
+            # last fp_window tokens raw; the rest quantized at low bits.
+            # The window is sized fp_window + staging room (capacities()),
+            # so decode appends always have space until the next recompress.
+            n_body = max(l - min(cfg.fp_window, w), 0)
             body = slice(0, n_body)
             k_pad, v_pad, pos_pad, acc_pad, nnz_pad = _pad_tokens(
                 k[:, :, body], v[:, :, body], positions[:, body], acc[:, body], nnz[:, body], s_lo)
@@ -280,7 +299,8 @@ def compress_prefill(
             win_pos = jnp.full((b, w), -1, jnp.int32).at[:, :n_win].set(positions[:, n_body:])
             return dataclasses.replace(
                 cache, lo=lo, k_win=k_w, v_win=v_w, win_pos=win_pos,
-                length=jnp.full((b,), l, jnp.int32), win_fill=jnp.asarray(n_win, jnp.int32))
+                length=jnp.full((b,), l, jnp.int32),
+                win_fill=jnp.full((b,), n_win, jnp.int32))
         k_pad, v_pad, pos_pad, acc_pad, nnz_pad = _pad_tokens(k, v, positions, acc, nnz, s_lo)
         lo = build_store(k_pad, v_pad, pos_pad, acc_pad, nnz_pad, cfg.low_bits, cfg)
         return dataclasses.replace(cache, lo=lo, length=jnp.full((b,), l, jnp.int32))
@@ -543,14 +563,18 @@ def update_probe_state(
     """Accumulate a decode-step probe row into per-slot saliency state.
 
     slot_weights: (b, S_total) in hi/lo/window slot order (from attend_decode).
-    is_probe: scalar bool/int — whether this decode step is a probe row
+    is_probe: () or (b,) bool/int — whether this decode step is a probe row
     (paper Alg. 3: the most recent 5% + a 5% random subsample of steps).
+    Per-row flags let continuous batches run each request's probe schedule on
+    its own token counter.
     """
     s_hi, s_lo = cache.hi.capacity, cache.lo.capacity
     w_hi = slot_weights[:, :s_hi]
     w_lo = slot_weights[:, s_hi:s_hi + s_lo]
     w_win = slot_weights[:, s_hi + s_lo:]
-    p = is_probe.astype(jnp.float32)
+    p = jnp.asarray(is_probe).astype(jnp.float32)
+    if p.ndim == 1:
+        p = p[:, None]  # (b, 1) broadcasting against (b, S)
     hi = dataclasses.replace(
         cache.hi, acc=cache.hi.acc + p * w_hi,
         nnz=cache.hi.nnz + p * cache.hi.valid.astype(jnp.float32))
@@ -563,35 +587,137 @@ def update_probe_state(
         win_nnz=cache.win_nnz + p * (cache.win_pos >= 0).astype(jnp.float32))
 
 
-def append_token(cache: MixedKVCache, k_t: jnp.ndarray, v_t: jnp.ndarray) -> MixedKVCache:
-    """Append one decoded token's K/V (b, h_kv, d) into the staging window."""
-    slot = cache.win_fill
-    k_win = jax.lax.dynamic_update_index_in_dim(
-        cache.k_win, k_t.astype(cache.k_win.dtype)[:, :, None, :], slot, axis=2)[:, :, : cache.window]
-    v_win = jax.lax.dynamic_update_index_in_dim(
-        cache.v_win, v_t.astype(cache.v_win.dtype)[:, :, None, :], slot, axis=2)[:, :, : cache.window]
-    win_pos = jax.lax.dynamic_update_index_in_dim(
-        cache.win_pos, cache.length[:, None], slot, axis=1)[:, : cache.window]
+def append_token(
+    cache: MixedKVCache, k_t: jnp.ndarray, v_t: jnp.ndarray,
+    active: Optional[jnp.ndarray] = None,
+) -> MixedKVCache:
+    """Append one decoded token's K/V (b, h_kv, d) into the staging window.
+
+    Each batch row writes at its OWN `win_fill[b]` cursor (jetstream-style
+    per-slot insertion), so rows admitted at different steps coexist in one
+    static-shape cache.  `active`: optional (b,) bool — rows where it is False
+    write nothing and do not advance their length/fill counters (retired or
+    empty slots in a continuous batch).
+    """
+    b = cache.win_pos.shape[0]
+    bidx = jnp.arange(b)
+    fill = cache.win_fill
+    inc = jnp.ones((b,), jnp.int32)
+    if active is not None:
+        act = active.astype(jnp.bool_)
+        # inactive rows target index `window` (out of bounds -> dropped write)
+        fill = jnp.where(act, fill, cache.window)
+        inc = act.astype(jnp.int32)
+    k_win = cache.k_win.at[bidx, :, fill].set(
+        k_t.astype(cache.k_win.dtype), mode="drop")
+    v_win = cache.v_win.at[bidx, :, fill].set(
+        v_t.astype(cache.v_win.dtype), mode="drop")
+    win_pos = cache.win_pos.at[bidx, fill].set(cache.length, mode="drop")
     return dataclasses.replace(
         cache, k_win=k_win, v_win=v_win, win_pos=win_pos,
-        length=cache.length + 1, win_fill=cache.win_fill + 1)
+        length=cache.length + inc, win_fill=cache.win_fill + inc)
 
 
 def window_is_full(cache: MixedKVCache) -> jnp.ndarray:
-    return cache.win_fill >= cache.window
+    """() bool: ALL rows' windows are full (lockstep cadence).  Per-row
+    cadence reads `cache.win_fill >= cache.window` directly."""
+    return jnp.all(cache.win_fill >= cache.window)
+
+
+# ---------------------------------------------------------------------------
+# Slot-based batch insertion (continuous batching)
+# ---------------------------------------------------------------------------
+
+def tree_update_rows(dst, src, slot, axis: int = 0):
+    """Write `src` (size 1 along `axis` in every leaf) into `dst` at `slot`.
+
+    Flatten/unflatten instead of tree_map: QuantizedTensor aux data carries
+    the logical shape (which differs between a b=1 slice and the full batch),
+    so the trees are structurally unequal under tree_map even though their
+    leaves align one-to-one."""
+    dst_leaves, treedef = jax.tree_util.tree_flatten(dst)
+    src_leaves = jax.tree_util.tree_leaves(src)
+    if len(dst_leaves) != len(src_leaves):
+        raise ValueError(
+            f"cache slice has {len(src_leaves)} leaves, batch has {len(dst_leaves)}")
+    new = [jax.lax.dynamic_update_slice_in_dim(d, s.astype(d.dtype), slot, axis=axis)
+           for d, s in zip(dst_leaves, src_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+def insert_slot(dst: MixedKVCache, src: MixedKVCache, slot) -> MixedKVCache:
+    """Write a 1-request cache slice `src` (batch==1, same static capacities)
+    into batch row `slot` of `dst`.  Pure slicing on every leaf — jittable
+    with a traced `slot`, static shapes preserved."""
+    return tree_update_rows(dst, src, slot, axis=0)
+
+
+def free_slot(cache: MixedKVCache, slot, batch_axis: int = 0) -> MixedKVCache:
+    """Retire batch row `slot`: invalidate its positions and zero its
+    counters.  Stale codes stay in place — validity is entirely pos-driven
+    (pos == -1 rows are masked out of attention), so no requantization is
+    needed and the op is a handful of row writes (much cheaper than
+    inserting an empty slice, which rewrites every leaf).
+
+    batch_axis=1 handles layer-stacked caches (leaves (L, b, ...))."""
+    def _row(p, fill):
+        shp = (*p.shape[:batch_axis], 1, *p.shape[batch_axis + 1:])
+        return jax.lax.dynamic_update_slice_in_dim(
+            p, jnp.full(shp, fill, p.dtype), slot, axis=batch_axis)
+
+    def inval(p):
+        return _row(p, -1)
+
+    def zero_row(x):
+        return _row(x, 0)
+
+    hi = dataclasses.replace(cache.hi, pos=inval(cache.hi.pos),
+                             acc=zero_row(cache.hi.acc), nnz=zero_row(cache.hi.nnz))
+    lo = dataclasses.replace(cache.lo, pos=inval(cache.lo.pos),
+                             acc=zero_row(cache.lo.acc), nnz=zero_row(cache.lo.nnz))
+    return dataclasses.replace(
+        cache, hi=hi, lo=lo, win_pos=inval(cache.win_pos),
+        win_acc=zero_row(cache.win_acc), win_nnz=zero_row(cache.win_nnz),
+        length=zero_row(cache.length), win_fill=zero_row(cache.win_fill))
 
 
 # ---------------------------------------------------------------------------
 # Streaming recompression (paper Alg. 3)
 # ---------------------------------------------------------------------------
 
-def recompress(cfg: CompressionConfig, cache: MixedKVCache) -> MixedKVCache:
+def recompress(cfg: CompressionConfig, cache: MixedKVCache,
+               rows: Optional[jnp.ndarray] = None) -> MixedKVCache:
     """Fold the staging window back into the quantized stores.
 
     Dequantizes all segments, re-ranks every token by its CURRENT estimated
     saliency (acc / nnz for 'normalized', raw acc for 'accumulated'), and
     rebuilds the hi/lo stores.  Empties the window.  Static shapes throughout.
+
+    rows: optional (b,) bool — recompress ONLY those batch rows, leaving the
+    others untouched (continuous batching: each slot folds its window on its
+    own token counter, paper Alg. 3 per request).  Every per-token operation
+    here (top_k, gather, per-row quantization scales) is row-independent, so
+    masking after the fact is exact.
     """
+    new = _recompress_all(cfg, cache)
+    if rows is None:
+        return new
+    return tree_select_rows(rows, new, cache)
+
+
+def tree_select_rows(mask: jnp.ndarray, new_tree, old_tree):
+    """Per-row select between two same-shaped pytrees: rows where `mask`
+    ((b,) bool, broadcast over trailing leaf axes) take `new_tree`."""
+    mask = jnp.asarray(mask)
+
+    def sel(n, o):
+        r = mask.reshape(mask.shape + (1,) * (n.ndim - mask.ndim))
+        return jnp.where(r, n, o)
+
+    return jax.tree_util.tree_map(sel, new_tree, old_tree)
+
+
+def _recompress_all(cfg: CompressionConfig, cache: MixedKVCache) -> MixedKVCache:
     k, v, valid, pos = cache_keys_values(cache)
     b = k.shape[0]
     acc = jnp.concatenate([cache.hi.acc, cache.lo.acc, cache.win_acc], axis=1)

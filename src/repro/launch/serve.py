@@ -3,6 +3,9 @@
 Example (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
       --policy zipcache --batch 4 --prompt-len 64 --max-new 32
+
+--continuous switches to the continuous-batching engine (request lifecycle:
+submit -> step -> result; slots admit/retire independently).
 """
 
 from __future__ import annotations
@@ -15,8 +18,8 @@ from repro import configs
 from repro.core.policy import CompressionConfig
 from repro.launch import mesh as mesh_lib
 from repro.models import registry
-from repro.serving import ServeConfig, ServingEngine
-from repro.serving.engine import pack_requests
+from repro.serving import (ContinuousEngine, Request, ServeConfig,
+                           ServingEngine, pack_requests)
 
 
 def main(argv=None):
@@ -30,6 +33,8 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine (submit/step/result)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_arch(args.arch, smoke=args.smoke)
@@ -50,11 +55,22 @@ def main(argv=None):
                        max_new_tokens=args.max_new, seed=args.seed)
 
     params = registry.materialize_params(cfg, args.seed)
-    engine = ServingEngine(cfg, ccfg, scfg, params, mesh=mesh)
-
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(2, cfg.vocab, size=(args.prompt_len,)).astype(np.int32)
                for _ in range(args.batch)]
+
+    if args.continuous:
+        eng = ContinuousEngine(cfg, ccfg, scfg, params, mesh=mesh)
+        rids = [eng.submit(Request(tokens=p)) for p in prompts]
+        eng.run()
+        for rid in rids:
+            out = eng.result(rid)
+            print(f"[serve] {rid}: {len(out.tokens)} tok "
+                  f"({out.timings['tok_per_s']:.1f} tok/s) "
+                  f"first={out.tokens[:16].tolist()}")
+        return {rid: eng.result(rid) for rid in rids}
+
+    engine = ServingEngine(cfg, ccfg, scfg, params, mesh=mesh)
     batch = {"tokens": pack_requests(prompts, args.batch, args.prompt_len)}
     if cfg.encdec or cfg.frontend != "none":
         n = args.prompt_len if cfg.encdec else cfg.n_frontend_tokens

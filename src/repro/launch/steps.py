@@ -184,6 +184,83 @@ def make_recompress_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
     return recompress_step, ctx
 
 
+# ---------------------------------------------------------------------------
+# Continuous batching: masked decode + slot insertion (jetstream-style)
+# ---------------------------------------------------------------------------
+
+def make_continuous_decode_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                                ccfg: Optional[CompressionConfig] = None,
+                                q_block: int = 512, decode_impl: str = "ref",
+                                ctx=None):
+    """Decode with per-slot probe flags and an active-slot mask:
+
+        decode(params, caches, token, probes (b,), active (b,)) -> (logits, caches)
+
+    Static shapes: inactive slots are masked (dropped appends, invalid-pos
+    attention masking), never sliced away.  Pass `ctx` to share one serving
+    context across the prefill/decode/insert/recompress program family (the
+    engines do); otherwise a fresh one is built."""
+    ctx = ctx or serve_ctx(cfg, shape, mesh, ccfg, q_block=q_block,
+                           decode_impl=decode_impl)
+
+    def decode(params, caches, token, probes, active):
+        return registry.decode_step(params, token, caches, cfg, ctx, probes,
+                                    active=active)
+
+    return decode, ctx
+
+
+def make_insert_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                     ccfg: Optional[CompressionConfig] = None, ctx=None):
+    """insert(caches, slice, slot) — write a batch=1 prefill cache slice into
+    decode-batch row `slot`.  `free(slot)` is insert of an empty slice."""
+    ctx = ctx or serve_ctx(cfg, shape, mesh, ccfg)
+
+    def insert(caches, slice_caches, slot):
+        return registry.insert_caches(caches, slice_caches, slot)
+
+    return insert, ctx
+
+
+def make_recompress_rows_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                              ccfg: Optional[CompressionConfig] = None, ctx=None):
+    """recompress(caches, rows (b,) bool) — fold staging windows for the
+    masked slots only (per-request cadence, paper Alg. 3).
+
+    Cost note: the jitted program recomputes the full-batch recompression and
+    row-selects the result (static shapes), so under maximally staggered
+    admission it can run up to `slots`× per interval vs once for lockstep —
+    callers batch co-due rows into one call (the engine does) to bound this."""
+    ctx = ctx or serve_ctx(cfg, shape, mesh, ccfg)
+
+    def recompress_rows(caches, rows):
+        return registry.recompress(caches, cfg, ctx, rows=rows)
+
+    return recompress_rows, ctx
+
+
+def continuous_decode_lowering_inputs(cfg: ArchConfig, shape: ShapeConfig, mesh, ctx):
+    """Abstract (params, caches, token, probes, active) + shardings for the
+    continuous decode program.  mesh=None returns abstract inputs with no
+    shardings (CPU tracing / jittability checks)."""
+    b = shape.global_batch
+    aprobes = jax.ShapeDtypeStruct((b,), jnp.bool_)
+    aactive = jax.ShapeDtypeStruct((b,), jnp.bool_)
+    if mesh is None:
+        aparams = registry.abstract_params(cfg)
+        l_src = shape.seq_len if cfg.encdec else 0
+        acaches = jax.eval_shape(
+            lambda: registry.init_caches(cfg, ctx, b, l_src=l_src))
+        atoken = registry.decode_token_spec(cfg, shape)
+        return (aparams, acaches, atoken, aprobes, aactive), None, None
+    (aparams, acaches, atoken, _), (p_sh, c_sh, t_sh, _), (l_sh, oc_sh) = \
+        decode_lowering_inputs(cfg, shape, mesh, ctx)
+    r_shard = shd.replicated(mesh)
+    in_sh = (p_sh, c_sh, t_sh, r_shard, r_shard)
+    out_sh = (l_sh, oc_sh)
+    return (aparams, acaches, atoken, aprobes, aactive), in_sh, out_sh
+
+
 def decode_lowering_inputs(cfg: ArchConfig, shape: ShapeConfig, mesh, ctx):
     """Abstract (params, caches, token, is_probe) + shardings."""
     aparams = registry.abstract_params(cfg)

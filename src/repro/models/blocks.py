@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import backend as backend_lib
 from repro.core import kvcache as kvc
 from repro.core import saliency as sal
 from repro.core.policy import CompressionConfig
@@ -65,12 +66,18 @@ def group_schema(cfg: ArchConfig) -> dict:
 # ---------------------------------------------------------------------------
 
 class RunCtx:
-    """Static per-call context: mesh (or None), compression policy, probes."""
+    """Static per-call context: mesh (or None), compression policy, probes.
+
+    `backend` is the CacheBackend the model layers use for every cache
+    operation (defaults to the mixed-precision ZipCache backend for `ccfg`);
+    alternative cache layouts plug in here without touching model code.
+    """
 
     def __init__(self, mesh=None, data_axes=("data",), ccfg: Optional[CompressionConfig] = None,
                  probe: Optional[sal.ProbeSpec] = None, max_cache_len: int = 0,
                  q_block: int = 512, use_kernels: bool = False,
-                 decode_impl: str = "ref", compact_softmax: bool = False):
+                 decode_impl: str = "ref", compact_softmax: bool = False,
+                 backend: Optional[backend_lib.CacheBackend] = None):
         self.mesh = mesh
         self.data_axes = tuple(data_axes)
         self.ccfg = ccfg
@@ -80,6 +87,7 @@ class RunCtx:
         self.use_kernels = use_kernels
         self.decode_impl = decode_impl
         self.compact_softmax = compact_softmax
+        self.backend = backend if backend is not None else backend_lib.of(ccfg)
 
     def shard(self, x, parts):
         if self.mesh is None:
@@ -112,8 +120,8 @@ def apply_layer_full(
                      q_block=ctx.q_block, use_kernel=ctx.use_kernels, ctx=ctx,
                      compact=ctx.compact_softmax)
         if build_cache:
-            cache_el = kvc.compress_prefill(
-                ctx.ccfg, aux.k, aux.v, aux.saliency, ctx.max_cache_len,
+            cache_el = ctx.backend.compress_prefill(
+                aux.k, aux.v, aux.saliency, ctx.max_cache_len,
                 probe_nnz=aux.probe_nnz, dtype=x.dtype)
     else:
         y, state = ssm_mod.ssm_forward(params["ssm"], h, cfg)
@@ -150,14 +158,19 @@ def apply_group_full(params: dict, x, cfg: ArchConfig, ctx: RunCtx, build_cache:
 def apply_layer_decode(
     params: dict, x_t: jnp.ndarray, cfg: ArchConfig, mixer: str, ffn: str,
     cache_el: Any, ctx: RunCtx, is_probe: jnp.ndarray,
+    active: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Any]:
+    """One layer, one token.  `active`: optional (b,) bool — inactive batch
+    rows neither append to their caches nor advance SSM state (their slot in
+    a continuous batch is empty or retired)."""
+    be = ctx.backend
     h = common.rms_norm(x_t, params["ln1"], cfg.norm_eps)
     if mixer == "attn":
         position = cache_el.length  # (b,)
         q_t, k_t, v_t = attn.gqa_decode_qkv(params["attn"], h, cfg, position)
-        cache_el = kvc.append_token(cache_el, k_t, v_t)
-        dec = kvc.attend_decode(q_t, cache_el, impl=ctx.decode_impl, ctx=ctx)
-        cache_el = kvc.update_probe_state(cache_el, dec.slot_weights, is_probe)
+        cache_el = be.append(cache_el, k_t, v_t, active=active)
+        dec = be.attend(q_t, cache_el, impl=ctx.decode_impl, ctx=ctx)
+        cache_el = be.update_probe(cache_el, dec.slot_weights, is_probe)
         y = jnp.einsum("bhd,hde->be", dec.out, params["attn"]["wo"])
     elif mixer == "mla":
         position = cache_el.length
@@ -167,12 +180,16 @@ def apply_layer_decode(
         cos, sin = common.rotary_cos_sin(position, cfg.rope_head_dim, cfg.rope_theta)
         kpe_t = common.apply_rotary(
             jnp.einsum("be,ep->bp", h, params["attn"]["w_kpe"]), cos, sin)
-        cache_el = kvc.append_token(cache_el, kpe_t[:, None], lat_t[:, None])
+        cache_el = be.append(cache_el, kpe_t[:, None], lat_t[:, None], active=active)
         y, _, _, slot_w = attn.mla_decode(params["attn"], h, cache_el, cfg, position,
                                           impl=ctx.decode_impl)
-        cache_el = kvc.update_probe_state(cache_el, slot_w, is_probe)
+        cache_el = be.update_probe(cache_el, slot_w, is_probe)
     else:
+        old_el = cache_el
         y, cache_el = ssm_mod.ssm_decode(params["ssm"], h, cfg, cache_el)
+        if active is not None:
+            # inactive slots keep their previous SSM state
+            cache_el = kvc.tree_select_rows(active, cache_el, old_el)
     x_t = x_t + y
     if ffn == "dense":
         h2 = common.rms_norm(x_t, params["ln2"], cfg.norm_eps)
@@ -186,12 +203,13 @@ def apply_layer_decode(
 
 
 def apply_group_decode(params: dict, x_t, cfg: ArchConfig, caches: Dict[str, Any],
-                       ctx: RunCtx, is_probe: jnp.ndarray):
+                       ctx: RunCtx, is_probe: jnp.ndarray,
+                       active: Optional[jnp.ndarray] = None):
     new_caches: Dict[str, Any] = {}
     for j, (mixer, ffn) in enumerate(cfg.layer_kinds()):
         key = f"sub{j}"
         x_t, el = apply_layer_decode(
-            params[key], x_t, cfg, mixer, ffn, caches[key], ctx, is_probe)
+            params[key], x_t, cfg, mixer, ffn, caches[key], ctx, is_probe, active)
         new_caches[key] = el
     return x_t, new_caches
 
@@ -205,8 +223,8 @@ def group_cache_struct(cfg: ArchConfig, ctx: RunCtx, b: int, dtype=jnp.bfloat16)
     caches: Dict[str, Any] = {}
     for j, (mixer, ffn) in enumerate(cfg.layer_kinds()):
         if mixer == "attn":
-            caches[f"sub{j}"] = kvc.init_cache(
-                ctx.ccfg, b, cfg.n_kv_heads, cfg.hd, ctx.max_cache_len, dtype)
+            caches[f"sub{j}"] = ctx.backend.init_cache(
+                b, cfg.n_kv_heads, cfg.hd, ctx.max_cache_len, dtype)
         elif mixer == "mla":
             # streams: k = rope-key (b,1,S,p), v = latent (b,1,S,r)
             caches[f"sub{j}"] = init_mla_cache(cfg, ctx, b, dtype)
@@ -222,6 +240,6 @@ def init_mla_cache(cfg: ArchConfig, ctx: RunCtx, b: int, dtype=jnp.bfloat16):
     latent (value-like), channelwise on the rope-key — the policy's
     key/value schemes map onto the two streams directly.
     """
-    return kvc.init_cache(
-        ctx.ccfg, b, 1, cfg.rope_head_dim, ctx.max_cache_len, dtype,
+    return ctx.backend.init_cache(
+        b, 1, cfg.rope_head_dim, ctx.max_cache_len, dtype,
         d_v=cfg.kv_lora_rank)

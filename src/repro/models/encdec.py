@@ -114,11 +114,11 @@ def _dec_layer_full(p: dict, x, enc_out, cfg: ArchConfig, ctx: blocks.RunCtx,
     x = x + mlp_mod.dense_mlp(p["mlp"], h2)
     caches = None
     if build_cache:
-        self_cache = kvc.compress_prefill(
-            ctx.ccfg, aux_self.k, aux_self.v, aux_self.saliency,
+        self_cache = ctx.backend.compress_prefill(
+            aux_self.k, aux_self.v, aux_self.saliency,
             ctx.max_cache_len, probe_nnz=aux_self.probe_nnz, dtype=x.dtype)
-        cross_cache = kvc.compress_prefill(
-            ctx.ccfg, aux_cross.k, aux_cross.v, aux_cross.saliency,
+        cross_cache = ctx.backend.compress_prefill(
+            aux_cross.k, aux_cross.v, aux_cross.saliency,
             enc_out.shape[1], probe_nnz=aux_cross.probe_nnz, dtype=x.dtype)
         caches = DecLayerCaches(self_cache, cross_cache)
     return x, caches
@@ -162,24 +162,27 @@ def loss_fn(params: dict, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
 # ---------------------------------------------------------------------------
 
 def decode_step(params: dict, token: jnp.ndarray, caches: Any, cfg: ArchConfig,
-                ctx: blocks.RunCtx, is_probe: jnp.ndarray):
-    """One decoder token. caches = scanned DecLayerCaches pytree."""
+                ctx: blocks.RunCtx, is_probe: jnp.ndarray,
+                active: Optional[jnp.ndarray] = None):
+    """One decoder token. caches = scanned DecLayerCaches pytree.
+    `active`: optional (b,) bool — masked slots don't append self-attn KV."""
     x_t = common.embed_lookup(params["embed"], token, ctx=ctx)
+    be = ctx.backend
 
     def layer(x_t, scanned):
         p, (self_cache, cross_cache) = scanned
         h = common.rms_norm(x_t, p["ln1"], cfg.norm_eps)
         position = self_cache.length
         q_t, k_t, v_t = attn.gqa_decode_qkv(p["self_attn"], h, cfg, position)
-        self_cache = kvc.append_token(self_cache, k_t, v_t)
-        dec = kvc.attend_decode(q_t, self_cache)
-        self_cache = kvc.update_probe_state(self_cache, dec.slot_weights, is_probe)
+        self_cache = be.append(self_cache, k_t, v_t, active=active)
+        dec = be.attend(q_t, self_cache)
+        self_cache = be.update_probe(self_cache, dec.slot_weights, is_probe)
         x_t = x_t + jnp.einsum("bhd,hde->be", dec.out, p["self_attn"]["wo"])
 
         hx = common.rms_norm(x_t, p["ln_x"], cfg.norm_eps)
         qx = jnp.einsum("be,ehd->bhd", hx, p["cross_attn"]["wq"])
-        decx = kvc.attend_decode(qx, cross_cache)
-        cross_cache = kvc.update_probe_state(cross_cache, decx.slot_weights, is_probe)
+        decx = be.attend(qx, cross_cache)
+        cross_cache = be.update_probe(cross_cache, decx.slot_weights, is_probe)
         x_t = x_t + jnp.einsum("bhd,hde->be", decx.out, p["cross_attn"]["wo"])
 
         h2 = common.rms_norm(x_t, p["ln2"], cfg.norm_eps)
@@ -194,8 +197,8 @@ def decode_step(params: dict, token: jnp.ndarray, caches: Any, cfg: ArchConfig,
 
 
 def init_caches(cfg: ArchConfig, ctx: blocks.RunCtx, b: int, l_src: int, dtype=jnp.bfloat16):
-    self_cache = kvc.init_cache(ctx.ccfg, b, cfg.n_kv_heads, cfg.hd, ctx.max_cache_len, dtype)
-    cross_cache = kvc.init_cache(ctx.ccfg, b, cfg.n_kv_heads, cfg.hd, l_src, dtype)
+    self_cache = ctx.backend.init_cache(b, cfg.n_kv_heads, cfg.hd, ctx.max_cache_len, dtype)
+    cross_cache = ctx.backend.init_cache(b, cfg.n_kv_heads, cfg.hd, l_src, dtype)
     one = DecLayerCaches(self_cache, cross_cache)
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x[None], (cfg.n_layers, *x.shape)), one)

@@ -184,20 +184,28 @@ def decode_step(
     caches: Any,
     cfg: ArchConfig,
     ctx: blocks.RunCtx,
-    is_probe: jnp.ndarray,     # () bool — Alg. 3 probe-row flag for this step
+    is_probe: jnp.ndarray,     # () or (b,) bool — Alg. 3 probe-row flag(s)
+    active: Optional[jnp.ndarray] = None,  # (b,) bool — live slots mask
 ) -> DecodeOut:
-    """One decode step against the quantized caches (paper Alg. 3)."""
+    """One decode step against the quantized caches (paper Alg. 3).
+
+    Continuous batching: `is_probe` may be per-slot (each request runs the
+    probe schedule on its own token counter) and `active` masks retired/empty
+    slots so they neither append KV nor advance state.
+    """
     x_t = common.embed_lookup(params["embed"], token, ctx=ctx)  # (b, e)
 
     new_prefix = []
     for i, (m, f) in enumerate(_prefix_kinds(cfg)):
         x_t, el = blocks.apply_layer_decode(
-            params["prefix"][f"layer{i}"], x_t, cfg, m, f, caches["prefix"][i], ctx, is_probe)
+            params["prefix"][f"layer{i}"], x_t, cfg, m, f, caches["prefix"][i],
+            ctx, is_probe, active)
         new_prefix.append(el)
 
     def group_fn(x_t, scanned):
         gparams, gcaches = scanned
-        x_t, new_caches = blocks.apply_group_decode(gparams, x_t, cfg, gcaches, ctx, is_probe)
+        x_t, new_caches = blocks.apply_group_decode(
+            gparams, x_t, cfg, gcaches, ctx, is_probe, active)
         return x_t, new_caches
 
     x_t, new_group_caches = jax.lax.scan(
@@ -207,14 +215,19 @@ def decode_step(
     return DecodeOut(logits, {"prefix": new_prefix, "groups": new_group_caches})
 
 
-def recompress_caches(caches: Any, cfg: ArchConfig, ctx: blocks.RunCtx) -> Any:
-    """Streaming recompression across all layers (paper Alg. 3, every 100 tok)."""
+def recompress_caches(caches: Any, cfg: ArchConfig, ctx: blocks.RunCtx,
+                      rows: Optional[jnp.ndarray] = None) -> Any:
+    """Streaming recompression across all layers (paper Alg. 3, every 100 tok).
+
+    rows: optional (b,) bool — recompress only those batch slots (continuous
+    batching runs each request's cadence on its own token counter)."""
     from repro.core import kvcache as kvc
 
     def maybe_recompress(el):
-        return kvc.recompress(ctx.ccfg, el) if isinstance(el, kvc.MixedKVCache) else el
+        if isinstance(el, kvc.MixedKVCache):
+            return ctx.backend.recompress(el, rows=rows)
+        return el
 
-    is_leaf = lambda x: isinstance(x, (kvc.MixedKVCache,)) or hasattr(x, "ssm")
     new_prefix = [maybe_recompress(el) for el in caches["prefix"]]
 
     def group_fn(_, gcaches):
@@ -229,12 +242,11 @@ def init_caches(cfg: ArchConfig, ctx: blocks.RunCtx, b: int, dtype=jnp.bfloat16)
     prefix = []
     for (m, f) in _prefix_kinds(cfg):
         if m in ("attn", "mla"):
-            from repro.core import kvcache as kvc
             if m == "mla":
                 prefix.append(blocks.init_mla_cache(cfg, ctx, b, dtype))
             else:
-                prefix.append(kvc.init_cache(ctx.ccfg, b, cfg.n_kv_heads, cfg.hd,
-                                             ctx.max_cache_len, dtype))
+                prefix.append(ctx.backend.init_cache(
+                    b, cfg.n_kv_heads, cfg.hd, ctx.max_cache_len, dtype))
         else:
             from repro.models import ssm as ssm_mod
             prefix.append(ssm_mod.init_state(cfg, b, dtype))

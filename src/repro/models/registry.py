@@ -51,23 +51,65 @@ def prefill(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, ctx: blocks.
 
 
 def decode_step(params, token: jnp.ndarray, caches: Any, cfg: ArchConfig,
-                ctx: blocks.RunCtx, is_probe: jnp.ndarray):
+                ctx: blocks.RunCtx, is_probe: jnp.ndarray,
+                active: Optional[jnp.ndarray] = None):
+    """is_probe: () or (b,) probe flags; active: optional (b,) live-slot mask
+    (continuous batching — masked slots don't append KV or advance state)."""
     if cfg.encdec:
-        return encdec.decode_step(params, token, caches, cfg, ctx, is_probe)
-    out = lm.decode_step(params, token, caches, cfg, ctx, is_probe)
+        return encdec.decode_step(params, token, caches, cfg, ctx, is_probe, active)
+    out = lm.decode_step(params, token, caches, cfg, ctx, is_probe, active)
     return out.logits, out.caches
 
 
-def recompress(caches: Any, cfg: ArchConfig, ctx: blocks.RunCtx):
-    from repro.core import kvcache as kvc
-
+def recompress(caches: Any, cfg: ArchConfig, ctx: blocks.RunCtx,
+               rows: Optional[jnp.ndarray] = None):
+    """rows: optional (b,) bool — restrict recompression to those slots
+    (per-request cadence, paper Alg. 3 under continuous batching)."""
     if cfg.encdec:
         def fn(_, sc):
             return (), encdec.DecLayerCaches(
-                kvc.recompress(ctx.ccfg, sc.self_cache), sc.cross_cache)
+                ctx.backend.recompress(sc.self_cache, rows=rows), sc.cross_cache)
         _, new = jax.lax.scan(fn, (), caches)
         return new
-    return lm.recompress_caches(caches, cfg, ctx)
+    return lm.recompress_caches(caches, cfg, ctx, rows=rows)
+
+
+def insert_caches(dst: Any, src: Any, slot) -> Any:
+    """Insert a 1-request cache slice into batch row `slot` of a running
+    decode batch (jetstream-style).  Handles both cache layouts: the lm dict
+    ({"prefix": [per-layer], "groups": leaves stacked (G, b, ...)}) and the
+    encdec scanned tree (leaves stacked (L, b, ...)).  Jittable with a traced
+    `slot`; static shapes preserved."""
+    from repro.core import kvcache as kvc
+
+    if isinstance(dst, dict) and "prefix" in dst:
+        prefix = [kvc.tree_update_rows(d, s, slot, axis=0)
+                  for d, s in zip(dst["prefix"], src["prefix"])]
+        groups = kvc.tree_update_rows(dst["groups"], src["groups"], slot, axis=1)
+        return {"prefix": prefix, "groups": groups}
+    return kvc.tree_update_rows(dst, src, slot, axis=1)
+
+
+def free_caches(caches: Any, slot) -> Any:
+    """Retire batch row `slot` across the whole cache tree: invalidate each
+    layer's positions/counters (cheap row writes — see kvcache.free_slot).
+    Non-KV elements (SSM states) are left stale: they are masked while the
+    slot is inactive and fully overwritten by the next insert_caches."""
+    from repro.core import kvcache as kvc
+
+    def fr(el, axis):
+        if isinstance(el, kvc.MixedKVCache):
+            return kvc.free_slot(el, slot, batch_axis=axis)
+        return el
+
+    is_cache = lambda x: isinstance(x, kvc.MixedKVCache)
+    if isinstance(caches, dict) and "prefix" in caches:
+        prefix = [fr(el, 0) for el in caches["prefix"]]
+        groups = jax.tree_util.tree_map(
+            lambda el: fr(el, 1), caches["groups"], is_leaf=is_cache)
+        return {"prefix": prefix, "groups": groups}
+    return jax.tree_util.tree_map(
+        lambda el: fr(el, 1), caches, is_leaf=is_cache)
 
 
 def init_caches(cfg: ArchConfig, ctx: blocks.RunCtx, b: int, l_src: int = 0,

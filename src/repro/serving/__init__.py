@@ -1,1 +1,10 @@
-from repro.serving.engine import ServeConfig, ServingEngine  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    ContinuousEngine,
+    Request,
+    RequestOutput,
+    SamplingParams,
+    ServeConfig,
+    ServingEngine,
+    pack_requests,
+    probe_flag,
+)

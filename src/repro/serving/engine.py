@@ -1,53 +1,174 @@
-"""Batched serving engine with ZipCache streaming compression (paper Alg. 2/3).
+"""Serving engines with ZipCache streaming compression (paper Alg. 2/3).
 
-The engine owns three jitted programs:
-  * prefill_step(params, batch)            -> (last logits, compressed caches)
-  * serve_step(params, caches, tok, probe) -> (logits, caches)   [hot path]
-  * recompress_step(caches)                -> caches              [every N]
+Two engines share the same jitted programs:
 
-and drives the paper's decoding protocol: each step is a probe row iff
-`i % 100 > 95 or hash-random < 5%` (Alg. 3's "5% recent + 5% random"), and the
-staging window folds back into the quantized stores every
-`recompress_interval` tokens.
+  * ``ServingEngine``    — the lockstep batch path: one packed batch prefills
+    together and decodes for a fixed number of steps (benchmarks, quality
+    evals, and the reference for engine-equivalence tests).
+  * ``ContinuousEngine`` — continuous batching: an explicit request lifecycle
+    (``submit -> step/run -> result``) over a fixed number of decode *slots*.
+    Each slot holds one request; a new request prefills on its own (batch=1)
+    and its compressed cache slice is ``insert``-ed into the running decode
+    batch (jetstream-style), a finished request ``free``-s its slot.  All
+    jitted programs keep static shapes — inactive slots are masked, never
+    sliced away — so the engine stays pjit/TPU-compatible.
 
-Batching: the request queue packs requests into fixed-shape batches (static
-shapes are non-negotiable on TPU); short prompts left-pad into the batch.
+Per-request cadence (paper Alg. 3 under continuous batching): every slot
+carries its own token counter; probe rows and window recompression fire on
+that counter, not on a global step, so a request admitted mid-run sees
+exactly the schedule it would have seen in a fresh lockstep run — the basis
+of the token-equivalence guarantee (see tests/test_serving.py).
+
+The jitted programs:
+  * prefill(params, batch)                          -> (last logits, caches)
+  * decode(params, tok, caches, probes, active)     -> (logits, caches)
+  * insert(caches, slice, slot)  /  free == insert(empty slice)
+  * recompress(caches, rows)                        -> caches
+  * sample(logits, temps, seeds, counters)          -> tokens
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import itertools
 import time
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core import saliency as sal
+from repro.core import backend as backend_lib
 from repro.core.policy import CompressionConfig
 from repro.launch import steps as steps_lib
-from repro.models import blocks, registry
+from repro.models import registry
 
+
+# ---------------------------------------------------------------------------
+# Probe schedule (paper Alg. 3)
+# ---------------------------------------------------------------------------
+
+def probe_flag(counter: int, interval: int, seed: int = 0) -> bool:
+    """Deterministic per-request probe schedule: the most recent ~5% of each
+    recompress interval plus a hashed pseudo-random ~5% of steps.
+
+    Keyed on the request's OWN token counter (not the global engine step) so
+    lockstep and continuous engines agree token-for-token regardless of when
+    a request was admitted.
+    """
+    n_recent = max(interval // 20, 1)
+    recent = (counter % interval) >= interval - n_recent
+    h = (counter * 2654435761 + seed * 40503 + 12345) & 0xFFFFFFFF
+    rand = ((h >> 8) % 100) < 5
+    return bool(recent or rand)
+
+
+# ---------------------------------------------------------------------------
+# Request lifecycle types
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    batch_size: int
-    prompt_len: int
-    max_new_tokens: int = 128
-    greedy: bool = True
+    batch_size: int                  # decode slots
+    prompt_len: int                  # static prompt capacity (left-padded)
+    max_new_tokens: int = 128        # decode budget (cache sized for this)
+    seed: int = 0
+    # sampling is per-request (SamplingParams); the lockstep generate() path
+    # is always greedy — it is the reference the continuous engine is
+    # verified token-identical against
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling: temperature 0 = greedy; seed makes sampled
+    requests reproducible independent of slot placement/admission step."""
+    temperature: float = 0.0
     seed: int = 0
 
 
 @dataclasses.dataclass
 class Request:
-    tokens: np.ndarray            # (prompt_len,) int32 (pre-padded)
-    generated: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+    """One generation request.
+
+    tokens: (<= prompt_len,) int32 prompt ids (left-padded on admission).
+    max_new_tokens: per-request budget, capped by ServeConfig.max_new_tokens.
+    stop_tokens: generation stops when one of these is produced (EOS).
+    """
+    tokens: np.ndarray
+    id: Optional[str] = None
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    max_new_tokens: Optional[int] = None
+    stop_tokens: Tuple[int, ...] = ()
 
 
-class ServingEngine:
+@dataclasses.dataclass
+class RequestOutput:
+    id: str
+    tokens: np.ndarray               # (n_generated,) int32, stop token included
+    finish_reason: str               # "stop" | "length"
+    timings: Dict[str, float]
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Engine-internal per-slot decode state."""
+    request: Request
+    generated: List[int]
+    steps: int = 0                   # decode steps done (probe counter)
+    since_rc: int = 0                # tokens since last recompression
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    prefill_s: float = 0.0
+
+
+def pack_requests(requests: Sequence[np.ndarray], batch_size: int,
+                  prompt_len: int, pad_id: int = 0) -> np.ndarray:
+    """Left-pad + stack request prompts into a fixed-shape batch.
+
+    Raises on overflow instead of silently truncating/dropping: too-long
+    prompts and over-batch request lists are an admission-control decision
+    (queue them), not something to lose data over.
+    """
+    if len(requests) > batch_size:
+        raise ValueError(
+            f"{len(requests)} requests exceed batch_size {batch_size}; "
+            "queue the surplus (ContinuousEngine.submit) instead")
+    out = np.full((batch_size, prompt_len), pad_id, np.int32)
+    for i, r in enumerate(requests):
+        r = np.asarray(r)
+        if r.shape[-1] > prompt_len:
+            raise ValueError(
+                f"prompt of {r.shape[-1]} tokens exceeds prompt_len {prompt_len}")
+        out[i, prompt_len - len(r):] = r
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Jitted sampling
+# ---------------------------------------------------------------------------
+
+def _sample_tokens(logits: jnp.ndarray, temps: jnp.ndarray,
+                   seeds: jnp.ndarray, counters: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot greedy/temperature sampling, (b, vocab) -> (b,) int32.
+
+    Keys derive from (request seed, token counter) so a request's sample
+    stream is independent of its slot index and admission step.
+    """
+    keys = jax.vmap(lambda s, c: jax.random.fold_in(jax.random.PRNGKey(s), c))(
+        seeds, counters)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temps, 1e-3)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
+# ---------------------------------------------------------------------------
+# Shared jitted-program bundle
+# ---------------------------------------------------------------------------
+
+class _EngineBase:
     def __init__(self, cfg: ArchConfig, ccfg: CompressionConfig, scfg: ServeConfig,
                  params, mesh=None):
         self.cfg = cfg
@@ -64,14 +185,42 @@ class ServingEngine:
             lambda p, t, c, ip: registry.decode_step(p, t, c, cfg, self.ctx, ip))
         self._recompress = jax.jit(
             lambda c: registry.recompress(c, cfg, self.ctx))
-        self._rng = np.random.default_rng(scfg.seed)
+        # continuous-batching program family, built from the shared step
+        # factories (launch/steps.py) over the same serving ctx
+        self._decode_masked = jax.jit(steps_lib.make_continuous_decode_step(
+            cfg, shape, mesh, ccfg, ctx=self.ctx)[0])
+        self._insert = jax.jit(steps_lib.make_insert_step(
+            cfg, shape, mesh, ccfg, ctx=self.ctx)[0])
+        self._recompress_rows = jax.jit(steps_lib.make_recompress_rows_step(
+            cfg, shape, mesh, ccfg, ctx=self.ctx)[0])
+        self._sample = jax.jit(_sample_tokens)
 
     # ------------------------------------------------------------------
+    def cache_bytes(self, caches) -> Dict[str, int]:
+        """Packed KV payload vs bookkeeping overhead, reported separately.
+
+        The packed number is what compression ratios are computed from
+        (TokenStore.nbytes_packed: bit-packed codes + quantization params +
+        the bf16 staging window); pos/acc/nnz saliency state and counters
+        are overhead, and SSM states count entirely as overhead.
+        """
+        return backend_lib.cache_bytes(caches)
+
+
+# ---------------------------------------------------------------------------
+# Lockstep engine (reference path)
+# ---------------------------------------------------------------------------
+
+class ServingEngine(_EngineBase):
+    """Lockstep batch generation: all requests prefill together and decode
+    the same number of steps.  Kept as the reference implementation the
+    continuous engine is verified against, and for throughput benchmarks
+    where requests are homogeneous by construction."""
+
     def _is_probe(self, i: int) -> bool:
-        """Paper Alg. 3: 5% most-recent + 5% random decode rows are probes."""
-        interval = self.ccfg.recompress_interval
-        return (i % interval) > interval - max(interval // 20, 1) \
-            or self._rng.random() < 0.05
+        """Paper Alg. 3 probe schedule on the global (= per-request, since
+        all requests start together) token counter."""
+        return probe_flag(i, self.ccfg.recompress_interval, self.scfg.seed)
 
     def generate(self, batch: Dict[str, np.ndarray],
                  max_new_tokens: Optional[int] = None) -> Dict[str, np.ndarray]:
@@ -80,7 +229,7 @@ class ServingEngine:
         batch: {"tokens": (b, prompt_len) int32[, "frontend_embeds": ...]}
         Returns {"tokens": (b, n_new) int32, "timings": {...}}.
         """
-        n_new = max_new_tokens or self.scfg.max_new_tokens
+        n_new = max_new_tokens if max_new_tokens is not None else self.scfg.max_new_tokens
         t0 = time.perf_counter()
         jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
         logits, caches = self._prefill(self.params, jbatch)
@@ -102,26 +251,231 @@ class ServingEngine:
                 since_recompress = 0
         tok.block_until_ready()
         t_decode = time.perf_counter() - t1
+        self.last_caches = caches
         return {
             "tokens": np.stack(outs, axis=1),
             "timings": {"prefill_s": t_prefill, "decode_s": t_decode,
                         "tok_per_s": n_new * self.scfg.batch_size / max(t_decode, 1e-9)},
         }
 
+
+# ---------------------------------------------------------------------------
+# Continuous-batching engine
+# ---------------------------------------------------------------------------
+
+class ContinuousEngine(_EngineBase):
+    """Continuous batching over a fixed slot count.
+
+    Lifecycle::
+
+        eng = ContinuousEngine(cfg, ccfg, scfg, params)
+        rid = eng.submit(Request(tokens=prompt, stop_tokens=(eos,)))
+        while eng.pending:              # or eng.run()
+            eng.step()                  # admit / decode one token / retire
+        out = eng.result(rid)           # RequestOutput
+
+    The decode batch never changes shape: admission prefills one request
+    (batch=1) and inserts its cache slice into a free slot of the running
+    caches; retirement invalidates the slot's row (free_caches).  Inactive
+    slots decode garbage that is fully masked (their caches are invalid
+    everywhere, their appends dropped) — the price of static shapes on TPU.
+    """
+
+    def __init__(self, cfg: ArchConfig, ccfg: CompressionConfig, scfg: ServeConfig,
+                 params, mesh=None):
+        if cfg.encdec or cfg.frontend != "none":
+            raise NotImplementedError(
+                "ContinuousEngine currently serves decoder-only text models; "
+                "use the lockstep ServingEngine for encdec/frontend archs")
+        if getattr(cfg, "n_experts", 0):
+            # Capacity-slotted MoE dispatch flattens all batch rows into one
+            # token stream: garbage tokens from inactive slots would compete
+            # with live requests for expert capacity, breaking the per-row
+            # isolation (and the token-equivalence guarantee).  Needs
+            # active-masked routing before continuous batching is sound.
+            raise NotImplementedError(
+                "ContinuousEngine does not yet support MoE archs: expert "
+                "capacity is shared across batch rows, so inactive slots are "
+                "not isolated; use the lockstep ServingEngine")
+        super().__init__(cfg, ccfg, scfg, params, mesh)
+        self.caches = registry.init_caches(cfg, self.ctx, scfg.batch_size)
+        self._free_slot = jax.jit(registry.free_caches)
+        self.slots: List[Optional[_Slot]] = [None] * scfg.batch_size
+        self.queue: Deque[Request] = collections.deque()
+        self.results: Dict[str, RequestOutput] = {}
+        self._ids = itertools.count()
+        self._step_no = 0
+
     # ------------------------------------------------------------------
-    def cache_bytes(self, caches) -> int:
-        """Actual packed bytes of all layer caches (compression-ratio report)."""
-        total = 0
-        for leaf in jax.tree_util.tree_leaves(caches):
-            total += leaf.size * leaf.dtype.itemsize
-        return int(total)
+    # lifecycle API
+    # ------------------------------------------------------------------
 
+    @property
+    def pending(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
 
-def pack_requests(requests: List[np.ndarray], batch_size: int, prompt_len: int,
-                  pad_id: int = 0) -> np.ndarray:
-    """Left-pad + stack request prompts into a fixed-shape batch."""
-    out = np.full((batch_size, prompt_len), pad_id, np.int32)
-    for i, r in enumerate(requests[:batch_size]):
-        r = r[-prompt_len:]
-        out[i, prompt_len - len(r):] = r
-    return out
+    def submit(self, request: Request) -> str:
+        """Validate + enqueue a request; returns its id.  Raises on prompts
+        or budgets that can never fit the engine's static shapes."""
+        n = int(np.asarray(request.tokens).shape[-1])
+        if n > self.scfg.prompt_len:
+            raise ValueError(
+                f"prompt of {n} tokens exceeds engine prompt_len "
+                f"{self.scfg.prompt_len}")
+        if request.max_new_tokens is not None and not (
+                1 <= request.max_new_tokens <= self.scfg.max_new_tokens):
+            raise ValueError(
+                f"max_new_tokens {request.max_new_tokens} outside the "
+                f"engine's [1, {self.scfg.max_new_tokens}] decode budget")
+        if request.id is None:
+            rid = f"req-{next(self._ids)}"
+            while self.poll(rid) != "unknown":  # user ids may shadow auto ids
+                rid = f"req-{next(self._ids)}"
+            request.id = rid
+        elif self.poll(request.id) != "unknown":
+            raise ValueError(
+                f"request id {request.id!r} already submitted; ids must be "
+                "unique (re-submitting the same Request object counts)")
+        request._t_submit = time.perf_counter()
+        self.queue.append(request)
+        return request.id
+
+    def poll(self, request_id: str) -> str:
+        """'queued' | 'running' | 'done' | 'unknown'."""
+        if request_id in self.results:
+            return "done"
+        if any(s is not None and s.request.id == request_id for s in self.slots):
+            return "running"
+        if any(r.id == request_id for r in self.queue):
+            return "queued"
+        return "unknown"
+
+    def result(self, request_id: str) -> Optional[RequestOutput]:
+        return self.results.get(request_id)
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[str, RequestOutput]:
+        """Drive the scheduler until every submitted request finished."""
+        steps = 0
+        while self.pending:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return self.results
+
+    # ------------------------------------------------------------------
+    # scheduler internals
+    # ------------------------------------------------------------------
+
+    def free(self, slot_id: int) -> None:
+        """Retire a slot: invalidate its batch row (cheap row writes; stale
+        codes are masked by pos == -1 until the next insert overwrites them)."""
+        self.caches = self._free_slot(self.caches,
+                                      jnp.asarray(slot_id, jnp.int32))
+        self.slots[slot_id] = None
+
+    def _retire(self, slot_id: int, reason: str) -> None:
+        s = self.slots[slot_id]
+        now = time.perf_counter()
+        decode_s = max(now - s.t_admit - s.prefill_s, 1e-9)
+        self.results[s.request.id] = RequestOutput(
+            id=s.request.id,
+            tokens=np.asarray(s.generated, np.int32),
+            finish_reason=reason,
+            timings={
+                "queued_s": s.t_admit - s.t_submit,
+                "prefill_s": s.prefill_s,
+                "decode_s": decode_s,
+                "tok_per_s": len(s.generated) / decode_s,
+            })
+        self.free(slot_id)
+
+    def _maybe_finish(self, slot_id: int) -> bool:
+        s = self.slots[slot_id]
+        budget = (s.request.max_new_tokens
+                  if s.request.max_new_tokens is not None
+                  else self.scfg.max_new_tokens)
+        if s.generated and s.generated[-1] in s.request.stop_tokens:
+            self._retire(slot_id, "stop")
+            return True
+        if len(s.generated) >= budget:
+            self._retire(slot_id, "length")
+            return True
+        return False
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue: prefill (batch=1), sample the
+        first token, insert the compressed cache slice into the batch row."""
+        for slot_id in range(self.scfg.batch_size):
+            if not self.queue:
+                return
+            if self.slots[slot_id] is not None:
+                continue
+            req = self.queue.popleft()
+            t0 = time.perf_counter()
+            prompt = pack_requests([req.tokens], 1, self.scfg.prompt_len)
+            logits, slice_caches = self._prefill(
+                self.params, {"tokens": jnp.asarray(prompt)})
+            self.caches = self._insert(self.caches, slice_caches,
+                                       jnp.asarray(slot_id, jnp.int32))
+            first = int(np.asarray(self._sample(
+                logits,
+                jnp.asarray([req.sampling.temperature], jnp.float32),
+                jnp.asarray([req.sampling.seed], jnp.int32),
+                jnp.asarray([0], jnp.int32)))[0])
+            t1 = time.perf_counter()
+            self.slots[slot_id] = _Slot(
+                request=req, generated=[first],
+                t_submit=getattr(req, "_t_submit", t0), t_admit=t0,
+                prefill_s=t1 - t0)
+            self._maybe_finish(slot_id)
+
+    def step(self) -> int:
+        """One scheduler iteration: admit, decode one token for every active
+        slot, retire finished requests, fold windows on per-slot cadence.
+        Returns the number of slots that decoded."""
+        self._admit()
+        b = self.scfg.batch_size
+        active_ids = [i for i in range(b) if self.slots[i] is not None]
+        if not active_ids:
+            return 0
+        interval = self.ccfg.recompress_interval
+
+        tok = np.zeros(b, np.int32)
+        probes = np.zeros(b, bool)
+        act = np.zeros(b, bool)
+        temps = np.zeros(b, np.float32)
+        seeds = np.zeros(b, np.int32)
+        counters = np.zeros(b, np.int32)
+        for i in active_ids:
+            s = self.slots[i]
+            tok[i] = s.generated[-1]
+            probes[i] = probe_flag(s.steps, interval, self.scfg.seed)
+            act[i] = True
+            temps[i] = s.request.sampling.temperature
+            seeds[i] = s.request.sampling.seed
+            counters[i] = len(s.generated)
+
+        logits, self.caches = self._decode_masked(
+            self.params, self.caches, jnp.asarray(tok),
+            jnp.asarray(probes), jnp.asarray(act))
+        nxt = np.asarray(self._sample(
+            logits, jnp.asarray(temps), jnp.asarray(seeds),
+            jnp.asarray(counters)))
+
+        due = np.zeros(b, bool)
+        for i in active_ids:
+            s = self.slots[i]
+            s.steps += 1
+            s.since_rc += 1
+            s.generated.append(int(nxt[i]))
+            if self._maybe_finish(i):
+                continue
+            if s.since_rc >= interval:
+                due[i] = True
+        if due.any():
+            self.caches = self._recompress_rows(self.caches, jnp.asarray(due))
+            for i in np.flatnonzero(due):
+                self.slots[i].since_rc = 0
+        self._step_no += 1
+        return len(active_ids)

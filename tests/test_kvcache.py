@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev extra absent: only the property tests skip
+    from tests._hypothesis_stub import given, settings, st
 
 from repro.core import kvcache as kvc
 from repro.core.policy import CompressionConfig
@@ -87,7 +90,7 @@ def test_append_and_recompress_roundtrip(rng):
     n_valid_before = int(cache.hi.valid.sum() + cache.lo.valid.sum()
                          + (cache.win_pos >= 0).sum())
     cache2 = kvc.recompress(cfg, cache)
-    assert int(cache2.win_fill) == 0
+    assert (np.asarray(cache2.win_fill) == 0).all()  # per-row fill counters
     n_valid_after = int(cache2.hi.valid.sum() + cache2.lo.valid.sum())
     assert n_valid_after == n_valid_before == 48 * 2
     # all positions preserved exactly once per batch row
@@ -95,6 +98,40 @@ def test_append_and_recompress_roundtrip(rng):
         [np.asarray(cache2.hi.pos[0]), np.asarray(cache2.lo.pos[0])]))
     pos = pos[pos >= 0]
     np.testing.assert_array_equal(pos, np.arange(48))
+
+
+def test_kivi_append_after_prefill_lands_in_window(rng):
+    """KIVI prefill stages the last fp_window tokens raw; the window must
+    still have staging room so the next decoded token is attendable (a full
+    window would silently drop appends until the next recompression)."""
+    cfg = dataclasses.replace(CompressionConfig.kivi(fp_window=8),
+                              recompress_interval=8)
+    k, v, _ = _mk_kv(rng, l=32)
+    cache = kvc.compress_prefill(cfg, k, v, None, max_len=48, dtype=jnp.float32)
+    assert (np.asarray(cache.win_fill) < cache.window).all()
+    kt = jnp.asarray(rng.normal(size=(2, 2, 16)).astype(np.float32))
+    cache2 = kvc.append_token(cache, kt, kt * 0.5)
+    assert 32 in np.asarray(cache2.win_pos[0]).tolist()  # new pos attendable
+    assert (np.asarray(cache2.length) == 33).all()
+
+
+def test_free_slot_invalidates_only_that_row(rng):
+    """free_slot retires one batch row (pos -1, counters 0) and leaves the
+    others bit-identical; insert_slot restores the row from a b=1 slice."""
+    cfg = dataclasses.replace(CompressionConfig.zipcache(saliency_ratio=0.4),
+                              fp_window=8, recompress_interval=8)
+    k, v, s = _mk_kv(rng, l=40)
+    cache = kvc.compress_prefill(cfg, k, v, s, max_len=56, dtype=jnp.float32)
+    freed = jax.jit(kvc.free_slot)(cache, 1)
+    assert int((freed.hi.pos[1] >= 0).sum() + (freed.lo.pos[1] >= 0).sum()) == 0
+    assert int(freed.length[1]) == 0 and int(freed.win_fill[1]) == 0
+    np.testing.assert_array_equal(np.asarray(freed.hi.pos[0]),
+                                  np.asarray(cache.hi.pos[0]))
+    src = kvc.compress_prefill(cfg, k[1:2], v[1:2], s[1:2], max_len=56,
+                               dtype=jnp.float32)
+    back = jax.jit(kvc.insert_slot)(freed, src, 1)
+    np.testing.assert_array_equal(np.asarray(back.hi.pos[1]),
+                                  np.asarray(src.hi.pos[0]))
 
 
 def test_recompress_moves_salient_tokens_to_hi(rng):

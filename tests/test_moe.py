@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev extra absent: only the property tests skip
+    from tests._hypothesis_stub import given, settings, st
 
 from repro import configs
 from repro.models import mlp as M
