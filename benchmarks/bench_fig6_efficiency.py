@@ -121,6 +121,54 @@ def run():
     # ---- measured (CPU): continuous batching vs lockstep, ragged budgets
     run_continuous_vs_lockstep()
 
+    # ---- measured (CPU): mixed vs paged cache layout, slot-level ops
+    run_backend_ops()
+
+
+def run_backend_ops():
+    """Mixed vs paged cache layout on the continuous-batching hot ops:
+    slot insert (admission), slot free (retirement), and the staggered
+    recompression of ONE due slot.  The mixed layout rewrites full-batch
+    leaves (insert) and recomputes the whole batch to fold one row
+    (recompress rows-mask); the paged layout scatters onto one slot's pages
+    and runs a batch=1 per-slot program."""
+    import jax.numpy as jnp
+
+    from repro.core import backend as backend_lib
+    from repro.core.policy import CompressionConfig
+
+    ccfg = CompressionConfig.zipcache()
+    b, hk, l, d, max_len = 8, 4, 512, 64, 640
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(b, hk, l, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, hk, l, d)).astype(np.float32))
+    s = jnp.asarray(rng.uniform(size=(b, l)).astype(np.float32))
+    onehot = jnp.arange(b) == 0
+
+    for kind in ("mixed", "paged"):
+        be = backend_lib.of(ccfg, kind=kind, page_size=64)
+        cache = be.compress_prefill(k, v, s, max_len)
+        slc = be.compress_prefill(k[:1], v[:1], s[:1], max_len)
+        slot = jnp.asarray(0, jnp.int32)
+        ins = jax.jit(be.insert)
+        fre = jax.jit(be.free)
+        if kind == "paged":
+            rc1 = jax.jit(be.recompress_slot)
+            jax.block_until_ready(rc1(cache, slot))  # compile
+            t_rc = common.timeit(lambda: jax.block_until_ready(rc1(cache, slot)), n=5)
+        else:
+            rcm = jax.jit(lambda c, r: be.recompress(c, rows=r))
+            jax.block_until_ready(rcm(cache, onehot))
+            t_rc = common.timeit(lambda: jax.block_until_ready(rcm(cache, onehot)), n=5)
+        jax.block_until_ready(ins(cache, slc, slot))
+        jax.block_until_ready(fre(cache, slot))
+        t_ins = common.timeit(lambda: jax.block_until_ready(ins(cache, slc, slot)), n=10)
+        t_fre = common.timeit(lambda: jax.block_until_ready(fre(cache, slot)), n=10)
+        pk, ov = be.nbytes(cache)
+        common.emit(f"fig6.backend_ops.{kind}", t_ins,
+                    f"free_s:{t_fre:.2e};recompress1_s:{t_rc:.2e};"
+                    f"packed_B:{pk};overhead_B:{ov}")
+
 
 def run_continuous_vs_lockstep():
     """Ragged workload: N requests with budgets 4..max_new over `slots`

@@ -19,7 +19,17 @@ for every active slot, and folds each slot's staging window on its OWN
 counter (paper Alg. 3 per request).  A lockstep `ServingEngine` pass runs
 after it for the per-policy throughput comparison.
 
+Choosing a backend (--backend): "mixed" keeps the cache as dense per-slot
+arrays (mesh-shardable, the default); "paged" stores the payload in
+fixed-size pages behind per-slot page tables, so admitting/retiring a
+request touches only that slot's pages and each slot's staging window folds
+with a per-slot program — at the cost of gathering pages into a dense view
+for each decode step's attention (mixed reads in place).  Greedy output is
+token-identical either way (tests/test_backend_conformance.py) — pick paged
+when slots churn a lot, mixed for steady batches or mesh sharding.
+
     PYTHONPATH=src python examples/serve_zipcache.py [--arch yi-6b]
+                                                     [--backend paged]
 """
 
 import argparse
@@ -41,6 +51,10 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--backend", default="mixed", choices=("mixed", "paged"),
+                    help="KV cache layout (token-identical greedy output; "
+                         "paged = page-local slot insert/free)")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = configs.get_arch(args.arch, smoke=True)  # reduced config: CPU-friendly
@@ -49,11 +63,13 @@ def main():
     ccfg = dataclasses.replace(CompressionConfig.zipcache(),
                                fp_window=16, recompress_interval=16)
     scfg = ServeConfig(batch_size=args.slots, prompt_len=args.prompt_len,
-                       max_new_tokens=args.max_new)
+                       max_new_tokens=args.max_new,
+                       backend=args.backend, page_size=args.page_size)
 
     # ---- continuous batching: more requests than slots, mixed budgets ----
     print(f"== continuous serving {args.arch} (reduced config): "
-          f"{args.requests} requests over {args.slots} slots")
+          f"{args.requests} requests over {args.slots} slots, "
+          f"backend={args.backend}")
     eng = ContinuousEngine(cfg, ccfg, scfg, params)
     rids = []
     for i in range(args.requests):

@@ -168,6 +168,14 @@ class ShapeConfig:
     seq_len: int
     global_batch: int
     kind: str  # train | prefill | decode
+    # KV cache layout for serving shapes (core/backend.py `of`):
+    #   "mixed" — dense per-slot arrays (the default, shardable over a mesh)
+    #   "paged" — page-pool payload behind per-slot page tables (cheap
+    #             slot insert/free + per-slot recompress; single-host today)
+    cache_backend: str = "mixed"
+    page_size: int = 64  # tokens per page ("paged" only; trade-off: small
+    #                      pages waste less partial-page capacity, large
+    #                      pages amortize page-table addressing
 
 
 SHAPES = {

@@ -114,28 +114,65 @@ class MixedKVBackend:
     def free(self, cache, slot):
         return kvc.free_slot(cache, slot)
 
+    def dense(self, cache) -> kvc.MixedKVCache:
+        """Identity: the mixed layout IS the dense layout (consumers that
+        read cache internals — MLA's absorbed decode — call this so paged
+        caches can hand them a gathered view instead)."""
+        return cache
+
     def nbytes(self, cache) -> Tuple[int, int]:
         packed = cache.nbytes_packed()
         return int(packed), int(cache.nbytes_total() - packed)
 
 
-def of(ccfg: Optional[CompressionConfig]) -> Optional[MixedKVBackend]:
-    """Backend for a policy config (None passes through for train-only ctxs)."""
-    return MixedKVBackend(ccfg) if ccfg is not None else None
+BACKEND_KINDS = ("mixed", "paged")
+
+
+def of(ccfg: Optional[CompressionConfig], kind: str = "mixed",
+       page_size: Optional[int] = None):
+    """Backend for a policy config (None passes through for train-only ctxs).
+
+    kind: "mixed" (dense per-slot layout, core/kvcache.py) or "paged"
+    (page-pool layout behind per-slot page tables, core/paged.py).
+    """
+    if ccfg is None:
+        return None
+    if kind == "mixed":
+        return MixedKVBackend(ccfg)
+    if kind == "paged":
+        from repro.core import paged
+        return paged.PagedKVBackend(
+            ccfg, page_size=page_size if page_size else paged.DEFAULT_PAGE_SIZE)
+    raise ValueError(f"unknown cache backend {kind!r}; one of {BACKEND_KINDS}")
+
+
+def kv_cache_types() -> tuple:
+    """The concrete per-layer KV cache classes (for isinstance dispatch in
+    tree walks; SSM states and raw staging trees are everything else)."""
+    from repro.core import paged
+    return (kvc.MixedKVCache, paged.PagedKVCache)
+
+
+def is_kv_cache(x) -> bool:
+    return isinstance(x, kv_cache_types())
 
 
 def cache_bytes(caches) -> dict:
     """Walk an arbitrary cache tree (stacked layer/group axes included) and
     report packed KV payload vs bookkeeping overhead separately.
 
-    Non-MixedKVCache elements (SSM states, raw staging trees) count entirely
-    as overhead — they are not compressed payload.
+    Both cache layouts report through the same accounting: packed = payload
+    (codes/pages + quantization params + staging window), overhead = position/
+    saliency/counter state plus — for the paged layout — the page tables.
+    Non-KV-cache elements (SSM states, raw staging trees) count entirely as
+    overhead — they are not compressed payload.
     """
+    types = kv_cache_types()
     flat = jax.tree_util.tree_flatten(
-        caches, is_leaf=lambda x: isinstance(x, kvc.MixedKVCache))[0]
+        caches, is_leaf=lambda x: isinstance(x, types))[0]
     packed = overhead = 0
     for el in flat:
-        if isinstance(el, kvc.MixedKVCache):
+        if isinstance(el, types):
             p = el.nbytes_packed()
             packed += p
             overhead += el.nbytes_total() - p

@@ -1,0 +1,572 @@
+"""Paged KV cache layout: the second `CacheBackend` implementation.
+
+`MixedKVCache` stores every segment (hi/lo quantized stores, bf16 staging
+window) as one dense per-slot array, so slot-level `insert`/`free` in the
+continuous-batching engine are row writes across every payload leaf of the
+full batch cache.  `PagedKVCache` splits the layout jetstream/vLLM-style:
+
+  * the BULKY payload — bit-packed code blocks and the bf16 staging window —
+    lives in fixed-size pages drawn from per-segment page pools
+    (``(n_pages, h_kv, page_size, channels)``, physical page axis leading);
+  * each batch slot addresses its pages through a per-slot **page table**
+    (``(b, pages_per_slot)`` int32 physical page ids), so `insert`/`free`/
+    `append` touch only one slot's pages instead of rewriting the batch;
+  * the SMALL quantization metadata (ZipCache's channel-separable tokenwise
+    design keeps it to per-token scales + per-channel normalizers), position/
+    saliency state and the per-slot counters stay dense ``(b, ...)`` arrays —
+    they are bookkeeping, reported as overhead by `nbytes`.
+
+Numerical contract: every operation is implemented so the *logical dense
+view* (`dense_view`, gathering pages back into a `MixedKVCache`) evolves
+bit-identically to the mixed backend under the same operation sequence —
+quantization granularity is per-slot exactly as in `core/kvcache.py`, never
+per-page.  That is what makes greedy engine output token-identical across
+backends (tests/test_backend_conformance.py).
+
+Beyond the protocol, `PagedKVBackend.recompress_slot(cache, slot)` folds ONE
+slot's staging pages by gathering that slot into a batch=1 dense view and
+recompressing at 1/batch the FLOPs of the full-batch program — removing the
+`slots`x worst-case penalty of `recompress(rows=...)` under staggered
+admission (ROADMAP §Serving).  Every per-token recompression op is
+row-independent, so the b=1 result is bitwise the full-batch row.
+
+Static shapes throughout: page tables are fixed-size (pages are pre-assigned
+round-robin across slots at init — slot s's j-th page is physical page
+``j*b + s``, deliberately non-contiguous so nothing can shortcut the table),
+`slot` operands stay traced, and capacities are padded UP to whole pages —
+the page-size trade-off is internal fragmentation of at most
+``page_size - 1`` tokens per segment per slot, visible in `nbytes`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvcache as kvc
+from repro.core import quant
+from repro.core.policy import CompressionConfig
+
+DEFAULT_PAGE_SIZE = 64
+
+
+def n_pages(capacity: int, page_size: int) -> int:
+    """Pages needed for `capacity` tokens (last page may be partial)."""
+    return -(-capacity // page_size) if capacity else 0
+
+
+def _strided_table(b: int, npp: int) -> jnp.ndarray:
+    """Round-robin page assignment: slot s's j-th page is physical j*b + s."""
+    return (jnp.arange(npp, dtype=jnp.int32)[None, :] * b
+            + jnp.arange(b, dtype=jnp.int32)[:, None])
+
+
+# ---------------------------------------------------------------------------
+# Pool <-> dense-token-axis conversion
+# ---------------------------------------------------------------------------
+
+def _paginate(dense: jnp.ndarray, page_size: int) -> jnp.ndarray:
+    """(b, h, S, c) -> (b, npp, h, page, c), zero-padding the token axis."""
+    b, h, s, c = dense.shape
+    npp = n_pages(s, page_size)
+    pad = npp * page_size - s
+    x = jnp.pad(dense, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    x = x.reshape(b, h, npp, page_size, c)
+    return jnp.swapaxes(x, 1, 2)
+
+
+def _gather_dense(pages: jnp.ndarray, table: jnp.ndarray, capacity: int) -> jnp.ndarray:
+    """Pages (P, h, page, c) via table (b, npp) -> dense (b, h, capacity, c)."""
+    b, npp = table.shape
+    _, h, page, c = pages.shape
+    g = pages[table]                      # (b, npp, h, page, c)
+    g = jnp.swapaxes(g, 1, 2)             # (b, h, npp, page, c)
+    return g.reshape(b, h, npp * page, c)[:, :, :capacity]
+
+
+def _scatter_dense(pages: jnp.ndarray, table: jnp.ndarray, dense: jnp.ndarray,
+                   rows: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Write dense (b, h, S, c) into the pool at each slot's table pages.
+
+    `rows`: optional (b,) bool — rows where it is False write nothing (their
+    table entries are redirected out of bounds and dropped)."""
+    if table.shape[1] == 0:
+        return pages
+    tbl = table
+    if rows is not None:
+        tbl = jnp.where(rows[:, None], table, pages.shape[0])
+    upd = _paginate(dense.astype(pages.dtype), pages.shape[2])
+    return pages.at[tbl].set(upd, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# PagedStore
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedStore:
+    """One quantized token store, paged.
+
+    k_pages/v_pages hold the payload (packed int8 codes, or raw bf16 when
+    bits >= 16) in physical pages; `table` maps (slot, logical page) ->
+    physical page; `k_meta`/`v_meta` are `QuantizedTensor`s with
+    ``codes=None`` — per-slot quantization parameters only (the codes live
+    in the pools); pos/acc/nnz are the dense per-slot saliency state,
+    identical to `TokenStore`'s.
+    """
+
+    k_pages: jnp.ndarray          # (P, h_kv, page, ck)
+    v_pages: jnp.ndarray          # (P, h_kv, page, cv)
+    table: jnp.ndarray            # (b, npp) int32
+    k_meta: quant.QuantizedTensor
+    v_meta: quant.QuantizedTensor
+    pos: jnp.ndarray              # (b, S) int32, -1 = empty
+    acc: jnp.ndarray              # (b, S) f32
+    nnz: jnp.ndarray              # (b, S) f32
+
+    def tree_flatten(self):
+        return ((self.k_pages, self.v_pages, self.table, self.k_meta,
+                 self.v_meta, self.pos, self.acc, self.nnz), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.pos.shape[-1]
+
+    @property
+    def valid(self) -> jnp.ndarray:
+        return self.pos >= 0
+
+    def dense(self) -> kvc.TokenStore:
+        """Gather pages back into the logical `TokenStore` (exact layout)."""
+        k = dataclasses.replace(
+            self.k_meta,
+            codes=_gather_dense(self.k_pages, self.table, self._codes_cap(self.k_meta)))
+        v = dataclasses.replace(
+            self.v_meta,
+            codes=_gather_dense(self.v_pages, self.table, self._codes_cap(self.v_meta)))
+        return kvc.TokenStore(k, v, self.pos, self.acc, self.nnz)
+
+    def _codes_cap(self, meta: quant.QuantizedTensor) -> int:
+        # codes token axis == logical token axis (packing is channelwise)
+        return meta.shape[-2]
+
+    def nbytes_packed(self) -> int:
+        """Payload pages + quantization parameters (page-granular: includes
+        the zero padding of each slot's partial last page)."""
+        n = self.k_pages.size * self.k_pages.dtype.itemsize
+        n += self.v_pages.size * self.v_pages.dtype.itemsize
+        for meta in (self.k_meta, self.v_meta):
+            for t in (meta.scale, meta.zero, meta.channel_scale):
+                if t is not None:
+                    n += t.size * t.dtype.itemsize
+        return int(n)
+
+
+def _store_from_token_store(ts: kvc.TokenStore, page_size: int,
+                            table: jnp.ndarray) -> PagedStore:
+    """Distribute a dense `TokenStore`'s payload into pages (pure layout)."""
+    b, npp = table.shape
+    pools = []
+    for qt in (ts.k, ts.v):
+        paged = _paginate(qt.codes, page_size)          # (b, npp, h, page, c)
+        pool = paged.reshape(b * npp, *paged.shape[2:]) if npp else \
+            jnp.zeros((0, *paged.shape[2:]), paged.dtype)
+        # place each slot's pages at its table-assigned physical ids
+        pool = jnp.zeros_like(pool).at[table].set(paged) if npp else pool
+        pools.append(pool)
+    return PagedStore(
+        k_pages=pools[0], v_pages=pools[1], table=table,
+        k_meta=dataclasses.replace(ts.k, codes=None),
+        v_meta=dataclasses.replace(ts.v, codes=None),
+        pos=ts.pos, acc=ts.acc, nnz=ts.nnz)
+
+
+# ---------------------------------------------------------------------------
+# PagedKVCache
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKVCache:
+    """Paged mixed-precision KV cache.  Field names mirror `MixedKVCache`
+    (hi/lo stores, win_* state, length, win_fill) so the metadata-only
+    operations in `core/kvcache.py` — `update_probe_state`, `free_slot`,
+    `window_is_full` — apply to it unchanged via duck typing."""
+
+    hi: PagedStore
+    lo: PagedStore
+    win_k_pages: jnp.ndarray      # (P_w, h_kv, page, d) bf16 staging pages
+    win_v_pages: jnp.ndarray
+    win_table: jnp.ndarray        # (b, npp_w) int32
+    win_pos: jnp.ndarray          # (b, W) int32, -1 empty
+    win_acc: jnp.ndarray          # (b, W) f32
+    win_nnz: jnp.ndarray          # (b, W) f32
+    length: jnp.ndarray           # (b,) int32
+    win_fill: jnp.ndarray         # (b,) int32
+
+    def tree_flatten(self):
+        return ((self.hi, self.lo, self.win_k_pages, self.win_v_pages,
+                 self.win_table, self.win_pos, self.win_acc, self.win_nnz,
+                 self.length, self.win_fill), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def page_size(self) -> int:
+        return self.win_k_pages.shape[2]
+
+    @property
+    def window(self) -> int:
+        return self.win_pos.shape[-1]
+
+    @property
+    def capacity(self) -> int:
+        return self.hi.capacity + self.lo.capacity + self.window
+
+    def dense_view(self) -> kvc.MixedKVCache:
+        """Gather all pages into the equivalent `MixedKVCache` (bit-exact
+        logical contents; used for attention/recompression math)."""
+        w = self.window
+        k_win = _gather_dense(self.win_k_pages, self.win_table, w)
+        v_win = _gather_dense(self.win_v_pages, self.win_table, w)
+        return kvc.MixedKVCache(
+            hi=self.hi.dense(), lo=self.lo.dense(), k_win=k_win, v_win=v_win,
+            win_pos=self.win_pos, win_acc=self.win_acc, win_nnz=self.win_nnz,
+            length=self.length, win_fill=self.win_fill)
+
+    def nbytes_packed(self) -> int:
+        n = self.hi.nbytes_packed() + self.lo.nbytes_packed()
+        for t in (self.win_k_pages, self.win_v_pages):
+            n += t.size * t.dtype.itemsize
+        return int(n)
+
+    def nbytes_total(self) -> int:
+        return int(sum(l.size * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(self)))
+
+    def nbytes_overhead(self) -> int:
+        """Page tables + positions/saliency/counters."""
+        return self.nbytes_total() - self.nbytes_packed()
+
+
+def from_mixed(mx: kvc.MixedKVCache, page_size: int = DEFAULT_PAGE_SIZE,
+               tables: Optional[Tuple[jnp.ndarray, ...]] = None) -> PagedKVCache:
+    """Pure layout conversion: page the payload, keep metadata dense.
+
+    `tables`: optional (hi, lo, win) page tables to place pages at (defaults
+    to the strided round-robin assignment)."""
+    b = mx.length.shape[0]
+    if tables is None:
+        tables = tuple(_strided_table(b, n_pages(c, page_size))
+                       for c in (mx.hi.capacity, mx.lo.capacity, mx.window))
+    t_hi, t_lo, t_w = tables
+    hi = _store_from_token_store(mx.hi, page_size, t_hi)
+    lo = _store_from_token_store(mx.lo, page_size, t_lo)
+    npp_w = t_w.shape[1]
+    win_pools = []
+    for dense in (mx.k_win, mx.v_win):
+        paged = _paginate(dense, page_size)
+        pool = jnp.zeros((b * npp_w, *paged.shape[2:]), dense.dtype)
+        win_pools.append(pool.at[t_w].set(paged) if npp_w else pool)
+    return PagedKVCache(
+        hi=hi, lo=lo, win_k_pages=win_pools[0], win_v_pages=win_pools[1],
+        win_table=t_w, win_pos=mx.win_pos, win_acc=mx.win_acc,
+        win_nnz=mx.win_nnz, length=mx.length, win_fill=mx.win_fill)
+
+
+# ---------------------------------------------------------------------------
+# Ops (decode append, slot insert, recompress write-back)
+# ---------------------------------------------------------------------------
+
+def append_token(cache: PagedKVCache, k_t: jnp.ndarray, v_t: jnp.ndarray,
+                 active: Optional[jnp.ndarray] = None) -> PagedKVCache:
+    """Append one decoded token per slot into its CURRENT staging page.
+
+    Bookkeeping is identical to `kvcache.append_token`; the payload write
+    resolves (slot, win_fill) -> (physical page, in-page offset) through the
+    page table and touches exactly one page per active slot."""
+    b = cache.win_pos.shape[0]
+    page = cache.page_size
+    w = cache.window
+    bidx = jnp.arange(b)
+    fill = cache.win_fill
+    inc = jnp.ones((b,), jnp.int32)
+    if active is not None:
+        act = active.astype(jnp.bool_)
+        fill = jnp.where(act, fill, w)    # out-of-bounds -> dropped write
+        inc = act.astype(jnp.int32)
+    j = jnp.minimum(fill // page, jnp.maximum(cache.win_table.shape[1] - 1, 0))
+    off = fill % page
+    phys = jnp.take_along_axis(cache.win_table, j[:, None], axis=1)[:, 0]
+    phys = jnp.where(fill < w, phys, cache.win_k_pages.shape[0])  # OOB drop
+    win_k = cache.win_k_pages.at[phys, :, off].set(
+        k_t.astype(cache.win_k_pages.dtype), mode="drop")
+    win_v = cache.win_v_pages.at[phys, :, off].set(
+        v_t.astype(cache.win_v_pages.dtype), mode="drop")
+    win_pos = cache.win_pos.at[bidx, fill].set(cache.length, mode="drop")
+    return dataclasses.replace(
+        cache, win_k_pages=win_k, win_v_pages=win_v, win_pos=win_pos,
+        length=cache.length + inc, win_fill=cache.win_fill + inc)
+
+
+def _strip_store(s: PagedStore) -> PagedStore:
+    """A store's dense per-slot metadata only (pools + table removed)."""
+    return dataclasses.replace(s, k_pages=None, v_pages=None, table=None)
+
+
+def _meta_only(cache: PagedKVCache) -> PagedKVCache:
+    """Strip pools + tables: the dense per-slot metadata subtree (same
+    structure for a b=1 slice and the full batch, so row updates pair up)."""
+    return dataclasses.replace(
+        cache, hi=_strip_store(cache.hi), lo=_strip_store(cache.lo),
+        win_k_pages=None, win_v_pages=None, win_table=None)
+
+
+def _with_payload_of(meta: PagedKVCache, src: PagedKVCache) -> PagedKVCache:
+    """Re-attach `src`'s pools and tables onto a metadata-only tree."""
+    def attach(m, s):
+        return dataclasses.replace(m, k_pages=s.k_pages, v_pages=s.v_pages,
+                                   table=s.table)
+    return dataclasses.replace(
+        meta, hi=attach(meta.hi, src.hi), lo=attach(meta.lo, src.lo),
+        win_k_pages=src.win_k_pages, win_v_pages=src.win_v_pages,
+        win_table=src.win_table)
+
+
+def _slot_pages(pages: jnp.ndarray, table: jnp.ndarray, slot) -> jnp.ndarray:
+    """One slot's pages in logical order: (npp, h, page, c). Traced `slot`."""
+    row = jax.lax.dynamic_slice_in_dim(table, slot, 1, axis=0)[0]  # (npp,)
+    return pages[row]
+
+
+def insert_slot(dst: PagedKVCache, src: PagedKVCache, slot,
+                batch_axis: int = 0) -> PagedKVCache:
+    """Write a 1-request cache `src` into batch slot `slot` of `dst`.
+
+    Payload: src's logical pages are scattered onto the physical pages the
+    slot owns in dst's table (npp pages per segment — nothing else in the
+    pools is touched).  Metadata: plain row writes.  batch_axis=1 handles
+    group-stacked caches (leaves (G, ...)) by vmapping over the stack."""
+    if batch_axis == 1:
+        return jax.vmap(lambda d, s: insert_slot(d, s, slot))(dst, src)
+
+    def scatter_seg(d_pages, d_table, s_pages, s_table):
+        if d_table.shape[1] == 0:
+            return d_pages
+        logical = s_pages[s_table[0]]                 # (npp, h, page, c)
+        row = jax.lax.dynamic_slice_in_dim(d_table, slot, 1, axis=0)[0]
+        return d_pages.at[row].set(logical.astype(d_pages.dtype))
+
+    meta = kvc.tree_update_rows(_meta_only(dst), _meta_only(src), slot, axis=0)
+    out = _with_payload_of(meta, dst)
+    hi = dataclasses.replace(
+        out.hi,
+        k_pages=scatter_seg(dst.hi.k_pages, dst.hi.table, src.hi.k_pages, src.hi.table),
+        v_pages=scatter_seg(dst.hi.v_pages, dst.hi.table, src.hi.v_pages, src.hi.table))
+    lo = dataclasses.replace(
+        out.lo,
+        k_pages=scatter_seg(dst.lo.k_pages, dst.lo.table, src.lo.k_pages, src.lo.table),
+        v_pages=scatter_seg(dst.lo.v_pages, dst.lo.table, src.lo.v_pages, src.lo.table))
+    return dataclasses.replace(
+        out, hi=hi, lo=lo,
+        win_k_pages=scatter_seg(dst.win_k_pages, dst.win_table,
+                                src.win_k_pages, src.win_table),
+        win_v_pages=scatter_seg(dst.win_v_pages, dst.win_table,
+                                src.win_v_pages, src.win_table))
+
+
+def free_slot(cache: PagedKVCache, slot, batch_axis: int = 0) -> PagedKVCache:
+    """Retire a slot: invalidate its dense metadata rows.  Pages are left
+    stale (validity is pos-driven, exactly as in the mixed layout); with the
+    static round-robin assignment the slot keeps its pages — a dynamic
+    allocator would return them to a free list here."""
+    return kvc.free_slot(cache, slot, batch_axis=batch_axis)
+
+
+def _write_back(cache: PagedKVCache, mx: kvc.MixedKVCache,
+                rows: Optional[jnp.ndarray] = None) -> PagedKVCache:
+    """Scatter a recompressed dense cache back into the paged layout,
+    restricted to `rows` when given (other slots keep pages AND metadata)."""
+    def seg(store: PagedStore, ts: kvc.TokenStore) -> PagedStore:
+        # pools: rows-masked scatter; metadata: replaced wholesale here, the
+        # caller's final row select restores the untouched slots' rows
+        return PagedStore(
+            _scatter_dense(store.k_pages, store.table, ts.k.codes, rows),
+            _scatter_dense(store.v_pages, store.table, ts.v.codes, rows),
+            store.table,
+            dataclasses.replace(ts.k, codes=None),
+            dataclasses.replace(ts.v, codes=None),
+            ts.pos, ts.acc, ts.nnz)
+
+    win_k = _scatter_dense(cache.win_k_pages, cache.win_table, mx.k_win, rows)
+    win_v = _scatter_dense(cache.win_v_pages, cache.win_table, mx.v_win, rows)
+    out = dataclasses.replace(
+        cache, hi=seg(cache.hi, mx.hi), lo=seg(cache.lo, mx.lo),
+        win_k_pages=win_k, win_v_pages=win_v,
+        win_pos=mx.win_pos, win_acc=mx.win_acc, win_nnz=mx.win_nnz,
+        length=mx.length, win_fill=mx.win_fill)
+    if rows is None:
+        return out
+    sel = kvc.tree_select_rows(rows, _meta_only(out), _meta_only(cache))
+    return _with_payload_of(sel, out)
+
+
+def recompress(cfg: CompressionConfig, cache: PagedKVCache,
+               rows: Optional[jnp.ndarray] = None) -> PagedKVCache:
+    """Fold staging pages back into the stores (paper Alg. 3): the dense
+    recompression math on the gathered view, scattered back page-wise.
+    `rows` restricts the write-back to a subset of slots (mask semantics
+    identical to the mixed backend; for per-slot cost see recompress_slot)."""
+    mx = kvc.recompress(cfg, cache.dense_view(), rows=None)
+    return _write_back(cache, mx, rows=rows)
+
+
+def _slice_slot_view(cache: PagedKVCache, slot) -> kvc.MixedKVCache:
+    """One slot's logical cache as a batch=1 dense `MixedKVCache`."""
+    def row(x):
+        return jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=0)
+
+    def store(s: PagedStore) -> kvc.TokenStore:
+        out = []
+        for pages, meta in ((s.k_pages, s.k_meta), (s.v_pages, s.v_meta)):
+            logical = _slot_pages(pages, s.table, slot)       # (npp,h,page,c)
+            npp, h, page, c = logical.shape
+            dense = jnp.swapaxes(logical, 0, 1).reshape(1, h, npp * page, c)
+            dense = dense[:, :, :meta.shape[-2]]
+            params = jax.tree_util.tree_map(row, (meta.scale, meta.zero,
+                                                  meta.channel_scale))
+            out.append(quant.QuantizedTensor(
+                dense, *params, meta.bits, (1, *meta.shape[1:])))
+        return kvc.TokenStore(out[0], out[1], row(s.pos), row(s.acc), row(s.nnz))
+
+    w = cache.window
+    win = []
+    for pages in (cache.win_k_pages, cache.win_v_pages):
+        logical = _slot_pages(pages, cache.win_table, slot)
+        npp, h, page, c = logical.shape
+        win.append(jnp.swapaxes(logical, 0, 1).reshape(1, h, npp * page, c)[:, :, :w])
+    return kvc.MixedKVCache(
+        hi=store(cache.hi), lo=store(cache.lo), k_win=win[0], v_win=win[1],
+        win_pos=row(cache.win_pos), win_acc=row(cache.win_acc),
+        win_nnz=row(cache.win_nnz), length=row(cache.length),
+        win_fill=row(cache.win_fill))
+
+
+def recompress_slot(cfg: CompressionConfig, cache: PagedKVCache,
+                    slot) -> PagedKVCache:
+    """Fold ONE slot's staging pages: gather the slot to a batch=1 dense
+    view, recompress at 1/batch the full-program FLOPs, scatter the result
+    back onto the slot's pages + metadata row.  Bitwise the same result as
+    `recompress(rows=onehot(slot))` — every recompression op is
+    row-independent — at per-request instead of full-batch cost."""
+    mx1 = kvc.recompress(cfg, _slice_slot_view(cache, slot), rows=None)
+
+    def seg(store: PagedStore, ts: kvc.TokenStore) -> PagedStore:
+        def scat(pages, codes):
+            if store.table.shape[1] == 0:
+                return pages
+            row = jax.lax.dynamic_slice_in_dim(store.table, slot, 1, axis=0)[0]
+            return pages.at[row].set(
+                _paginate(codes.astype(pages.dtype), pages.shape[2])[0])
+        meta = kvc.tree_update_rows(
+            _strip_store(store),
+            kvc.TokenStore(dataclasses.replace(ts.k, codes=None),
+                           dataclasses.replace(ts.v, codes=None),
+                           ts.pos, ts.acc, ts.nnz),
+            slot, axis=0)
+        return dataclasses.replace(meta, k_pages=scat(store.k_pages, ts.k.codes),
+                                   v_pages=scat(store.v_pages, ts.v.codes),
+                                   table=store.table)
+
+    def win_scat(pages, dense):
+        if cache.win_table.shape[1] == 0:
+            return pages
+        row = jax.lax.dynamic_slice_in_dim(cache.win_table, slot, 1, axis=0)[0]
+        return pages.at[row].set(_paginate(dense.astype(pages.dtype),
+                                           pages.shape[2])[0])
+
+    def rowup(d, s):
+        return jax.lax.dynamic_update_slice_in_dim(d, s.astype(d.dtype), slot, axis=0)
+
+    return dataclasses.replace(
+        cache, hi=seg(cache.hi, mx1.hi), lo=seg(cache.lo, mx1.lo),
+        win_k_pages=win_scat(cache.win_k_pages, mx1.k_win),
+        win_v_pages=win_scat(cache.win_v_pages, mx1.v_win),
+        win_pos=rowup(cache.win_pos, mx1.win_pos),
+        win_acc=rowup(cache.win_acc, mx1.win_acc),
+        win_nnz=rowup(cache.win_nnz, mx1.win_nnz),
+        length=rowup(cache.length, mx1.length),
+        win_fill=rowup(cache.win_fill, mx1.win_fill))
+
+
+# ---------------------------------------------------------------------------
+# Backend
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVBackend:
+    """Paged cache layout behind the `CacheBackend` protocol.
+
+    Stateless like `MixedKVBackend`; `page_size` is the only layout knob.
+    Smaller pages waste less capacity to partial-page padding but grow the
+    page table and scatter/gather fan-out; larger pages amortize addressing
+    but pad each segment up to a page multiple per slot.
+    """
+
+    ccfg: CompressionConfig
+    page_size: int = DEFAULT_PAGE_SIZE
+
+    def init_cache(self, b, h_kv, d, max_len, dtype=jnp.bfloat16, d_v=None):
+        return from_mixed(kvc.init_cache(self.ccfg, b, h_kv, d, max_len,
+                                         dtype, d_v=d_v), self.page_size)
+
+    def compress_prefill(self, k, v, token_saliency, max_len,
+                         probe_nnz=None, dtype=jnp.bfloat16):
+        mx = kvc.compress_prefill(self.ccfg, k, v, token_saliency, max_len,
+                                  probe_nnz=probe_nnz, dtype=dtype)
+        return from_mixed(mx, self.page_size)
+
+    def append(self, cache, k_t, v_t, active=None):
+        return append_token(cache, k_t, v_t, active=active)
+
+    def attend(self, q, cache, scale=None, impl="ref", ctx=None):
+        return kvc.attend_decode(q, cache.dense_view(), scale=scale,
+                                 impl=impl, ctx=ctx)
+
+    def update_probe(self, cache, slot_weights, is_probe):
+        # metadata-only op; the mixed implementation duck-types onto the
+        # paged layout (same field names, payload untouched)
+        return kvc.update_probe_state(cache, slot_weights, is_probe)
+
+    def recompress(self, cache, rows=None):
+        return recompress(self.ccfg, cache, rows=rows)
+
+    def recompress_slot(self, cache, slot):
+        """Beyond the protocol: per-slot recompression at 1/batch FLOPs (the
+        engine prefers this when the backend offers it)."""
+        return recompress_slot(self.ccfg, cache, slot)
+
+    def insert(self, cache, slice_cache, slot):
+        return insert_slot(cache, slice_cache, slot)
+
+    def free(self, cache, slot):
+        return free_slot(cache, slot)
+
+    def dense(self, cache) -> kvc.MixedKVCache:
+        """Dense read-only view for consumers of the mixed layout (MLA's
+        absorbed decode reads the cache directly)."""
+        return cache.dense_view()
+
+    def nbytes(self, cache) -> Tuple[int, int]:
+        packed = cache.nbytes_packed()
+        return int(packed), int(cache.nbytes_total() - packed)

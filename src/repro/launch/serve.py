@@ -6,6 +6,21 @@ Example (CPU smoke):
 
 --continuous switches to the continuous-batching engine (request lifecycle:
 submit -> step -> result; slots admit/retire independently).
+
+Choosing a backend (--backend):
+  mixed  dense per-slot cache arrays; shardable over a mesh — the default,
+         and the right choice for lockstep batches and multi-host serving.
+  paged  payload in fixed-size pages behind per-slot page tables; slot
+         insert/free touch only that slot's pages and staging windows fold
+         with a per-slot program (no slots-times recompression FLOPs under
+         staggered admission).  The trade: decode attention gathers the
+         slot's pages into a dense view each step (mixed reads in place),
+         so pick paged when admission/retirement churn and staggered
+         recompression dominate, mixed for steady full batches.  Greedy
+         output is token-identical either way
+         (tests/test_backend_conformance.py).  Single-host today.
+--page-size trades internal fragmentation (up to page_size-1 wasted tokens
+per segment per slot) against page-table size and scatter/gather fan-out.
 """
 
 from __future__ import annotations
@@ -35,6 +50,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--continuous", action="store_true",
                     help="continuous-batching engine (submit/step/result)")
+    ap.add_argument("--backend", default="mixed", choices=("mixed", "paged"),
+                    help="KV cache layout: mixed = dense per-slot arrays "
+                         "(mesh-shardable); paged = page-pool payload behind "
+                         "per-slot page tables (page-local insert/free, "
+                         "per-slot recompress; single-host)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="tokens per page for --backend paged (smaller = "
+                         "less partial-page waste, larger = less bookkeeping)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_arch(args.arch, smoke=args.smoke)
@@ -52,7 +75,10 @@ def main(argv=None):
     ccfg = type(ccfg)(**{**ccfg.__dict__, "fp_window": 16, "recompress_interval": 16}) \
         if args.smoke else ccfg
     scfg = ServeConfig(batch_size=args.batch, prompt_len=args.prompt_len,
-                       max_new_tokens=args.max_new, seed=args.seed)
+                       max_new_tokens=args.max_new, seed=args.seed,
+                       backend=args.backend, page_size=args.page_size)
+    # (--backend paged with a mesh is rejected where the backend is built,
+    # launch/steps.serve_ctx — programmatic callers hit the same guard)
 
     params = registry.materialize_params(cfg, args.seed)
     rng = np.random.default_rng(args.seed)

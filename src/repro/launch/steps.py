@@ -23,11 +23,13 @@ from repro.optim import adamw
 
 
 def _run_ctx(cfg: ArchConfig, mesh, ccfg=None, probe=None, max_cache_len=0,
-             q_block=512, decode_impl="ref", compact_softmax=False) -> blocks.RunCtx:
+             q_block=512, decode_impl="ref", compact_softmax=False,
+             backend=None) -> blocks.RunCtx:
     data_axes = mesh_lib.data_axes_of(mesh) if mesh is not None else ("data",)
     return blocks.RunCtx(mesh=mesh, data_axes=data_axes, ccfg=ccfg, probe=probe,
                          max_cache_len=max_cache_len, q_block=q_block,
-                         decode_impl=decode_impl, compact_softmax=compact_softmax)
+                         decode_impl=decode_impl, compact_softmax=compact_softmax,
+                         backend=backend)
 
 
 def pick_grad_accum(cfg: ArchConfig, shape: ShapeConfig, mesh) -> int:
@@ -137,7 +139,13 @@ def serve_ctx(cfg: ArchConfig, shape: ShapeConfig, mesh,
               ccfg: Optional[CompressionConfig] = None,
               decode_budget: int = 512, q_block: int = 512,
               decode_impl: str = "ref"):
-    """RunCtx + probe for a serving shape. max cache = seq_len + decode budget."""
+    """RunCtx + probe for a serving shape. max cache = seq_len + decode budget.
+
+    The cache layout comes from the shape (`shape.cache_backend` /
+    `shape.page_size`): "mixed" (default) or "paged" — see core/backend.py.
+    """
+    from repro.core import backend as backend_lib
+
     ccfg = ccfg or CompressionConfig.zipcache()
     qlen, src = registry.prefill_lengths(cfg, shape)
     probe = sal.select_probes(qlen, ccfg.probe_strategy, ccfg.probe_ratio, ccfg.seed) \
@@ -145,9 +153,18 @@ def serve_ctx(cfg: ArchConfig, shape: ShapeConfig, mesh,
     if ccfg.needs_full_attention:
         probe = sal.select_probes(qlen, "all", 1.0)
     max_cache_len = (shape.seq_len if not cfg.encdec else qlen) + decode_budget
+    kind = getattr(shape, "cache_backend", "mixed")
+    if kind == "paged" and mesh is not None:
+        raise NotImplementedError(
+            "the paged cache backend is single-host today: its pools index "
+            "physical pages, which need a page-axis partitioning story "
+            "before they can shard over a mesh (ROADMAP §Serving) — use "
+            "cache_backend='mixed' with a mesh")
+    backend = backend_lib.of(ccfg, kind=kind,
+                             page_size=getattr(shape, "page_size", None))
     return _run_ctx(cfg, mesh, ccfg=ccfg, probe=probe,
                     max_cache_len=max_cache_len, q_block=q_block,
-                    decode_impl=decode_impl)
+                    decode_impl=decode_impl, backend=backend)
 
 
 def make_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
@@ -237,6 +254,22 @@ def make_recompress_rows_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
         return registry.recompress(caches, cfg, ctx, rows=rows)
 
     return recompress_rows, ctx
+
+
+def make_recompress_slot_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                              ccfg: Optional[CompressionConfig] = None, ctx=None):
+    """recompress_slot(caches, slot) — fold exactly ONE slot's staging window.
+
+    Only for backends that implement per-slot recompression (the paged
+    layout): the jitted program gathers the slot to a batch=1 view, so each
+    call costs ~1/slots of the rows-masked program — staggered admission pays
+    per-request instead of `slots`x full-batch FLOPs (ROADMAP §Serving)."""
+    ctx = ctx or serve_ctx(cfg, shape, mesh, ccfg)
+
+    def recompress_slot(caches, slot):
+        return registry.recompress(caches, cfg, ctx, slot=slot)
+
+    return recompress_slot, ctx
 
 
 def continuous_decode_lowering_inputs(cfg: ArchConfig, shape: ShapeConfig, mesh, ctx):

@@ -7,8 +7,9 @@ along a leading axis and scanned; non-periodic prefix layers (DeepSeek's first
 dense layer) are unrolled separately.
 
 Per-layer cache element (collected/consumed by lm.py):
-  * attn layer  -> MixedKVCache (core/kvcache.py)
-  * mla layer   -> MixedKVCache holding (rope-key, latent) streams
+  * attn layer  -> MixedKVCache (core/kvcache.py) or PagedKVCache
+                   (core/paged.py) — whichever layout ctx.backend produces
+  * mla layer   -> same, holding (rope-key, latent) streams
   * ssm layer   -> SSMState
 """
 
@@ -181,8 +182,10 @@ def apply_layer_decode(
         kpe_t = common.apply_rotary(
             jnp.einsum("be,ep->bp", h, params["attn"]["w_kpe"]), cos, sin)
         cache_el = be.append(cache_el, kpe_t[:, None], lat_t[:, None], active=active)
-        y, _, _, slot_w = attn.mla_decode(params["attn"], h, cache_el, cfg, position,
-                                          impl=ctx.decode_impl)
+        # mla_decode reads the mixed layout directly; every backend exposes
+        # a dense read-only view for such consumers (identity for mixed)
+        y, _, _, slot_w = attn.mla_decode(params["attn"], h, be.dense(cache_el),
+                                          cfg, position, impl=ctx.decode_impl)
         cache_el = be.update_probe(cache_el, slot_w, is_probe)
     else:
         old_el = cache_el

@@ -216,15 +216,22 @@ def decode_step(
 
 
 def recompress_caches(caches: Any, cfg: ArchConfig, ctx: blocks.RunCtx,
-                      rows: Optional[jnp.ndarray] = None) -> Any:
+                      rows: Optional[jnp.ndarray] = None, slot=None) -> Any:
     """Streaming recompression across all layers (paper Alg. 3, every 100 tok).
 
     rows: optional (b,) bool — recompress only those batch slots (continuous
-    batching runs each request's cadence on its own token counter)."""
-    from repro.core import kvcache as kvc
+    batching runs each request's cadence on its own token counter).
+    slot: optional traced scalar — fold exactly one slot via the backend's
+    per-slot program (layouts that support it, e.g. paged, do so at ~1/batch
+    the FLOPs; mutually exclusive with rows)."""
+    from repro.core import backend as backend_lib
+
+    assert rows is None or slot is None, "pass rows OR slot, not both"
 
     def maybe_recompress(el):
-        if isinstance(el, kvc.MixedKVCache):
+        if backend_lib.is_kv_cache(el):
+            if slot is not None:
+                return ctx.backend.recompress_slot(el, slot)
             return ctx.backend.recompress(el, rows=rows)
         return el
 

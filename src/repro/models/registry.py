@@ -62,47 +62,78 @@ def decode_step(params, token: jnp.ndarray, caches: Any, cfg: ArchConfig,
 
 
 def recompress(caches: Any, cfg: ArchConfig, ctx: blocks.RunCtx,
-               rows: Optional[jnp.ndarray] = None):
+               rows: Optional[jnp.ndarray] = None, slot=None):
     """rows: optional (b,) bool — restrict recompression to those slots
-    (per-request cadence, paper Alg. 3 under continuous batching)."""
+    (per-request cadence, paper Alg. 3 under continuous batching).
+    slot: optional traced scalar — recompress exactly ONE slot via the
+    backend's per-slot program (paged layout: ~1/batch the FLOPs of the
+    rows-masked program; requires ctx.backend.recompress_slot)."""
     if cfg.encdec:
+        assert slot is None, "per-slot recompress: decoder-only caches only"
         def fn(_, sc):
             return (), encdec.DecLayerCaches(
                 ctx.backend.recompress(sc.self_cache, rows=rows), sc.cross_cache)
         _, new = jax.lax.scan(fn, (), caches)
         return new
-    return lm.recompress_caches(caches, cfg, ctx, rows=rows)
+    return lm.recompress_caches(caches, cfg, ctx, rows=rows, slot=slot)
 
 
 def insert_caches(dst: Any, src: Any, slot) -> Any:
     """Insert a 1-request cache slice into batch row `slot` of a running
-    decode batch (jetstream-style).  Handles both cache layouts: the lm dict
-    ({"prefix": [per-layer], "groups": leaves stacked (G, b, ...)}) and the
-    encdec scanned tree (leaves stacked (L, b, ...)).  Jittable with a traced
-    `slot`; static shapes preserved."""
+    decode batch (jetstream-style).  Handles both cache tree layouts: the lm
+    dict ({"prefix": [per-layer], "groups": leaves stacked (G, b, ...)}) and
+    the encdec scanned tree (leaves stacked (L, b, ...)) — and both cache
+    element layouts: paged elements scatter onto the slot's pages, everything
+    else (mixed caches, SSM states) is a plain leading-axis row write.
+    Jittable with a traced `slot`; static shapes preserved.
+
+    Extension point: the generic row-write is only correct for layouts whose
+    leaves are directly batch-indexed.  A new `CacheBackend` layout with
+    indirection (per-head pools, radix trees) must add its element dispatch
+    here and in `free_caches`, as the paged layout does."""
     from repro.core import kvcache as kvc
+    from repro.core import paged as paged_lib
+
+    def ins(d, s, axis):
+        # flatten with paged elements as leaves: they need table-mediated
+        # writes, the rest pairs up positionally for plain row updates
+        is_paged = lambda x: isinstance(x, paged_lib.PagedKVCache)
+        d_leaves, treedef = jax.tree_util.tree_flatten(d, is_leaf=is_paged)
+        s_leaves = jax.tree_util.tree_leaves(s, is_leaf=is_paged)
+        if len(d_leaves) != len(s_leaves):
+            raise ValueError(
+                f"cache slice has {len(s_leaves)} elements, batch has {len(d_leaves)}")
+        out = [paged_lib.insert_slot(dl, sl, slot, batch_axis=axis)
+               if is_paged(dl)
+               else kvc.tree_update_rows(dl, sl, slot, axis=axis)
+               for dl, sl in zip(d_leaves, s_leaves)]
+        return jax.tree_util.tree_unflatten(treedef, out)
 
     if isinstance(dst, dict) and "prefix" in dst:
-        prefix = [kvc.tree_update_rows(d, s, slot, axis=0)
-                  for d, s in zip(dst["prefix"], src["prefix"])]
-        groups = kvc.tree_update_rows(dst["groups"], src["groups"], slot, axis=1)
+        prefix = [ins(d, s, 0) for d, s in zip(dst["prefix"], src["prefix"])]
+        groups = ins(dst["groups"], src["groups"], 1)
         return {"prefix": prefix, "groups": groups}
-    return kvc.tree_update_rows(dst, src, slot, axis=1)
+    return ins(dst, src, 1)
 
 
 def free_caches(caches: Any, slot) -> Any:
     """Retire batch row `slot` across the whole cache tree: invalidate each
-    layer's positions/counters (cheap row writes — see kvcache.free_slot).
+    layer's positions/counters (cheap row writes — see kvcache.free_slot;
+    the paged layout's pages stay untouched, validity is pos-driven).
     Non-KV elements (SSM states) are left stale: they are masked while the
     slot is inactive and fully overwritten by the next insert_caches."""
+    from repro.core import backend as backend_lib
     from repro.core import kvcache as kvc
+    from repro.core import paged as paged_lib
 
     def fr(el, axis):
+        if isinstance(el, paged_lib.PagedKVCache):
+            return paged_lib.free_slot(el, slot, batch_axis=axis)
         if isinstance(el, kvc.MixedKVCache):
             return kvc.free_slot(el, slot, batch_axis=axis)
         return el
 
-    is_cache = lambda x: isinstance(x, kvc.MixedKVCache)
+    is_cache = backend_lib.is_kv_cache
     if isinstance(caches, dict) and "prefix" in caches:
         prefix = [fr(el, 0) for el in caches["prefix"]]
         groups = jax.tree_util.tree_map(

@@ -75,6 +75,13 @@ class ServeConfig:
     prompt_len: int                  # static prompt capacity (left-padded)
     max_new_tokens: int = 128        # decode budget (cache sized for this)
     seed: int = 0
+    # KV cache layout (core/backend.py): "mixed" (dense per-slot arrays) or
+    # "paged" (page-pool payload behind per-slot page tables).  Greedy output
+    # is token-identical across layouts (tests/test_backend_conformance.py);
+    # paged makes slot insert/free page-local and folds staging windows with
+    # a per-slot program instead of full-batch recomputation.
+    backend: str = "mixed"
+    page_size: int = 64              # tokens per page ("paged" only)
     # sampling is per-request (SamplingParams); the lockstep generate() path
     # is always greedy — it is the reference the continuous engine is
     # verified token-identical against
@@ -175,7 +182,8 @@ class _EngineBase:
         self.ccfg = ccfg
         self.scfg = scfg
         self.params = params
-        shape = ShapeConfig("serve", scfg.prompt_len, scfg.batch_size, "prefill")
+        shape = ShapeConfig("serve", scfg.prompt_len, scfg.batch_size, "prefill",
+                            cache_backend=scfg.backend, page_size=scfg.page_size)
         self.ctx = steps_lib.serve_ctx(cfg, shape, mesh, ccfg,
                                        decode_budget=scfg.max_new_tokens,
                                        q_block=min(512, scfg.prompt_len))
@@ -193,6 +201,13 @@ class _EngineBase:
             cfg, shape, mesh, ccfg, ctx=self.ctx)[0])
         self._recompress_rows = jax.jit(steps_lib.make_recompress_rows_step(
             cfg, shape, mesh, ccfg, ctx=self.ctx)[0])
+        # per-slot recompression program (backends that offer it — paged):
+        # folds ONE slot at ~1/slots the FLOPs of the rows-masked program,
+        # so staggered admission pays per-request, not `slots`x, cost
+        self._recompress_slot = None
+        if hasattr(self.ctx.backend, "recompress_slot"):
+            self._recompress_slot = jax.jit(steps_lib.make_recompress_slot_step(
+                cfg, shape, mesh, ccfg, ctx=self.ctx)[0])
         self._sample = jax.jit(_sample_tokens)
 
     # ------------------------------------------------------------------
@@ -473,8 +488,20 @@ class ContinuousEngine(_EngineBase):
                 continue
             if s.since_rc >= interval:
                 due[i] = True
-        if due.any():
-            self.caches = self._recompress_rows(self.caches, jnp.asarray(due))
+        n_due = int(due.sum())
+        if n_due:
+            # Per-slot programs fold each due slot at ~1/slots the FLOPs of
+            # the rows-masked program (bitwise the same result — recompression
+            # is row-independent), but every call also rewrites the cache
+            # tree once.  Use them while the FLOP savings outweigh the extra
+            # dispatches/copies; co-due majorities (lockstep-aligned cadence)
+            # batch into the single rows-masked call as before.
+            if self._recompress_slot is not None and n_due * 2 <= b:
+                for i in np.flatnonzero(due):
+                    self.caches = self._recompress_slot(
+                        self.caches, jnp.asarray(int(i), jnp.int32))
+            else:
+                self.caches = self._recompress_rows(self.caches, jnp.asarray(due))
             for i in np.flatnonzero(due):
                 self.slots[i].since_rc = 0
         self._step_no += 1

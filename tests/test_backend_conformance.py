@@ -1,0 +1,236 @@
+"""Cross-backend conformance: every `CacheBackend` implementation must be a
+drop-in replacement for the mixed layout.
+
+Parametrized over `MixedKVBackend` and `PagedKVBackend`, asserting:
+
+  (a) decode attention matches the float (fp16-policy) reference within the
+      quantization tolerance already used in test_kvcache.py — and, stronger,
+      the two backends agree bitwise (the paged layout changes WHERE payload
+      lives, never the quantization granularity);
+  (b) insert -> attend -> free -> re-insert round-trips are identical to a
+      fresh prefill (slot churn leaves no residue);
+  (c) greedy ContinuousEngine output is token-identical across backends,
+      including mid-run admission into a freed slot and per-slot recompress
+      cadence (the acceptance criterion);
+  (d) nbytes packed + overhead equals the sum over pytree leaves — no byte
+      is double-counted or dropped by the page-granular accounting.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import backend as backend_lib
+from repro.core import kvcache as kvc
+from repro.core.policy import CompressionConfig
+from repro.models import registry
+from repro.serving import ContinuousEngine, Request, ServeConfig
+
+BACKENDS = ["mixed", "paged"]
+# attention tolerance for the 4/2-bit mixed policy, as in test_kvcache.py
+QUANT_TOL = 0.35
+
+
+def _ccfg(policy="zipcache", **kw):
+    return dataclasses.replace(CompressionConfig.preset(policy, **kw),
+                               fp_window=8, recompress_interval=8)
+
+
+def _backend(kind, ccfg):
+    # page_size 8 keeps partial pages + multi-page segments in play at test sizes
+    return backend_lib.of(ccfg, kind=kind, page_size=8)
+
+
+def _kv(rng, b=2, hk=2, l=48, d=16):
+    k = jnp.asarray(rng.normal(size=(b, hk, l, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, hk, l, d)).astype(np.float32))
+    s = jnp.asarray(rng.uniform(size=(b, l)).astype(np.float32))
+    return k, v, s
+
+
+# ---------------------------------------------------------------------------
+# (a) decode attention: float-reference tolerance + cross-backend identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_attend_close_to_float_reference(kind, rng):
+    k, v, s = _kv(rng)
+    be = _backend(kind, _ccfg("zipcache", saliency_ratio=0.5))
+    ref = _backend(kind, _ccfg("fp16"))
+    cache_q = be.compress_prefill(k, v, s, 64, dtype=jnp.float32)
+    cache_f = ref.compress_prefill(k, v, None, 48, dtype=jnp.float32)
+    q = jnp.asarray(rng.normal(size=(2, 4, 16)).astype(np.float32))
+    oq = be.attend(q, cache_q).out
+    of = ref.attend(q, cache_f).out
+    err = float(jnp.max(jnp.abs(oq - of)))
+    assert err < QUANT_TOL, err
+    # softmax mass over valid slots sums to one
+    np.testing.assert_allclose(
+        np.asarray(be.attend(q, cache_q).slot_weights.sum(-1)), 1.0, rtol=1e-4)
+
+
+@pytest.mark.parametrize("policy", ["zipcache", "kivi", "gear", "fp16"])
+def test_attend_bitwise_identical_across_backends(policy, rng):
+    """The layouts must agree bitwise, not just within tolerance: paging
+    relocates payload but must never change quantization granularity."""
+    k, v, s = _kv(rng)
+    ccfg = _ccfg(policy)
+    q = jnp.asarray(rng.normal(size=(2, 4, 16)).astype(np.float32))
+    kt = jnp.asarray(rng.normal(size=(2, 2, 16)).astype(np.float32))
+    outs = {}
+    for kind in BACKENDS:
+        be = _backend(kind, ccfg)
+        cache = be.compress_prefill(k, v, s if ccfg.uses_saliency else None,
+                                    64, dtype=jnp.float32)
+        # drive one append + probe + recompress so decode-path state is hit
+        cache = be.append(cache, kt, kt * 0.5)
+        dec = be.attend(q, cache)
+        cache = be.update_probe(cache, dec.slot_weights, jnp.asarray(True))
+        cache = be.recompress(cache)
+        outs[kind] = np.asarray(be.attend(q, cache).out)
+    np.testing.assert_array_equal(outs["mixed"], outs["paged"])
+
+
+# ---------------------------------------------------------------------------
+# (b) insert -> attend -> free -> re-insert round trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_insert_free_reinsert_matches_fresh_prefill(kind, rng):
+    k, v, s = _kv(rng)
+    be = _backend(kind, _ccfg())
+    q = jnp.asarray(rng.normal(size=(2, 4, 16)).astype(np.float32))
+    fresh = be.compress_prefill(k, v, s, 64, dtype=jnp.float32)
+    ref = np.asarray(be.attend(q, fresh).out)
+
+    slices = [be.compress_prefill(k[i:i + 1], v[i:i + 1], s[i:i + 1], 64,
+                                  dtype=jnp.float32) for i in range(2)]
+    ins = jax.jit(be.insert)
+    fre = jax.jit(be.free)
+    cache = be.init_cache(2, 2, 16, 64, jnp.float32)
+    for i in range(2):
+        cache = ins(cache, slices[i], jnp.asarray(i, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(be.attend(q, cache).out), ref)
+
+    # free slot 1, the survivor must be untouched...
+    cache = fre(cache, jnp.asarray(1, jnp.int32))
+    solo = be.compress_prefill(k[:1], v[:1], s[:1], 64, dtype=jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(be.attend(q, cache).out[0]),
+        np.asarray(be.attend(q[:1], solo).out[0]))
+    # ...and re-inserting restores the fresh-prefill output exactly
+    cache = ins(cache, slices[1], jnp.asarray(1, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(be.attend(q, cache).out), ref)
+
+
+# ---------------------------------------------------------------------------
+# (c) continuous engine: token-identical across backends (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_continuous_engine_token_identical_across_backends(rng):
+    """Greedy continuous-batching output must be identical between the mixed
+    and paged layouts — including a request admitted mid-run into a freed
+    slot, and windows folding on per-slot cadence (max_new > interval, so
+    both the early and the late-admitted slot cross a recompression)."""
+    cfg = configs.get_arch("yi-6b", smoke=True)
+    ccfg = _ccfg()
+    params = registry.materialize_params(cfg, 0)
+    prompts = [rng.integers(2, cfg.vocab, size=(48,)).astype(np.int32)
+               for _ in range(3)]
+
+    outs = {}
+    fills = {}
+    for kind in BACKENDS:
+        scfg = ServeConfig(batch_size=2, prompt_len=48, max_new_tokens=12,
+                           backend=kind, page_size=8)
+        eng = ContinuousEngine(cfg, ccfg, scfg, params)
+        r0 = eng.submit(Request(tokens=prompts[0]))
+        r1 = eng.submit(Request(tokens=prompts[1], max_new_tokens=6))
+        for _ in range(4):
+            eng.step()
+        r2 = eng.submit(Request(tokens=prompts[2]))  # mid-run admission
+        for _ in range(5):  # r1 retires at 6, r2 backfills; slot 0 recompresses
+            eng.step()
+        # per-slot cadence state is identical across layouts
+        el = jax.tree_util.tree_leaves(
+            eng.caches["groups"], is_leaf=backend_lib.is_kv_cache)[0]
+        fills[kind] = np.asarray(el.win_fill)
+        res = eng.run()
+        outs[kind] = {r: res[r] for r in (r0, r1, r2)}
+
+    np.testing.assert_array_equal(fills["mixed"], fills["paged"])
+    for (ra, a), (rb, b) in zip(outs["mixed"].items(), outs["paged"].items()):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert a.finish_reason == b.finish_reason
+
+
+def test_mla_decode_token_identical_across_backends(rng):
+    """MLA's absorbed decode reads cache internals through backend.dense():
+    the (rope-key, latent) streams — distinct k/v dims, one kv head — must
+    also decode token-identically under the paged layout."""
+    cfg = configs.get_arch("deepseek-v2-lite-16b", smoke=True)  # MLA arch
+    params = registry.materialize_params(cfg, 0)
+    ccfg = _ccfg()
+    from repro.core import saliency as sal
+    from repro.models import blocks
+
+    b, l = 2, 32
+    toks = jnp.asarray(rng.integers(2, cfg.vocab, size=(b, l)), jnp.int32)
+    probe = sal.select_probes(l, "random+recent", 0.2, 0)
+    outs = {}
+    for kind in BACKENDS:
+        be = backend_lib.of(ccfg, kind=kind, page_size=8)
+        ctx = blocks.RunCtx(ccfg=ccfg, probe=probe, max_cache_len=l + 8,
+                            q_block=16, backend=be)
+        logits, caches = registry.prefill(params, {"tokens": toks}, cfg, ctx)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        seq = []
+        for i in range(4):
+            logits, caches = registry.decode_step(
+                params, tok, caches, cfg, ctx, jnp.asarray(i % 2 == 0))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            seq.append(np.asarray(tok))
+        outs[kind] = np.stack(seq)
+    np.testing.assert_array_equal(outs["mixed"], outs["paged"])
+
+
+# ---------------------------------------------------------------------------
+# (d) byte accounting: packed + overhead == sum over pytree leaves
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", BACKENDS)
+@pytest.mark.parametrize("policy", ["zipcache", "kivi", "fp16"])
+def test_nbytes_partition_is_exact(kind, policy, rng):
+    k, v, s = _kv(rng)
+    ccfg = _ccfg(policy)
+    be = _backend(kind, ccfg)
+    cache = be.compress_prefill(k, v, s if ccfg.uses_saliency else None,
+                                64, dtype=jnp.bfloat16)
+    packed, overhead = be.nbytes(cache)
+    leaves = sum(l.size * l.dtype.itemsize
+                 for l in jax.tree_util.tree_leaves(cache))
+    assert packed > 0 and overhead > 0
+    assert packed + overhead == leaves
+    # the tree-walking accounting agrees with the backend's own
+    cb = backend_lib.cache_bytes(cache)
+    assert cb == {"packed_bytes": packed, "overhead_bytes": overhead,
+                  "total_bytes": leaves}
+
+
+def test_paged_overhead_includes_page_tables(rng):
+    """Page tables are bookkeeping: for the same policy and shapes the paged
+    layout reports >= the mixed layout's overhead, and its packed payload is
+    page-granular (>= dense: partial last pages are padded up)."""
+    k, v, s = _kv(rng)
+    ccfg = _ccfg()
+    pk, ov = {}, {}
+    for kind in BACKENDS:
+        be = _backend(kind, ccfg)
+        cache = be.compress_prefill(k, v, s, 64, dtype=jnp.bfloat16)
+        pk[kind], ov[kind] = be.nbytes(cache)
+    assert ov["paged"] > ov["mixed"]
+    assert pk["paged"] >= pk["mixed"]

@@ -38,6 +38,35 @@ def test_pack_roundtrip_property(bits, t, c, seed):
     np.testing.assert_array_equal(np.asarray(out), codes)
 
 
+@given(bits=st.sampled_from([1, 2, 4, 8]),
+       lead=st.lists(st.integers(1, 4), min_size=0, max_size=3),
+       t=st.integers(1, 12), groups=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_pack_roundtrip_arbitrary_shape_property(bits, lead, t, groups, seed):
+    """pack/unpack is lossless for ANY leading shape and bit-width, as long
+    as the last axis is a pack-factor multiple (the packing contract)."""
+    rng = np.random.default_rng(seed)
+    c = groups * packing.pack_factor(bits)
+    codes = rng.integers(0, 2**bits, size=(*lead, t, c)).astype(np.int32)
+    packed = packing.pack(jnp.asarray(codes), bits)
+    assert packed.shape == (*lead, t, c // packing.pack_factor(bits))
+    np.testing.assert_array_equal(
+        np.asarray(packing.unpack(packed, bits)), codes)
+
+
+@given(t=st.integers(2, 16), c=st.sampled_from([8, 16]),
+       bits=st.sampled_from([2, 4]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_rejects_non_divisible_last_dim_property(t, c, bits, seed):
+    """Indivisible last dims must raise, never silently truncate codes."""
+    rng = np.random.default_rng(seed)
+    bad = c + 1  # pack factors are 2/4, so c+1 never divides
+    codes = rng.integers(0, 2**bits, size=(t, bad)).astype(np.int32)
+    with pytest.raises(ValueError):
+        packing.pack(jnp.asarray(codes), bits)
+
+
 # ---------------------------------------------------------------------------
 # quantizers
 # ---------------------------------------------------------------------------
@@ -84,6 +113,37 @@ def test_dequant_within_scale_bound(bits, seed, scheme):
         scale = scale * qt.channel_scale.astype(jnp.float32)
     bound = jnp.broadcast_to(scale, x.shape) * 0.5001 + 1e-5
     assert bool(jnp.all(err <= bound))
+
+
+@given(bits=st.sampled_from([2, 4, 8]), exp=st.sampled_from([-6, -4, -2, 2, 4, 6]),
+       scheme=st.sampled_from(SCHEMES), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_quant_scale_monotone_under_rescaling(bits, exp, scheme, seed):
+    """Monotone scale handling: scaling the input by 2^e (even e, exact in
+    fp for CST's sqrt normalizer too) must leave the integer codes bitwise
+    unchanged and scale every quantization parameter by exactly 2^e — the
+    quantizer's scales track the data, the codes do not drift."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32) * 3)
+    q1 = quant.quantize(x, bits, scheme)
+    q2 = quant.quantize(x * (2.0 ** exp), bits, scheme)
+    np.testing.assert_array_equal(np.asarray(q1.codes), np.asarray(q2.codes))
+    np.testing.assert_array_equal(np.asarray(q1.zero), np.asarray(q2.zero))
+    np.testing.assert_allclose(np.asarray(q2.dequantize()),
+                               np.asarray(q1.dequantize()) * 2.0 ** exp,
+                               rtol=1e-6, atol=0)
+
+
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_tokenwise_codes_monotone_property(bits, seed):
+    """Uniform quantization is order-preserving: sorted channel values within
+    a token yield non-decreasing codes (round(x/scale + zero) is monotone)."""
+    rng = np.random.default_rng(seed)
+    x = np.sort(rng.normal(size=(4, 16)).astype(np.float32), axis=-1)
+    qt = quant.quantize(jnp.asarray(x), bits, "tokenwise")
+    codes = np.asarray(packing.unpack(qt.codes, bits))
+    assert (np.diff(codes, axis=-1) >= 0).all()
 
 
 def test_raw16_identity(rng):

@@ -15,6 +15,64 @@ from repro.core.policy import CompressionConfig
 from repro.models import registry
 from repro.serving import (ContinuousEngine, Request, SamplingParams,
                            ServeConfig, ServingEngine, pack_requests)
+from repro.serving.engine import probe_flag
+
+
+# ---------------------------------------------------------------------------
+# Probe schedule (paper Alg. 3) — regression for the off-by-one class of bug
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("interval", [8, 10, 16, 20, 100])
+def test_probe_recent_fires_every_interval_for_all_offsets(interval):
+    """The recent-token probe must fire in EVERY recompress interval of every
+    request, regardless of the counter offset its admission step gave it.
+
+    Guards the staggered-admission path against the `>= interval - n_recent`
+    vs `> interval - n_recent` off-by-one: with n_recent == 1 the buggy
+    comparison never fires the recent probe at all, leaving saliency scores
+    to the ~5% random probes alone.  Deterministic: the schedule is a pure
+    function of (counter, interval, seed)."""
+    n_recent = max(interval // 20, 1)
+    n_cycles = 50
+    fires = np.array([probe_flag(c, interval) for c in range(n_cycles * interval)])
+    # (1) the LAST counter of each interval always probes (recent component;
+    # the random component alone cannot cover all cycles)
+    last = fires.reshape(n_cycles, interval)[:, -1]
+    assert last.all(), f"recent probe missed in cycles {np.flatnonzero(~last)}"
+    # (2) exactly the last n_recent counters are guaranteed: every window of
+    # `interval` consecutive counters — any admission offset — sees >= n_recent
+    for offset in range(interval):
+        window = fires[offset:offset + interval]
+        assert window.sum() >= n_recent, (offset, int(window.sum()))
+
+
+def test_probe_flags_follow_slot_counters_under_staggered_admission(rng):
+    """The engine must key each slot's probe flag on the slot's OWN token
+    counter, not the global engine step: a request admitted 3 steps late
+    sees the schedule shifted by exactly 3 (any counter offset)."""
+    cfg, ccfg, scfg, params = _continuous_setup(max_new=20)
+    eng = ContinuousEngine(cfg, ccfg, scfg, params)
+    recorded = []
+    orig = eng._decode_masked
+
+    def spy(p, caches, tok, probes, active):
+        recorded.append(np.asarray(probes).copy())
+        return orig(p, caches, tok, probes, active)
+
+    eng._decode_masked = spy
+    prompts = [rng.integers(2, cfg.vocab, size=(48,)).astype(np.int32)
+               for _ in range(2)]
+    eng.submit(Request(tokens=prompts[0]))
+    for _ in range(3):
+        eng.step()
+    eng.submit(Request(tokens=prompts[1]))  # admitted 3 steps late
+    for _ in range(10):
+        eng.step()
+    interval = ccfg.recompress_interval
+    for t, pr in enumerate(recorded):
+        assert pr[0] == probe_flag(t, interval, scfg.seed), t
+        if t >= 3:  # slot 1's counter lags the engine step by its admission
+            assert pr[1] == probe_flag(t - 3, interval, scfg.seed), t
 
 
 def _engine(policy="zipcache", arch="yi-6b", max_new=20, **kw):
