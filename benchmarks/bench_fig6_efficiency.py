@@ -124,6 +124,9 @@ def run():
     # ---- measured (CPU): mixed vs paged cache layout, slot-level ops
     run_backend_ops()
 
+    # ---- measured (CPU): steady-state decode attention across decode paths
+    run_decode_steady_state()
+
 
 def run_backend_ops():
     """Mixed vs paged cache layout on the continuous-batching hot ops:
@@ -168,6 +171,66 @@ def run_backend_ops():
         common.emit(f"fig6.backend_ops.{kind}", t_ins,
                     f"free_s:{t_fre:.2e};recompress1_s:{t_rc:.2e};"
                     f"packed_B:{pk};overhead_B:{ov}")
+
+
+def run_decode_steady_state():
+    """Steady-state decode attention (full batch, no slot churn) across the
+    three decode paths: mixed (dense arrays read in place), paged-gather
+    (pages gathered into a dense view every step — the tax the paged layout
+    used to pay unconditionally), and paged-kernel (the Pallas kernel walks
+    the page tables and dequantizes pages in place).
+
+    Also reports the HLO-level gather traffic the kernel removes: bytes
+    moved by gather/dynamic-slice fusions in the lowered attend program
+    (launch/hlo_cost.py on the compiled HLO).  CPU wall-clock for the
+    paged-kernel row runs the kernel in INTERPRET mode — meaningful for
+    correctness and for the traffic accounting, not for kernel speed; the
+    roofline claim for the fused path is the decode term in fig6.analytic."""
+    import jax.numpy as jnp
+
+    from repro.core import backend as backend_lib
+    from repro.core.policy import CompressionConfig
+    from repro.launch import hlo_cost
+
+    ccfg = CompressionConfig.zipcache()
+    b, hk, h, l, d, max_len = 8, 4, 16, 512, 64, 640
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(b, hk, l, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, hk, l, d)).astype(np.float32))
+    s = jnp.asarray(rng.uniform(size=(b, l)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(b, h, d)).astype(np.float32))
+
+    for label, kind, kernel in (("mixed", "mixed", False),
+                                ("paged_gather", "paged", False),
+                                ("paged_kernel", "paged", True)):
+        be = backend_lib.of(ccfg, kind=kind, page_size=64, paged_kernel=kernel)
+        cache = be.compress_prefill(k, v, s, max_len, dtype=jnp.bfloat16)
+        att = jax.jit(lambda q, c: be.attend(q, c).out)
+        jax.block_until_ready(att(q, cache))  # compile (cached for .lower too)
+        t = common.timeit(lambda: jax.block_until_ready(att(q, cache)), n=10)
+        hlo = att.lower(q, cache).compile().as_text()
+        cost = hlo_cost.analyze(hlo)
+        # gather traffic: bytes through gather/dynamic-slice ops (the dense
+        # view materialization; ~0 for mixed and for the in-place kernel).
+        # Same gating as hlo_cost.analyze's sliced-op accounting: top-level
+        # ops of live computations only (fusion bodies are counted through
+        # their fusion op; dead computations not at all), loop-scaled.
+        comps = hlo_cost.parse_module(hlo)
+        mult = hlo_cost.multipliers(comps, hlo_cost._find_entry(comps, hlo))
+        gather_b = sum(
+            mult[comp.name] * 2.0 * op.out_bytes
+            for comp in comps.values()
+            if mult.get(comp.name, 0.0) and not comp.is_fusion_body
+            for op in comp.ops
+            if op.kind in ("gather", "dynamic-slice")
+            or (op.kind == "fusion" and ("gather" in op.name
+                                         or "dynamic-slice" in op.name)))
+        # mark rows whose kernel ran in interpret mode: their wall-clock and
+        # HLO bytes describe the interpreter loop, not the fused TPU kernel
+        interp = kernel and jax.default_backend() != "tpu"
+        common.emit(f"fig6.decode_steady.{label}", t,
+                    f"hbm_B:{cost.hbm_bytes:.3g};gather_B:{gather_b:.3g}"
+                    + (";interpret_mode:1" if interp else ""))
 
 
 def run_continuous_vs_lockstep():

@@ -23,13 +23,16 @@ Choosing a backend (--backend): "mixed" keeps the cache as dense per-slot
 arrays (mesh-shardable, the default); "paged" stores the payload in
 fixed-size pages behind per-slot page tables, so admitting/retiring a
 request touches only that slot's pages and each slot's staging window folds
-with a per-slot program — at the cost of gathering pages into a dense view
-for each decode step's attention (mixed reads in place).  Greedy output is
-token-identical either way (tests/test_backend_conformance.py) — pick paged
-when slots churn a lot, mixed for steady batches or mesh sharding.
+with a per-slot program.  By default paged decode attention gathers pages
+into a dense view each step; --paged-kernel on replaces that gather with a
+Pallas kernel that walks the page tables and dequantizes pages in place.
+Greedy output is token-identical across all three configurations
+(tests/test_backend_conformance.py) — pick paged when slots churn a lot,
+mixed for steady batches or mesh sharding.
 
     PYTHONPATH=src python examples/serve_zipcache.py [--arch yi-6b]
                                                      [--backend paged]
+                                                     [--paged-kernel on]
 """
 
 import argparse
@@ -55,7 +58,13 @@ def main():
                     help="KV cache layout (token-identical greedy output; "
                          "paged = page-local slot insert/free)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--paged-kernel", default="off", choices=("on", "off"),
+                    help="--backend paged only: decode attention via the "
+                         "page-walking Pallas kernel instead of the "
+                         "per-step dense gather")
     args = ap.parse_args()
+    if args.paged_kernel == "on" and args.backend != "paged":
+        ap.error("--paged-kernel on requires --backend paged")
 
     cfg = configs.get_arch(args.arch, smoke=True)  # reduced config: CPU-friendly
     params = registry.materialize_params(cfg, 0)
@@ -64,7 +73,8 @@ def main():
                                fp_window=16, recompress_interval=16)
     scfg = ServeConfig(batch_size=args.slots, prompt_len=args.prompt_len,
                        max_new_tokens=args.max_new,
-                       backend=args.backend, page_size=args.page_size)
+                       backend=args.backend, page_size=args.page_size,
+                       paged_kernel=args.paged_kernel == "on")
 
     # ---- continuous batching: more requests than slots, mixed budgets ----
     print(f"== continuous serving {args.arch} (reduced config): "

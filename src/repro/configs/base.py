@@ -176,6 +176,9 @@ class ShapeConfig:
     page_size: int = 64  # tokens per page ("paged" only; trade-off: small
     #                      pages waste less partial-page capacity, large
     #                      pages amortize page-table addressing
+    paged_kernel: bool = False  # "paged" only: decode attention via the
+    #                      page-walking Pallas kernel (kernels/paged_qattn)
+    #                      instead of gathering a dense view every step
 
 
 SHAPES = {

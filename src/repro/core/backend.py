@@ -52,8 +52,14 @@ class CacheBackend(Protocol):
         ...
 
     def attend(self, q, cache, scale: Optional[float] = None,
-               impl: str = "ref", ctx=None) -> kvc.DecodeAttnOut:
-        """One-token decode attention over the cache."""
+               impl: str = "ref", ctx=None, is_probe=None) -> kvc.DecodeAttnOut:
+        """One-token decode attention over the cache.
+
+        is_probe: optional () or (b,) probe flags for this step.  Backends
+        whose fast path approximates the softmax row (the paged Pallas
+        kernel's flash merge) use it to produce EXACT slot weights on probe
+        steps, keeping saliency state bitwise identical to the reference
+        path; backends with exact weights ignore it."""
         ...
 
     def update_probe(self, cache, slot_weights, is_probe) -> Any:
@@ -99,7 +105,9 @@ class MixedKVBackend:
     def append(self, cache, k_t, v_t, active=None):
         return kvc.append_token(cache, k_t, v_t, active=active)
 
-    def attend(self, q, cache, scale=None, impl="ref", ctx=None):
+    def attend(self, q, cache, scale=None, impl="ref", ctx=None, is_probe=None):
+        # is_probe unused: every decode path of the mixed layout computes
+        # the exact softmax row already
         return kvc.attend_decode(q, cache, scale=scale, impl=impl, ctx=ctx)
 
     def update_probe(self, cache, slot_weights, is_probe):
@@ -129,20 +137,29 @@ BACKEND_KINDS = ("mixed", "paged")
 
 
 def of(ccfg: Optional[CompressionConfig], kind: str = "mixed",
-       page_size: Optional[int] = None):
+       page_size: Optional[int] = None, paged_kernel: bool = False):
     """Backend for a policy config (None passes through for train-only ctxs).
 
     kind: "mixed" (dense per-slot layout, core/kvcache.py) or "paged"
     (page-pool layout behind per-slot page tables, core/paged.py).
+    paged_kernel: route the paged backend's decode attention through the
+    page-walking Pallas kernel (kernels/paged_qattn) instead of gathering a
+    dense view each step; only meaningful with kind="paged".
     """
     if ccfg is None:
         return None
     if kind == "mixed":
+        if paged_kernel:
+            raise ValueError(
+                "paged_kernel=True requires the paged cache backend "
+                "(kind='paged'); the mixed layout reads its dense arrays "
+                "in place")
         return MixedKVBackend(ccfg)
     if kind == "paged":
         from repro.core import paged
         return paged.PagedKVBackend(
-            ccfg, page_size=page_size if page_size else paged.DEFAULT_PAGE_SIZE)
+            ccfg, page_size=page_size if page_size else paged.DEFAULT_PAGE_SIZE,
+            use_kernel=paged_kernel)
     raise ValueError(f"unknown cache backend {kind!r}; one of {BACKEND_KINDS}")
 
 

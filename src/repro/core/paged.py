@@ -521,10 +521,18 @@ class PagedKVBackend:
     Smaller pages waste less capacity to partial-page padding but grow the
     page table and scatter/gather fan-out; larger pages amortize addressing
     but pad each segment up to a page multiple per slot.
+
+    `use_kernel=True` routes decode attention through the paged Pallas
+    kernel (kernels/paged_qattn): pages are dequantized and consumed in
+    place through the page table — no dense (slots, heads, seq, dim) gather
+    per step.  Policies the kernel doesn't cover (groupwise/tokenwise
+    stores) silently use the gather+dense fallback, which remains the
+    reference the kernel is verified against (tests/test_paged_qattn.py).
     """
 
     ccfg: CompressionConfig
     page_size: int = DEFAULT_PAGE_SIZE
+    use_kernel: bool = False
 
     def init_cache(self, b, h_kv, d, max_len, dtype=jnp.bfloat16, d_v=None):
         return from_mixed(kvc.init_cache(self.ccfg, b, h_kv, d, max_len,
@@ -539,9 +547,43 @@ class PagedKVBackend:
     def append(self, cache, k_t, v_t, active=None):
         return append_token(cache, k_t, v_t, active=active)
 
-    def attend(self, q, cache, scale=None, impl="ref", ctx=None):
+    def attend(self, q, cache, scale=None, impl="ref", ctx=None, is_probe=None):
+        if self.use_kernel:
+            from repro.kernels import paged_qattn
+            if paged_qattn.kernel_supported(cache):
+                return self.attend_paged(q, cache, scale=scale,
+                                         is_probe=is_probe, impl=impl, ctx=ctx)
         return kvc.attend_decode(q, cache.dense_view(), scale=scale,
                                  impl=impl, ctx=ctx)
+
+    def attend_paged(self, q, cache, scale=None, is_probe=None,
+                     impl="ref", ctx=None):
+        """Beyond the protocol: decode attention that walks the page tables
+        and dequantizes page-by-page in the kernel — the dense view is never
+        materialized.  Same (out, slot_weights) contract as `attend`.
+
+        Probe steps are the exception: the kernel's flash merge reassociates
+        the softmax, so its slot weights agree with the reference only to
+        float tolerance — enough for attention output, but recompression
+        top-k's near-tied saliency ranks would drift.  When `is_probe` is
+        given and any row probes this step (~probe_ratio of steps), the
+        weights are recomputed through the gather path so the accumulated
+        saliency state stays BITWISE identical to the gather/mixed engines
+        (ZipCache's probe needs the full softmax row regardless — paper
+        Eq. 8); all other steps never touch a dense view.  `impl`/`ctx`
+        parameterize that probe-step recompute so it runs the SAME program
+        the gather fallback would (e.g. decode_impl="int8_algebra") — the
+        bitwise claim is against this backend with the kernel off."""
+        from repro.kernels import paged_qattn
+        dec = paged_qattn.attend_paged(q, cache, scale=scale)
+        if is_probe is None:
+            return dec
+        def exact_w(_):
+            return kvc.attend_decode(q, cache.dense_view(), scale=scale,
+                                     impl=impl, ctx=ctx).slot_weights
+        w = jax.lax.cond(jnp.any(is_probe), exact_w,
+                         lambda _: dec.slot_weights, None)
+        return kvc.DecodeAttnOut(dec.out, w)
 
     def update_probe(self, cache, slot_weights, is_probe):
         # metadata-only op; the mixed implementation duck-types onto the

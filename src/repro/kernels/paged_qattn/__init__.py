@@ -1,0 +1,1 @@
+from repro.kernels.paged_qattn.ops import attend_paged, kernel_supported  # noqa: F401

@@ -1,0 +1,130 @@
+"""Pure-jnp oracle for paged quantized-cache decode attention.
+
+Mirrors the kernel's structure — walk a slot's page table, dequantize each
+page with the DENSE per-slot parameters, accumulate flash-style — without
+Pallas, so the kernel has an independently-derived comparator that never
+materializes the full cache either (each page is dequantized from its pool
+entry, in logical page order).
+
+`merge_segments_weights` is the shared flash-decoding combiner: both the
+kernel wrapper (ops.py) and this oracle feed it per-segment stats
+(acc, m, l, p-relative-to-m), so the segment merge math is literally the
+same code on both paths.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+NEG_INF = -1e30
+
+
+def dequant_page_ref(codes, bits, scale_t, zero_t, scale_c, zero_c,
+                     channel_scale, dtype=jnp.float32):
+    """Dequantize ONE page of codes (hk, page, c_packed) -> (hk, page, d) f32.
+
+    Exactly one of the (tokenwise scale_t/zero_t) and (channelwise
+    scale_c/zero_c) parameter pairs is given; channel_scale is the CST
+    normalizer (or None).  bits >= 16 passes raw values through.  `dtype`
+    replicates `QuantizedTensor.dequantize`'s final store-dtype rounding
+    (bf16 in serving) so page-wise and dense dequantization agree bitwise."""
+    if bits >= 16:
+        return codes.astype(jnp.float32)
+    x = packing.unpack(codes, bits, jnp.float32)
+    if scale_c is not None:
+        x = (x - zero_c.astype(jnp.float32)) * scale_c.astype(jnp.float32)
+    else:
+        x = (x - zero_t.astype(jnp.float32)) * scale_t.astype(jnp.float32)
+    if channel_scale is not None:
+        x = x * channel_scale.astype(jnp.float32)
+    return x.astype(dtype).astype(jnp.float32)
+
+
+def segment_stats_ref(
+    q: jnp.ndarray,           # (b, h, d)
+    k: jnp.ndarray,           # (b, hk, S, d) f32 (dequantized)
+    v: jnp.ndarray,           # (b, hk, S, dv)
+    valid: jnp.ndarray,       # (b, S)
+    scale: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Unnormalized single-token attention over one segment.
+
+    Returns (acc (b,h,dv), m (b,h), l (b,h), p (b,h,S)) with `p` the
+    unnormalized probabilities relative to the segment max `m` — the same
+    contract the kernel wrapper produces after its running-max rescale."""
+    b, h, d = q.shape
+    hk = k.shape[1]
+    g = h // hk
+    qg = q.reshape(b, hk, g, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, k)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgs,bhsv->bhgv", p, v)
+    sl = s.shape[-1]
+    return (acc.reshape(b, h, -1), m.reshape(b, h), l.reshape(b, h),
+            p.reshape(b, h, sl))
+
+
+def merge_segments_weights(
+    stats: Sequence[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]],
+) -> Tuple[jnp.ndarray, List[jnp.ndarray]]:
+    """Flash-decoding merge of [(acc, m, l, p-relative-to-m), ...].
+
+    Returns (out (b,h,dv) f32 normalized, [w_seg (b,h,S_seg) ...] — the
+    per-head softmax row split back per segment).  Rows with no valid slot
+    anywhere produce zeros (the dense path emits a garbage uniform average
+    there; such rows are masked by every consumer)."""
+    m = jnp.stack([s[1] for s in stats], 0)
+    m_all = jnp.max(m, axis=0)                      # (b, h)
+    out = 0.0
+    l_all = 0.0
+    for acc, mi, li, _ in stats:
+        w = jnp.exp(mi - m_all)
+        out = out + acc * w[..., None]
+        l_all = l_all + li * w
+    denom = jnp.maximum(l_all, 1e-30)
+    weights = [p * (jnp.exp(mi - m_all) / denom)[..., None]
+               for _, mi, _, p in stats]
+    return out / denom[..., None], weights
+
+
+def gather_pages_ref(pages: jnp.ndarray, table: jnp.ndarray,
+                     capacity: int) -> jnp.ndarray:
+    """(P,hk,page,c) via table (b,npp) -> (b,hk,capacity,c) in logical order."""
+    g = pages[table]                                # (b, npp, hk, page, c)
+    g = jnp.swapaxes(g, 1, 2)
+    return g.reshape(g.shape[0], g.shape[1], -1, g.shape[-1])[:, :, :capacity]
+
+
+def paged_segment_ref(q, k_pages, k_scale, k_zero, v_pages, v_cscale,
+                      v_tscale, v_tzero, pos, table, *, k_bits: int,
+                      v_bits: int, scale: float, k_dtype=jnp.float32,
+                      v_dtype=jnp.float32):
+    """Oracle for `kernel.qattn_paged_segment`: dequantize page-by-page in
+    logical order (each page with its slice of the dense parameters), then
+    compute the segment stats one-shot.  Operand layout identical to the
+    kernel wrapper (S_pad-padded metadata)."""
+    b, h, d = q.shape
+    npp = table.shape[1]
+    page = k_pages.shape[2]
+    s_pad = npp * page
+    k_parts, v_parts = [], []
+    for j in range(npp):
+        kc = k_pages[table[:, j]]                   # (b, hk, page, ck)
+        vc = v_pages[table[:, j]]
+        sl = slice(j * page, (j + 1) * page)
+        k_parts.append(dequant_page_ref(kc, k_bits, None, None,
+                                        k_scale, k_zero, None, dtype=k_dtype))
+        v_parts.append(dequant_page_ref(vc, v_bits, v_tscale[:, :, sl],
+                                        v_tzero[:, :, sl], None, None,
+                                        v_cscale, dtype=v_dtype))
+    k = jnp.concatenate(k_parts, axis=2)            # (b, hk, S_pad, d)
+    v = jnp.concatenate(v_parts, axis=2)
+    return segment_stats_ref(q, k, v, pos >= 0, scale)

@@ -35,7 +35,7 @@ _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
-_OPERANDS_RE = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]*)\}")
@@ -55,6 +55,30 @@ _FREE_OPS = {
 #   dynamic-update-slice: read+write the update span -> 2 x update (operand 1)
 #   gather: read selected rows + write out           -> 2 x out
 _SLICED_OPS = {"dynamic-slice", "gather"}
+
+
+def _extract_operands(rest: str, kind: str) -> List[str]:
+    """Operand names of `<shape> kind(<operand list>), attrs...`.
+
+    The operand list is the balanced-paren span right after the op kind.
+    Newer jax prints bare names (``dot(%a, %b)``); the pinned 0.4.37 prints
+    inline operand shapes (``dot(f32[128,64]{1,0} %a, ...)``) — so scan to
+    the matching close paren and pull every %name inside, which handles both
+    (attrs like ``calls=%comp`` sit after the close paren and are excluded).
+    """
+    start = rest.find(kind + "(")
+    if start < 0:
+        return []
+    i = start + len(kind)
+    depth = 0
+    for j in range(i, len(rest)):
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return _NAME_RE.findall(rest[i:j + 1])
+    return _NAME_RE.findall(rest[i:])
 
 
 def _shape_bytes(shape_str: str) -> float:
@@ -121,10 +145,7 @@ def parse_module(hlo: str) -> Dict[str, Computation]:
         kind = kind_m.group(1) if kind_m else rest.split("(")[0].split()[-1]
         shape_str = rest.split(kind + "(")[0] if (kind + "(") in rest else rest
         out_bytes = _shape_bytes(shape_str)
-        ops_m = _OPERANDS_RE.search(rest[rest.find(kind + "(") :]) if (kind + "(") in rest else None
-        operands = []
-        if ops_m:
-            operands = [t.strip().lstrip("%") for t in ops_m.group(1).split(",")]
+        operands = _extract_operands(rest, kind)
         op = Op(name, kind, out_bytes, out_dims, operands, s)
         cur.ops.append(op)
         cur.shapes[name] = (out_bytes, out_dims)

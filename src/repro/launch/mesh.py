@@ -1,6 +1,12 @@
 """Production mesh construction (system-prompt contract).
 
 Functions only — importing this module never touches jax device state.
+
+Built on plain `jax.make_mesh(shape, axes)`, which exists unchanged from the
+pinned jax 0.4.37 through current releases.  Axis types are deliberately NOT
+passed: the default (auto sharding on every axis) is what this codebase
+relies on, and `jax.sharding.AxisType` only exists in newer jax — spelling
+it out broke the pin (ROADMAP §Other, fixed).
 """
 
 from __future__ import annotations
@@ -8,19 +14,15 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
-
-
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (elastic re-scale / tests)."""
-    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=_auto(len(axes)))
+    return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def data_axes_of(mesh) -> tuple:

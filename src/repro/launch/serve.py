@@ -21,6 +21,12 @@ Choosing a backend (--backend):
          (tests/test_backend_conformance.py).  Single-host today.
 --page-size trades internal fragmentation (up to page_size-1 wasted tokens
 per segment per slot) against page-table size and scatter/gather fan-out.
+--paged-kernel on removes the paged backend's remaining decode-path tax:
+attention runs in a Pallas kernel that walks the page tables and
+dequantizes pages in place, instead of gathering every slot's pages into a
+dense view each step.  Greedy output stays token-identical
+(tests/test_backend_conformance.py); off keeps the gather path, which is
+the bitwise cross-backend reference.
 """
 
 from __future__ import annotations
@@ -58,7 +64,13 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=64,
                     help="tokens per page for --backend paged (smaller = "
                          "less partial-page waste, larger = less bookkeeping)")
+    ap.add_argument("--paged-kernel", default="off", choices=("on", "off"),
+                    help="--backend paged only: decode attention via the "
+                         "page-walking Pallas kernel (no per-step dense "
+                         "gather); off = gather+dense reference path")
     args = ap.parse_args(argv)
+    if args.paged_kernel == "on" and args.backend != "paged":
+        ap.error("--paged-kernel on requires --backend paged")
 
     cfg = configs.get_arch(args.arch, smoke=args.smoke)
     mesh = None
@@ -76,7 +88,8 @@ def main(argv=None):
         if args.smoke else ccfg
     scfg = ServeConfig(batch_size=args.batch, prompt_len=args.prompt_len,
                        max_new_tokens=args.max_new, seed=args.seed,
-                       backend=args.backend, page_size=args.page_size)
+                       backend=args.backend, page_size=args.page_size,
+                       paged_kernel=args.paged_kernel == "on")
     # (--backend paged with a mesh is rejected where the backend is built,
     # launch/steps.serve_ctx — programmatic callers hit the same guard)
 

@@ -142,7 +142,9 @@ def serve_ctx(cfg: ArchConfig, shape: ShapeConfig, mesh,
     """RunCtx + probe for a serving shape. max cache = seq_len + decode budget.
 
     The cache layout comes from the shape (`shape.cache_backend` /
-    `shape.page_size`): "mixed" (default) or "paged" — see core/backend.py.
+    `shape.page_size` / `shape.paged_kernel`): "mixed" (default) or "paged",
+    optionally with the page-walking Pallas decode kernel — see
+    core/backend.py.
     """
     from repro.core import backend as backend_lib
 
@@ -161,7 +163,8 @@ def serve_ctx(cfg: ArchConfig, shape: ShapeConfig, mesh,
             "before they can shard over a mesh (ROADMAP §Serving) — use "
             "cache_backend='mixed' with a mesh")
     backend = backend_lib.of(ccfg, kind=kind,
-                             page_size=getattr(shape, "page_size", None))
+                             page_size=getattr(shape, "page_size", None),
+                             paged_kernel=getattr(shape, "paged_kernel", False))
     return _run_ctx(cfg, mesh, ccfg=ccfg, probe=probe,
                     max_cache_len=max_cache_len, q_block=q_block,
                     decode_impl=decode_impl, backend=backend)

@@ -7,9 +7,11 @@ Three execution modes:
     post-softmax probabilities over probe rows (paper Eq. 9), pooled over
     heads.  This is the pure-JAX mirror of kernels/probe_flash; on TPU the
     Pallas kernel replaces it 1:1.
-  * decode: one-token attention against a MixedKVCache (core/kvcache.py) —
-    reference path dequantizes; the Pallas decode_qattn kernel consumes packed
-    stores directly.
+  * decode: one-token attention against the cache behind ctx.backend —
+    the mixed reference path dequantizes dense stores (core/kvcache.py); the
+    Pallas decode_qattn kernel consumes packed stores directly; and for the
+    paged layout with `use_kernel`, the paged_qattn kernel walks the page
+    tables and dequantizes pages in place (no per-step dense gather).
 
 Shapes: activations (b, l, e); heads layout (b, h, l, d).
 """

@@ -170,7 +170,13 @@ def apply_layer_decode(
         position = cache_el.length  # (b,)
         q_t, k_t, v_t = attn.gqa_decode_qkv(params["attn"], h, cfg, position)
         cache_el = be.append(cache_el, k_t, v_t, active=active)
-        dec = be.attend(q_t, cache_el, impl=ctx.decode_impl, ctx=ctx)
+        # backend-dispatched: mixed reads dense stores in place; paged
+        # gathers pages — or, with use_kernel, runs the page-walking Pallas
+        # kernel (kernels/paged_qattn) so no dense view is materialized.
+        # is_probe lets kernel backends take the exact-softmax path on probe
+        # steps (saliency state stays bitwise equal to the reference).
+        dec = be.attend(q_t, cache_el, impl=ctx.decode_impl, ctx=ctx,
+                        is_probe=is_probe)
         cache_el = be.update_probe(cache_el, dec.slot_weights, is_probe)
         y = jnp.einsum("bhd,hde->be", dec.out, params["attn"]["wo"])
     elif mixer == "mla":

@@ -175,13 +175,13 @@ def decode_step(params: dict, token: jnp.ndarray, caches: Any, cfg: ArchConfig,
         position = self_cache.length
         q_t, k_t, v_t = attn.gqa_decode_qkv(p["self_attn"], h, cfg, position)
         self_cache = be.append(self_cache, k_t, v_t, active=active)
-        dec = be.attend(q_t, self_cache)
+        dec = be.attend(q_t, self_cache, is_probe=is_probe)
         self_cache = be.update_probe(self_cache, dec.slot_weights, is_probe)
         x_t = x_t + jnp.einsum("bhd,hde->be", dec.out, p["self_attn"]["wo"])
 
         hx = common.rms_norm(x_t, p["ln_x"], cfg.norm_eps)
         qx = jnp.einsum("be,ehd->bhd", hx, p["cross_attn"]["wq"])
-        decx = be.attend(qx, cross_cache)
+        decx = be.attend(qx, cross_cache, is_probe=is_probe)
         cross_cache = be.update_probe(cross_cache, decx.slot_weights, is_probe)
         x_t = x_t + jnp.einsum("bhd,hde->be", decx.out, p["cross_attn"]["wo"])
 

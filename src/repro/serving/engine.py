@@ -82,6 +82,12 @@ class ServeConfig:
     # a per-slot program instead of full-batch recomputation.
     backend: str = "mixed"
     page_size: int = 64              # tokens per page ("paged" only)
+    # "paged" only: decode attention through the page-walking Pallas kernel
+    # (kernels/paged_qattn) — the per-step dense gather disappears; greedy
+    # output stays token-identical to the gather path and to "mixed"
+    # (tests/test_backend_conformance.py).  Off by default: the gather path
+    # is the bitwise cross-backend reference.
+    paged_kernel: bool = False
     # sampling is per-request (SamplingParams); the lockstep generate() path
     # is always greedy — it is the reference the continuous engine is
     # verified token-identical against
@@ -183,7 +189,8 @@ class _EngineBase:
         self.scfg = scfg
         self.params = params
         shape = ShapeConfig("serve", scfg.prompt_len, scfg.batch_size, "prefill",
-                            cache_backend=scfg.backend, page_size=scfg.page_size)
+                            cache_backend=scfg.backend, page_size=scfg.page_size,
+                            paged_kernel=scfg.paged_kernel)
         self.ctx = steps_lib.serve_ctx(cfg, shape, mesh, ccfg,
                                        decode_budget=scfg.max_new_tokens,
                                        q_block=min(512, scfg.prompt_len))

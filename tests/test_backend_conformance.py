@@ -131,11 +131,20 @@ def test_insert_free_reinsert_matches_fresh_prefill(kind, rng):
 # (c) continuous engine: token-identical across backends (acceptance)
 # ---------------------------------------------------------------------------
 
-def test_continuous_engine_token_identical_across_backends(rng):
-    """Greedy continuous-batching output must be identical between the mixed
-    and paged layouts — including a request admitted mid-run into a freed
-    slot, and windows folding on per-slot cadence (max_new > interval, so
-    both the early and the late-admitted slot cross a recompression)."""
+ENGINE_VARIANTS = {
+    "mixed": dict(backend="mixed", paged_kernel=False),
+    "paged": dict(backend="paged", paged_kernel=False),
+    "paged-kernel": dict(backend="paged", paged_kernel=True),
+}
+
+
+@pytest.fixture(scope="module")
+def engine_outputs():
+    """One continuous-batching scenario — mid-run admission into a freed
+    slot, per-slot recompress cadence (max_new > interval) — run through
+    every decode configuration: mixed, paged with the gather+dense decode
+    path, and paged with the page-walking Pallas kernel (interpret mode)."""
+    rng = np.random.default_rng(0)
     cfg = configs.get_arch("yi-6b", smoke=True)
     ccfg = _ccfg()
     params = registry.materialize_params(cfg, 0)
@@ -144,9 +153,9 @@ def test_continuous_engine_token_identical_across_backends(rng):
 
     outs = {}
     fills = {}
-    for kind in BACKENDS:
+    for name, kw in ENGINE_VARIANTS.items():
         scfg = ServeConfig(batch_size=2, prompt_len=48, max_new_tokens=12,
-                           backend=kind, page_size=8)
+                           page_size=8, **kw)
         eng = ContinuousEngine(cfg, ccfg, scfg, params)
         r0 = eng.submit(Request(tokens=prompts[0]))
         r1 = eng.submit(Request(tokens=prompts[1], max_new_tokens=6))
@@ -158,14 +167,39 @@ def test_continuous_engine_token_identical_across_backends(rng):
         # per-slot cadence state is identical across layouts
         el = jax.tree_util.tree_leaves(
             eng.caches["groups"], is_leaf=backend_lib.is_kv_cache)[0]
-        fills[kind] = np.asarray(el.win_fill)
+        fills[name] = np.asarray(el.win_fill)
         res = eng.run()
-        outs[kind] = {r: res[r] for r in (r0, r1, r2)}
+        outs[name] = {r: res[r] for r in (r0, r1, r2)}
+    return outs, fills
 
+
+def test_continuous_engine_token_identical_across_backends(engine_outputs):
+    """Greedy continuous-batching output must be identical between the mixed
+    and paged layouts — including a request admitted mid-run into a freed
+    slot, and windows folding on per-slot cadence (max_new > interval, so
+    both the early and the late-admitted slot cross a recompression)."""
+    outs, fills = engine_outputs
     np.testing.assert_array_equal(fills["mixed"], fills["paged"])
     for (ra, a), (rb, b) in zip(outs["mixed"].items(), outs["paged"].items()):
         np.testing.assert_array_equal(a.tokens, b.tokens)
         assert a.finish_reason == b.finish_reason
+
+
+def test_continuous_engine_token_identical_with_paged_kernel(engine_outputs):
+    """The paged Pallas decode kernel (--paged-kernel on) must not change a
+    single greedy token vs mixed OR vs the paged gather path, through
+    mid-run admission/retirement and recompressions.  Two mechanisms carry
+    this: probe steps hand back the gather path's softmax row bitwise (so
+    saliency state — and with it every recompression top-k split — stays
+    identical), and the kernel's attention output agrees with the dense
+    path to float tolerance (test_paged_qattn.py)."""
+    outs, fills = engine_outputs
+    for other in ("mixed", "paged"):
+        np.testing.assert_array_equal(fills[other], fills["paged-kernel"])
+        for (ra, a), (rb, b) in zip(outs[other].items(),
+                                    outs["paged-kernel"].items()):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert a.finish_reason == b.finish_reason
 
 
 def test_mla_decode_token_identical_across_backends(rng):

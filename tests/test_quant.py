@@ -134,6 +134,53 @@ def test_quant_scale_monotone_under_rescaling(bits, exp, scheme, seed):
                                rtol=1e-6, atol=0)
 
 
+@given(bits=st.sampled_from([2, 4, 8]), page=st.sampled_from([4, 8, 16, 64]),
+       t=st.integers(1, 60), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_per_page_dequant_accumulate_matches_dense_property(bits, page, t, seed):
+    """The paged decode kernel's core invariant (kernels/paged_qattn): for
+    ANY (page_size, seq_len, bits), splitting a store's codes into pages and
+    dequantizing each page with its slice of the DENSE per-slot parameters
+    is bitwise the one-shot dequantization (dequant is per-token
+    elementwise), and the per-page weighted-value accumulation matches the
+    dense one-shot contraction to float tolerance (the only reassociation
+    paging introduces is the page-sum order)."""
+    from repro.kernels.paged_qattn import ref as pq_ref
+
+    rng = np.random.default_rng(seed)
+    c = 16
+    x = jnp.asarray(rng.normal(size=(t, c)).astype(np.float32) * 2)
+    npp = -(-t // page)
+    pad = npp * page - t
+    for scheme in ("channelwise", "cst"):
+        qt = quant.quantize(x, bits, scheme)
+        dense = np.asarray(qt.dequantize(), np.float32)       # (t, c)
+        codes = jnp.pad(qt.codes, ((0, pad), (0, 0)))
+        if scheme == "cst":
+            ts = jnp.pad(qt.scale, ((0, pad), (0, 0)))
+            tz = jnp.pad(qt.zero, ((0, pad), (0, 0)))
+        pages = []
+        for j in range(npp):
+            sl = slice(j * page, (j + 1) * page)
+            if scheme == "channelwise":
+                pages.append(pq_ref.dequant_page_ref(
+                    codes[sl], bits, None, None, qt.scale, qt.zero, None))
+            else:
+                pages.append(pq_ref.dequant_page_ref(
+                    codes[sl], bits, ts[sl], tz[sl], None, None,
+                    qt.channel_scale))
+        paged = np.concatenate([np.asarray(p) for p in pages], 0)[:t]
+        np.testing.assert_array_equal(paged, dense)           # bitwise
+        # per-page accumulate == dense one-shot contraction
+        w = jnp.asarray(rng.uniform(size=(t,)).astype(np.float32))
+        wp = jnp.pad(w, (0, pad))
+        acc = sum(jnp.einsum("s,sc->c", wp[j * page:(j + 1) * page],
+                             jnp.asarray(pages[j])) for j in range(npp))
+        one_shot = jnp.einsum("s,sc->c", w, jnp.asarray(dense))
+        np.testing.assert_allclose(np.asarray(acc), np.asarray(one_shot),
+                                   atol=1e-4, rtol=1e-5)
+
+
 @given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1))
 @settings(max_examples=30, deadline=None)
 def test_tokenwise_codes_monotone_property(bits, seed):
