@@ -2,7 +2,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-conformance test-kernels test-ci dev serve bench
+.PHONY: test test-fast test-conformance test-kernels test-alloc test-ci \
+    docs-check dev serve bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -11,11 +12,22 @@ test:
 test-fast:
 	$(PYTHON) -m pytest -x -q tests/test_kvcache.py tests/test_quant.py \
 	    tests/test_saliency.py tests/test_serving.py \
-	    tests/test_backend_conformance.py
+	    tests/test_backend_conformance.py tests/test_page_alloc.py
 
-# cross-backend (mixed vs paged vs paged-kernel) cache-layout conformance suite
+# cross-backend (mixed vs paged-static vs paged-kernel vs paged-freelist)
+# cache-layout conformance suite
 test-conformance:
 	$(PYTHON) -m pytest -x -q tests/test_backend_conformance.py
+
+# free-list page allocator: grant/free invariants, occupancy mirror,
+# fragmentation reuse, engine admission deferral
+test-alloc:
+	$(PYTHON) -m pytest -x -q tests/test_page_alloc.py
+
+# README/docs stay mechanically honest: flag tables vs the live argparse
+# surface, python snippets parse, referenced paths exist (tools/check_docs.py)
+docs-check:
+	$(PYTHON) tools/check_docs.py
 
 # Pallas kernel conformance (interpret mode on CPU): cst_quant, probe_flash,
 # decode_qattn, and the paged decode-attention kernel vs its oracles

@@ -121,11 +121,81 @@ def run():
     # ---- measured (CPU): continuous batching vs lockstep, ragged budgets
     run_continuous_vs_lockstep()
 
+    # ---- measured (CPU): static vs free-list page pools, staggered lengths
+    run_pool_elasticity()
+
     # ---- measured (CPU): mixed vs paged cache layout, slot-level ops
     run_backend_ops()
 
     # ---- measured (CPU): steady-state decode attention across decode paths
     run_decode_steady_state()
+
+
+def run_pool_elasticity():
+    """Static vs free-list page allocation under a staggered-length workload
+    (long/short budget mix over 2 slots): the static layout provisions
+    slots x pages-per-slot physical pages per segment up front; the
+    free-list pool is provisioned at a fraction of that and pages flow to
+    whichever request needs them (grant on admission/append/fold, return on
+    retirement/fold — core/alloc.py).  Emitted per layout: wall-clock, the
+    provisioned/peak/live page counts summed over segments, the
+    free-pool-vs-payload byte split from cache_bytes, and how many
+    admissions the free-list engine deferred (out-of-pages backpressure —
+    requests queue instead of failing).  Greedy tokens are identical across
+    the two rows (tests/test_page_alloc.py asserts it bitwise)."""
+    import dataclasses
+
+    from repro import configs
+    from repro.core import alloc as alloc_lib
+    from repro.core.policy import CompressionConfig
+    from repro.models import registry
+    from repro.serving import ContinuousEngine, Request, ServeConfig
+
+    cfg = configs.get_arch("yi-6b", smoke=True)
+    params = registry.materialize_params(cfg, 0)
+    ccfg = dataclasses.replace(CompressionConfig.zipcache(),
+                               fp_window=8, recompress_interval=8)
+    slots, prompt_len, max_new = 2, 8, 40
+    rng = np.random.default_rng(0)
+    n_req = 6
+    prompts = [rng.integers(2, cfg.vocab, size=(prompt_len,)).astype(np.int32)
+               for _ in range(n_req)]
+    budgets = [max_new if i % 2 == 0 else 4 for i in range(n_req)]
+
+    for label, kw in (("static", {}),
+                      ("freelist", dict(page_allocator="freelist",
+                                        pool_fraction=0.75))):
+        scfg = ServeConfig(batch_size=slots, prompt_len=prompt_len,
+                           max_new_tokens=max_new, backend="paged",
+                           page_size=8, **kw)
+        eng = ContinuousEngine(cfg, ccfg, scfg, params)
+        wid = eng.submit(Request(tokens=prompts[0], max_new_tokens=max_new))
+        eng.run()           # warm-up: compile the program family
+        eng.results.pop(wid)
+        rids = [eng.submit(Request(tokens=p, max_new_tokens=bud))
+                for p, bud in zip(prompts, budgets)]
+        t0 = time.perf_counter()
+        eng.run()
+        t = time.perf_counter() - t0
+        tok = sum(len(eng.result(r).tokens) for r in rids)
+        cb = eng.cache_bytes(eng.caches)
+        ps = eng.pool_stats()
+        if ps is None:  # static: every page is provisioned AND slot-owned
+            el = alloc_lib.kv_elements(eng.caches)[0]
+            pages = sum(int(p.shape[-4]) for p in
+                        (el.hi.k_pages, el.lo.k_pages, el.win_k_pages))
+            prov = peak = pages
+            deferrals = 0
+        else:
+            prov = sum(ps[n]["pool_pages"] for n in ("hi", "lo", "win"))
+            peak = sum(ps[n]["peak_used"] for n in ("hi", "lo", "win"))
+            deferrals = ps["deferrals"]
+        common.emit(
+            f"fig6.pool_elasticity.{label}", t * 1e6,
+            f"pages_provisioned:{prov};pages_peak:{peak};"
+            f"util:{peak / max(prov, 1):.2f};useful_tok:{tok};"
+            f"deferrals:{deferrals};packed_B:{cb['packed_bytes']};"
+            f"free_pool_B:{cb['free_pool_bytes']}")
 
 
 def run_backend_ops():

@@ -30,9 +30,20 @@ Greedy output is token-identical across all three configurations
 (tests/test_backend_conformance.py) — pick paged when slots churn a lot,
 mixed for steady batches or mesh sharding.
 
+--page-allocator freelist (paged only) makes the page pools elastic: pages
+are granted to a slot on demand (admission, decode appends, window folds)
+and returned when it retires or folds its staging window, so the pool can
+be provisioned below slots x max_len (--pool-fraction < 1) and a long
+request reuses the pages a short one freed.  When the pool cannot cover a
+new request's worst case, admission defers (visible in the pool stats
+line) instead of corrupting a running slot — and the emitted tokens still
+match the static layouts bitwise.
+
     PYTHONPATH=src python examples/serve_zipcache.py [--arch yi-6b]
                                                      [--backend paged]
                                                      [--paged-kernel on]
+                                                     [--page-allocator freelist]
+                                                     [--pool-fraction 0.75]
 """
 
 import argparse
@@ -62,9 +73,22 @@ def main():
                     help="--backend paged only: decode attention via the "
                          "page-walking Pallas kernel instead of the "
                          "per-step dense gather")
+    ap.add_argument("--page-allocator", default="static",
+                    choices=("static", "freelist"),
+                    help="--backend paged only: freelist grants pages to "
+                         "slots on demand from shared pools (elastic; "
+                         "admission defers when the pool is exhausted)")
+    ap.add_argument("--pool-fraction", type=float, default=1.0,
+                    help="freelist pool size as a fraction of the static "
+                         "worst case (slots x pages-per-slot)")
+    ap.add_argument("--admit-watermark", type=float, default=0.0,
+                    help="freelist admission headroom: fraction of each "
+                         "pool kept free when admitting")
     args = ap.parse_args()
     if args.paged_kernel == "on" and args.backend != "paged":
         ap.error("--paged-kernel on requires --backend paged")
+    if args.page_allocator == "freelist" and args.backend != "paged":
+        ap.error("--page-allocator freelist requires --backend paged")
 
     cfg = configs.get_arch(args.arch, smoke=True)  # reduced config: CPU-friendly
     params = registry.materialize_params(cfg, 0)
@@ -74,7 +98,10 @@ def main():
     scfg = ServeConfig(batch_size=args.slots, prompt_len=args.prompt_len,
                        max_new_tokens=args.max_new,
                        backend=args.backend, page_size=args.page_size,
-                       paged_kernel=args.paged_kernel == "on")
+                       paged_kernel=args.paged_kernel == "on",
+                       page_allocator=args.page_allocator,
+                       pool_fraction=args.pool_fraction,
+                       admit_watermark=args.admit_watermark)
 
     # ---- continuous batching: more requests than slots, mixed budgets ----
     print(f"== continuous serving {args.arch} (reduced config): "
@@ -103,7 +130,14 @@ def main():
               f"({t['tok_per_s']:.1f} tok/s)  first={out.tokens[:6].tolist()}")
     cb = eng.cache_bytes(eng.caches)
     print(f"  scheduler: {n_steps} steps; cache {cb['packed_bytes']} B packed "
-          f"+ {cb['overhead_bytes']} B overhead")
+          f"+ {cb['overhead_bytes']} B overhead "
+          f"({cb['free_pool_bytes']} B of that free pool pages)")
+    ps = eng.pool_stats()
+    if ps is not None:
+        used = {k: f"{v['peak_used']}/{v['pool_pages']}"
+                for k, v in ps.items() if k != "deferrals"}
+        print(f"  page pools: peak used {used}; "
+              f"{ps['deferrals']} admissions deferred")
 
     # ---- lockstep per-policy throughput comparison ----
     prompts = [rng.integers(2, cfg.vocab, size=(args.prompt_len,)).astype(np.int32)

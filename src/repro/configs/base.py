@@ -179,6 +179,12 @@ class ShapeConfig:
     paged_kernel: bool = False  # "paged" only: decode attention via the
     #                      page-walking Pallas kernel (kernels/paged_qattn)
     #                      instead of gathering a dense view every step
+    page_allocator: str = "static"  # "paged" only: "static" pre-assigns
+    #                      every slot its worst-case pages; "freelist" draws
+    #                      pages from shared pools on demand (core/alloc.py)
+    pool_fraction: float = 1.0  # "freelist" only: pool capacity as a
+    #                      fraction of the static worst case
+    #                      (slots x ceil(capacity/page_size) per segment)
 
 
 SHAPES = {

@@ -1,0 +1,404 @@
+"""Free-list page allocator for the elastic paged KV cache layout.
+
+The static paged layout (core/paged.py) pre-assigns every slot its
+worst-case page count at init (`slots x ceil(capacity/page)` physical pages
+per segment, strided round-robin), so the pool must be provisioned for
+`slots x max_len` even when most requests are short.  This module removes
+that rigidity vLLM/PagedAttention-style:
+
+  * one shared page POOL per segment (hi store, lo store, staging window),
+    sized for expected aggregate load (`pool_fraction` of the static worst
+    case), plus one extra SINK page;
+  * an explicit FREE LIST of physical page ids per segment, granted to slots
+    on demand (admission, decode append, staging-window fold) and returned
+    in full on slot retirement and window fold (recompression shrink);
+  * per-slot page-table rows whose unallocated logical entries point at the
+    sink page (`NULL = pool_pages`): reads of never-granted pages land on
+    arbitrary-but-finite sink bytes (masked everywhere — see the zeroing
+    contract in `kvcache._recompress_all`), writes to them are harmlessly
+    absorbed by the sink.
+
+Static-shape discipline: the allocator is HOST-side state.  It mutates page
+tables between jitted steps — pool arrays, table shapes and every decode
+program are compiled once and never retrace; only table VALUES change.
+That is what lets the `kernels/paged_qattn` scalar-prefetch path consume
+allocator-produced (non-strided, arbitrarily permuted) tables unchanged.
+
+Why whole-page grant/return from token COUNTS alone is sound: both
+`compress_prefill` and `recompress` lay each store out with its valid
+tokens as a contiguous prefix (`kvcache._valid_first`), so a store with
+`n` valid tokens lives entirely in its first `ceil(n/page)` logical pages.
+
+Admission-control contract (used by `serving.engine.ContinuousEngine`):
+a request is admitted only when every segment can cover the request's
+WORST-CASE page demand (its prompt plus full decode budget) on top of the
+reservations already outstanding for running slots, minus a configurable
+watermark.  This makes mid-decode grants infallible by construction —
+`PagePoolExhausted` is a typed invariant trip, not an expected event —
+and out-of-pages pressure surfaces as clean admission deferral
+(backpressure) instead of corruption of a running slot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class PagePoolExhausted(RuntimeError):
+    """Typed backpressure signal: the page pool cannot cover a demand.
+
+    Raised by `FreeListAllocator.grant` if a grant would overdraw a free
+    list (an invariant violation when admission control is active), and by
+    the engine on admission when `ServeConfig.backpressure == "error"`.
+    """
+
+
+class PoolCapacityError(ValueError):
+    """A request's worst-case page demand exceeds the pool outright — it can
+    NEVER be admitted at this pool size (raised from `submit`, so oversized
+    requests fail fast instead of deadlocking the queue)."""
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed for a contiguous prefix of `tokens` tokens."""
+    return -(-tokens // page_size) if tokens > 0 else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Occupancy:
+    """Valid-token counts per segment for one slot (window = fill cursor)."""
+    hi: int
+    lo: int
+    win: int
+
+
+def fold_occupancy(occ: Occupancy, s_hi: int, s_lo: int) -> Occupancy:
+    """Post-recompression occupancy (mirror of `kvcache._recompress_all`).
+
+    The window folds into the stores; hi takes the top `s_hi` valid tokens,
+    lo the next `s_lo`, anything beyond is evicted (h2o / kivi / gear
+    capacity rules all reduce to this clamp — for zipcache/mikv the total
+    always fits and nothing is evicted).  For eviction policies with exact
+    score ties this is an upper bound on the true valid counts (safe: the
+    allocator over-holds at most the tied pages until the slot retires).
+    """
+    total = occ.hi + occ.lo + occ.win
+    hi = min(total, s_hi)
+    lo = min(total - hi, s_lo)
+    return Occupancy(hi=hi, lo=lo, win=0)
+
+
+def slice_occupancy(caches) -> Occupancy:
+    """Read the per-segment valid-token counts of a batch=1 prefill slice.
+
+    Valid counts are identical across layers/groups (every layer caches the
+    same token stream), so the first KV cache element is representative.
+    One small host transfer (three position rows) per admission.
+    """
+    el = kv_elements(caches)[0]
+    hi_pos = np.asarray(el.hi.pos)
+    lo_pos = np.asarray(el.lo.pos)
+    fill = np.asarray(el.win_fill)
+    # leaves may carry a leading group axis: (G, 1, S) -> row 0 of group 0
+    return Occupancy(
+        hi=int((hi_pos.reshape(-1, hi_pos.shape[-1])[0] >= 0).sum()),
+        lo=int((lo_pos.reshape(-1, lo_pos.shape[-1])[0] >= 0).sum()),
+        win=int(fill.reshape(-1)[0]))
+
+
+def kv_elements(caches):
+    """All KV cache elements of an arbitrary cache tree (stacked layer/group
+    axes included), in tree order — the canonical way to pull per-layer
+    cache objects out of an engine's `caches` for accounting/telemetry."""
+    import jax
+
+    from repro.core import backend as backend_lib
+
+    flat = jax.tree_util.tree_flatten(
+        caches, is_leaf=backend_lib.is_kv_cache)[0]
+    return [el for el in flat if backend_lib.is_kv_cache(el)]
+
+
+@dataclasses.dataclass
+class _Segment:
+    """Free-list state for one page pool (hi store, lo store, or window)."""
+
+    name: str
+    capacity: int                 # token capacity of the segment
+    page_size: int
+    pool_pages: int               # usable pages (the sink is extra)
+    free: List[int] = dataclasses.field(default_factory=list)
+    table: Optional[np.ndarray] = None   # (slots, npp) int32; NULL == pool_pages
+    granted: Optional[np.ndarray] = None  # (slots,) granted page counts
+    worst: Optional[np.ndarray] = None    # (slots,) reserved worst-case pages
+    peak_used: int = 0
+
+    @property
+    def npp(self) -> int:
+        return pages_for(self.capacity, self.page_size)
+
+    @property
+    def null(self) -> int:
+        return self.pool_pages
+
+    @property
+    def used(self) -> int:
+        return self.pool_pages - len(self.free)
+
+    @property
+    def outstanding(self) -> int:
+        """Pages reserved for running slots but not yet granted."""
+        return int(np.maximum(self.worst - self.granted, 0).sum())
+
+    def headroom(self, watermark: int) -> int:
+        return len(self.free) - self.outstanding - watermark
+
+    def grant(self, slot: int, n_pages: int) -> bool:
+        """Grant logical pages [granted, n_pages) to `slot`.  Returns True
+        iff the table changed (no-op when the slot already holds enough —
+        the common decode step, which must not dirty the device tables)."""
+        cur = int(self.granted[slot])
+        if n_pages <= cur:
+            return False
+        if n_pages - cur > len(self.free):
+            raise PagePoolExhausted(
+                f"segment {self.name!r}: need {n_pages - cur} pages for slot "
+                f"{slot}, free list holds {len(self.free)} of {self.pool_pages}"
+                " — admission control should have prevented this")
+        for j in range(cur, n_pages):
+            self.table[slot, j] = self.free.pop()
+        self.granted[slot] = n_pages
+        self.peak_used = max(self.peak_used, self.used)
+        return True
+
+    def shrink(self, slot: int, n_pages: int) -> bool:
+        """Return the slot's logical pages [n_pages, granted) to the pool.
+        Returns True iff the table changed."""
+        cur = int(self.granted[slot])
+        if n_pages >= cur:
+            return False
+        for j in range(n_pages, cur):
+            self.free.append(int(self.table[slot, j]))
+            self.table[slot, j] = self.null
+        self.granted[slot] = n_pages
+        return True
+
+
+class FreeListAllocator:
+    """Host-side page bookkeeping for one engine's paged caches.
+
+    All methods are cheap host ops; the engine applies `tables()` onto the
+    device cache tree (values only — shapes never change) whenever `dirty`.
+    """
+
+    SEGMENTS = ("hi", "lo", "win")
+
+    def __init__(self, slots: int, page_size: int,
+                 capacities: Tuple[int, int, int],
+                 pool_pages: Tuple[int, int, int],
+                 watermark: float = 0.0):
+        self.slots = slots
+        self.page_size = page_size
+        self.s_hi, self.s_lo, self.window = capacities
+        self.segs: Dict[str, _Segment] = {}
+        for name, cap, pool in zip(self.SEGMENTS, capacities, pool_pages):
+            seg = _Segment(name=name, capacity=cap, page_size=page_size,
+                           pool_pages=pool)
+            seg.free = list(range(pool))[::-1]  # LIFO: low ids granted first
+            seg.table = np.full((slots, seg.npp), seg.null, np.int32)
+            seg.granted = np.zeros(slots, np.int64)
+            seg.worst = np.zeros(slots, np.int64)
+            self.segs[name] = seg
+        self.occ: List[Optional[Occupancy]] = [None] * slots
+        self.watermark = watermark
+        self.deferrals = 0
+        self.dirty = True
+
+    # -- construction from a live cache tree --------------------------------
+
+    @classmethod
+    def from_caches(cls, caches, page_size: int,
+                    watermark: float = 0.0) -> "FreeListAllocator":
+        """Read slot count, capacities and pool sizes off an initialized
+        free-list cache tree (the authoritative shapes, no re-derivation)."""
+        el = kv_elements(caches)[0]
+        slots = int(el.length.shape[-1])
+
+        def pool_of(null_page, pages):
+            if null_page is None:
+                return 0
+            assert pages.shape[-4] == null_page + 1, \
+                "free-list pools carry exactly one sink page"
+            return int(null_page)
+
+        caps = (int(el.hi.pos.shape[-1]), int(el.lo.pos.shape[-1]),
+                int(el.win_pos.shape[-1]))
+        pools = (pool_of(el.hi.null_page, el.hi.k_pages),
+                 pool_of(el.lo.null_page, el.lo.k_pages),
+                 pool_of(el.win_null_page, el.win_k_pages))
+        return cls(slots, page_size, caps, pools, watermark=watermark)
+
+    # -- admission-control queries ------------------------------------------
+
+    def worst_pages(self, total_tokens: int,
+                    prompt_tokens: Optional[int] = None) -> Dict[str, int]:
+        """Worst-case per-segment page demand of a request whose cache can
+        grow to `total_tokens` (prompt + full decode budget).
+
+        Two regimes bound each store's valid count over the lifetime:
+        after any FOLD the counts follow the `fold_occupancy` clamp
+        (hi-first split of the running total, nondecreasing in it, so the
+        value at `total_tokens` bounds all of them) — but the PREFILL
+        placement is policy-shaped, NOT hi-first: zipcache/mikv route only
+        the saliency-ratio share of the `prompt_tokens` prompt into hi and
+        the remainder into lo, so immediately after admission the lo store
+        can hold up to min(prompt, s_lo) tokens even when the fold clamp
+        says 0 (short budgets).  The reservation must cover the max of
+        both, or admission-time grants overdraw it and a later fold can
+        find the free list short mid-decode.  `prompt_tokens` defaults to
+        `total_tokens` (the safe over-estimate for callers that don't know
+        the split)."""
+        if prompt_tokens is None:
+            prompt_tokens = total_tokens
+        hi = min(total_tokens, self.s_hi)
+        lo = max(min(max(total_tokens - self.s_hi, 0), self.s_lo),
+                 min(prompt_tokens, self.s_lo))
+        return {
+            "hi": pages_for(hi, self.page_size),
+            "lo": pages_for(lo, self.page_size),
+            "win": self.segs["win"].npp,  # the window cycles through fully
+        }
+
+    def _watermark_pages(self, seg: _Segment) -> int:
+        return int(np.ceil(self.watermark * seg.pool_pages))
+
+    def can_admit(self, total_tokens: int,
+                  prompt_tokens: Optional[int] = None) -> bool:
+        """True when every segment can reserve the request's worst case on
+        top of the running slots' outstanding reservations + watermark."""
+        worst = self.worst_pages(total_tokens, prompt_tokens)
+        return all(
+            self.segs[n].headroom(self._watermark_pages(self.segs[n]))
+            >= worst[n] for n in self.SEGMENTS)
+
+    def fits_ever(self, total_tokens: int,
+                  prompt_tokens: Optional[int] = None) -> bool:
+        """False when the request exceeds the pool even on an idle engine."""
+        worst = self.worst_pages(total_tokens, prompt_tokens)
+        return all(
+            self.segs[n].pool_pages - self._watermark_pages(self.segs[n])
+            >= worst[n] for n in self.SEGMENTS)
+
+    # -- lifecycle mutations -------------------------------------------------
+
+    def admit(self, slot: int, occ: Occupancy, total_tokens: int,
+              prompt_tokens: Optional[int] = None) -> None:
+        """Reserve the slot's worst case and grant its prefill pages.
+
+        Raises `PagePoolExhausted` if any pool cannot cover the reservation
+        (the engine checks `can_admit` — watermark included — first, so this
+        trips only for callers that skip admission control)."""
+        assert self.occ[slot] is None, f"slot {slot} already occupied"
+        worst = self.worst_pages(total_tokens, prompt_tokens)
+        for name, n in (("hi", occ.hi), ("lo", occ.lo), ("win", occ.win)):
+            # the policy-shaped prefill split must sit inside the modeled
+            # worst case; a violation means worst_pages' placement model
+            # lost track of compress_prefill — fail loudly, not by
+            # silently overdrawing reservations later
+            if pages_for(n, self.page_size) > worst[name]:
+                raise PagePoolExhausted(
+                    f"segment {name!r}: prefill occupancy {n} tokens "
+                    f"({pages_for(n, self.page_size)} pages) exceeds the "
+                    f"modeled worst case {worst[name]} pages "
+                    f"(total={total_tokens}, prompt={prompt_tokens})")
+            if self.segs[name].headroom(0) < worst[name]:
+                raise PagePoolExhausted(
+                    f"segment {name!r} cannot reserve {worst[name]} pages "
+                    f"for slot {slot}: {self.stats()[name]}")
+        for name, n in (("hi", occ.hi), ("lo", occ.lo), ("win", occ.win)):
+            seg = self.segs[name]
+            seg.worst[slot] = worst[name]
+            seg.grant(slot, pages_for(n, self.page_size))
+        self.occ[slot] = occ
+        self.dirty = True
+
+    def note_append(self, slot: int) -> None:
+        """Account one decode append: grant the staging-window page under
+        the write cursor if the slot does not hold it yet.  Dirties the
+        tables only on an actual grant (once per page_size appends), so
+        steady-state decode steps skip the device-table resync."""
+        occ = self.occ[slot]
+        assert occ is not None, f"append into unoccupied slot {slot}"
+        if occ.win < self.window:
+            if self.segs["win"].grant(slot,
+                                      pages_for(occ.win + 1, self.page_size)):
+                self.dirty = True
+        self.occ[slot] = dataclasses.replace(occ, win=occ.win + 1)
+
+    def fold_grant(self, slot: int) -> None:
+        """BEFORE a recompression program: grant the hi/lo growth pages the
+        fold will scatter into (predicted via `fold_occupancy`)."""
+        occ = self.occ[slot]
+        assert occ is not None, f"fold of unoccupied slot {slot}"
+        new = fold_occupancy(occ, self.s_hi, self.s_lo)
+        grew = self.segs["hi"].grant(slot, pages_for(new.hi, self.page_size))
+        grew |= self.segs["lo"].grant(slot, pages_for(new.lo, self.page_size))
+        self.occ[slot] = dataclasses.replace(new, win=occ.win)
+        self.dirty |= grew
+
+    def fold_shrink(self, slot: int) -> None:
+        """AFTER the recompression program: the staging window emptied —
+        return all of the slot's window pages to the free list."""
+        occ = self.occ[slot]
+        assert occ is not None
+        self.dirty |= self.segs["win"].shrink(slot, 0)
+        self.occ[slot] = dataclasses.replace(occ, win=0)
+
+    def free(self, slot: int) -> None:
+        """Retire a slot: return every granted page, drop its reservation."""
+        for seg in self.segs.values():
+            self.dirty |= seg.shrink(slot, 0)
+            seg.worst[slot] = 0
+        self.occ[slot] = None
+
+    # -- engine integration ---------------------------------------------------
+
+    def tables(self) -> Dict[str, np.ndarray]:
+        """Current (slots, npp) page tables per segment (host copies)."""
+        return {n: self.segs[n].table.copy() for n in self.SEGMENTS}
+
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        out = {}
+        for n, seg in self.segs.items():
+            out[n] = {"pool_pages": seg.pool_pages, "used": seg.used,
+                      "free": len(seg.free), "peak_used": seg.peak_used,
+                      "outstanding": seg.outstanding}
+        out["deferrals"] = self.deferrals
+        return out
+
+    def check_invariants(self) -> None:
+        """Grant/free conservation (used by the property tests):
+        every physical page is on the free list or in exactly one slot's
+        granted prefix; free lists always cover outstanding reservations."""
+        for seg in self.segs.values():
+            granted_ids: List[int] = []
+            for s in range(self.slots):
+                row = seg.table[s]
+                g = int(seg.granted[s])
+                assert (row[g:] == seg.null).all(), \
+                    f"{seg.name}: slot {s} table past its granted prefix"
+                assert (row[:g] != seg.null).all(), \
+                    f"{seg.name}: NULL inside slot {s} granted prefix"
+                granted_ids.extend(int(p) for p in row[:g])
+            assert len(set(granted_ids)) == len(granted_ids), \
+                f"{seg.name}: page granted to two slots (double grant)"
+            assert len(set(granted_ids) & set(seg.free)) == 0, \
+                f"{seg.name}: granted page still on the free list"
+            assert len(granted_ids) + len(seg.free) == seg.pool_pages, \
+                f"{seg.name}: page leak ({len(granted_ids)} granted + " \
+                f"{len(seg.free)} free != {seg.pool_pages})"
+            assert len(seg.free) >= seg.outstanding, \
+                f"{seg.name}: free list cannot cover outstanding reservations"

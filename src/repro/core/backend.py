@@ -72,15 +72,25 @@ class CacheBackend(Protocol):
         ...
 
     def insert(self, cache, slice_cache, slot) -> Any:
-        """Insert a 1-request cache slice into batch row `slot`."""
+        """Insert a 1-request cache slice (a batch=1 `compress_prefill`
+        result with the same static capacities) into batch row `slot` —
+        the continuous engine's admission write.  Jittable with a traced
+        `slot`; layouts with indirection (paged) scatter onto the slot's
+        pages instead of rewriting batch-wide leaves."""
         ...
 
     def free(self, cache, slot) -> Any:
-        """Retire batch row `slot` (invalidate its tokens)."""
+        """Retire batch row `slot` (invalidate its tokens).  Cheap metadata
+        row writes: validity is pos-driven, payload is left stale and
+        masked.  Physical-page reclamation (free-list layout) is the
+        engine-level allocator's job, not this program's."""
         ...
 
     def nbytes(self, cache) -> Tuple[int, int]:
-        """(packed KV payload bytes, bookkeeping overhead bytes)."""
+        """(packed KV payload bytes, bookkeeping overhead bytes); host-side
+        accounting, packed + overhead == sum over pytree leaves.  Layouts
+        with provisioned-but-unused capacity (free-list pools) count it as
+        overhead — see `cache_bytes` for the free-pool breakout."""
         ...
 
 
@@ -136,8 +146,12 @@ class MixedKVBackend:
 BACKEND_KINDS = ("mixed", "paged")
 
 
+PAGE_ALLOCATORS = ("static", "freelist")
+
+
 def of(ccfg: Optional[CompressionConfig], kind: str = "mixed",
-       page_size: Optional[int] = None, paged_kernel: bool = False):
+       page_size: Optional[int] = None, paged_kernel: bool = False,
+       page_allocator: str = "static", pool_fraction: float = 1.0):
     """Backend for a policy config (None passes through for train-only ctxs).
 
     kind: "mixed" (dense per-slot layout, core/kvcache.py) or "paged"
@@ -145,21 +159,38 @@ def of(ccfg: Optional[CompressionConfig], kind: str = "mixed",
     paged_kernel: route the paged backend's decode attention through the
     page-walking Pallas kernel (kernels/paged_qattn) instead of gathering a
     dense view each step; only meaningful with kind="paged".
+    page_allocator: "static" pre-assigns every slot its worst-case pages at
+    init; "freelist" provisions shared pools of `pool_fraction` x that and
+    lets the continuous engine grant/return pages per slot on demand
+    (vLLM-style elasticity; core/alloc.py).  Only meaningful with
+    kind="paged".
     """
     if ccfg is None:
         return None
+    if page_allocator not in PAGE_ALLOCATORS:
+        raise ValueError(f"unknown page allocator {page_allocator!r}; "
+                         f"one of {PAGE_ALLOCATORS}")
     if kind == "mixed":
         if paged_kernel:
             raise ValueError(
                 "paged_kernel=True requires the paged cache backend "
                 "(kind='paged'); the mixed layout reads its dense arrays "
                 "in place")
+        if page_allocator != "static":
+            raise ValueError(
+                "page_allocator='freelist' requires the paged cache backend "
+                "(kind='paged'); the mixed layout has no pages to allocate")
         return MixedKVBackend(ccfg)
     if kind == "paged":
         from repro.core import paged
+        if not (0.0 < pool_fraction <= 1.0):
+            raise ValueError(
+                f"pool_fraction must be in (0, 1], got {pool_fraction} "
+                "(1.0 = the static worst case slots x ceil(capacity/page))")
         return paged.PagedKVBackend(
             ccfg, page_size=page_size if page_size else paged.DEFAULT_PAGE_SIZE,
-            use_kernel=paged_kernel)
+            use_kernel=paged_kernel, allocator=page_allocator,
+            pool_fraction=pool_fraction)
     raise ValueError(f"unknown cache backend {kind!r}; one of {BACKEND_KINDS}")
 
 
@@ -178,23 +209,32 @@ def cache_bytes(caches) -> dict:
     """Walk an arbitrary cache tree (stacked layer/group axes included) and
     report packed KV payload vs bookkeeping overhead separately.
 
-    Both cache layouts report through the same accounting: packed = payload
-    (codes/pages + quantization params + staging window), overhead = position/
-    saliency/counter state plus — for the paged layout — the page tables.
-    Non-KV-cache elements (SSM states, raw staging trees) count entirely as
-    overhead — they are not compressed payload.
+    Both cache layouts report through the same accounting: packed = LIVE
+    payload (codes/pages + quantization params + staging window), overhead =
+    position/saliency/counter state plus — for the paged layout — the page
+    tables.  The free-list layout additionally reports `free_pool_bytes`:
+    provisioned pool pages no slot currently owns (plus the sink page).
+    Free pages are pool OVERHEAD, not payload — they are included in
+    `overhead_bytes` (so packed + overhead == total always holds) and
+    broken out so pool utilization is visible (bench_fig6).  Non-KV-cache
+    elements (SSM states, raw staging trees) count entirely as overhead —
+    they are not compressed payload.
     """
     types = kv_cache_types()
     flat = jax.tree_util.tree_flatten(
         caches, is_leaf=lambda x: isinstance(x, types))[0]
-    packed = overhead = 0
+    packed = overhead = free_pool = 0
     for el in flat:
         if isinstance(el, types):
             p = el.nbytes_packed()
             packed += p
             overhead += el.nbytes_total() - p
+            fp = getattr(el, "nbytes_free_pool", None)
+            if fp is not None:
+                free_pool += fp()
         else:
             overhead += sum(l.size * l.dtype.itemsize
                             for l in jax.tree_util.tree_leaves(el))
     return {"packed_bytes": int(packed), "overhead_bytes": int(overhead),
+            "free_pool_bytes": int(free_pool),
             "total_bytes": int(packed + overhead)}

@@ -717,8 +717,36 @@ def tree_select_rows(mask: jnp.ndarray, new_tree, old_tree):
     return jax.tree_util.tree_map(sel, new_tree, old_tree)
 
 
+def _valid_first(idx: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Order gathered slot indices so VALID tokens form a contiguous prefix
+    (valid tokens in ascending index order, then invalid ones likewise).
+
+    The previous plain index sort interleaved padding slots between valid
+    tokens whenever a store was not full.  A contiguous valid prefix means a
+    store's live payload always occupies its first ``ceil(n_valid/page)``
+    logical pages — the invariant the paged free-list allocator
+    (core/alloc.py) relies on to grant/return whole pages from per-slot
+    valid COUNTS alone.  Attention is unaffected: store order is opaque to
+    every consumer (validity/positions travel with the tokens).
+    """
+    s_total = valid.shape[-1]
+    gathered_valid = _gather_slots(valid, idx)
+    key = jnp.where(gathered_valid, idx, idx + s_total)
+    return (jnp.sort(key, axis=-1) % s_total).astype(jnp.int32)
+
+
 def _recompress_all(cfg: CompressionConfig, cache: MixedKVCache) -> MixedKVCache:
     k, v, valid, pos = cache_keys_values(cache)
+    # Zero the payload of INVALID slots before any re-quantization: channel
+    # scales are computed over the whole token axis, so without this the
+    # stale/garbage payload of empty slots would leak into the scales (and
+    # through them the dequantized values) of live tokens.  Determinism
+    # requirement for the paged layouts: the free-list allocator leaves
+    # unallocated logical pages pointing at an arbitrary-content sink page,
+    # which is only sound because no invalid slot's payload can influence
+    # the recompressed result (tests/test_backend_conformance.py).
+    k = jnp.where(valid[:, None, :, None], k, 0.0)
+    v = jnp.where(valid[:, None, :, None], v, 0.0)
     b = k.shape[0]
     acc = jnp.concatenate([cache.hi.acc, cache.lo.acc, cache.win_acc], axis=1)
     nnz = jnp.concatenate([cache.hi.nnz, cache.lo.nnz, cache.win_nnz], axis=1)
@@ -744,7 +772,7 @@ def _recompress_all(cfg: CompressionConfig, cache: MixedKVCache) -> MixedKVCache
             jnp.arange(b)[:, None], recent_idx].set(NEG_INF * -1.0)  # +inf for recents
         hh_scores = scores + keep_mask
         _, hi_idx = jax.lax.top_k(hh_scores, s_hi)
-        hi_idx = jnp.sort(hi_idx, axis=-1)
+        hi_idx = _valid_first(hi_idx, valid)
         hi = build_store(
             _gather_tokens(k, hi_idx), _gather_tokens(v, hi_idx),
             _gather_slots(pos, hi_idx), _gather_slots(acc, hi_idx),
@@ -753,7 +781,7 @@ def _recompress_all(cfg: CompressionConfig, cache: MixedKVCache) -> MixedKVCache
 
     if s_hi == 0:  # gear / kivi: everything back to lo at low bits
         order = jnp.argsort(-scores, axis=-1)[:, :s_lo].astype(jnp.int32)
-        order = jnp.sort(order, axis=-1)
+        order = _valid_first(order, valid)
         lo = build_store(
             _gather_tokens(k, order), _gather_tokens(v, order),
             jnp.where(_gather_slots(vf, order) > 0, _gather_slots(pos, order), -1),
@@ -762,8 +790,8 @@ def _recompress_all(cfg: CompressionConfig, cache: MixedKVCache) -> MixedKVCache
 
     # zipcache / mikv: re-split by saliency. hi gets the top s_hi VALID slots.
     _, idx = jax.lax.top_k(scores, s_hi + s_lo)
-    hi_idx = jnp.sort(idx[:, :s_hi], axis=-1).astype(jnp.int32)
-    lo_idx = jnp.sort(idx[:, s_hi:s_hi + s_lo], axis=-1).astype(jnp.int32)
+    hi_idx = _valid_first(idx[:, :s_hi], valid)
+    lo_idx = _valid_first(idx[:, s_hi:s_hi + s_lo], valid)
     # invalid slots sort to the bottom; keep their pos at -1 after gather
     def _mk(idx_, bits):
         p = _gather_slots(pos, idx_)

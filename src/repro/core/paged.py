@@ -45,6 +45,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import kvcache as kvc
 from repro.core import quant
@@ -127,14 +128,19 @@ class PagedStore:
     pos: jnp.ndarray              # (b, S) int32, -1 = empty
     acc: jnp.ndarray              # (b, S) f32
     nnz: jnp.ndarray              # (b, S) f32
+    # Free-list layout marker (static aux data, see core/alloc.py): the id
+    # of the pool's SINK page — unallocated logical pages point at it, so
+    # the pool holds `null_page` usable pages plus the sink at index
+    # `null_page`.  None = static layout (every pool page is slot-owned).
+    null_page: Optional[int] = None
 
     def tree_flatten(self):
         return ((self.k_pages, self.v_pages, self.table, self.k_meta,
-                 self.v_meta, self.pos, self.acc, self.nnz), None)
+                 self.v_meta, self.pos, self.acc, self.nnz), (self.null_page,))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, null_page=aux[0])
 
     @property
     def capacity(self) -> int:
@@ -158,16 +164,45 @@ class PagedStore:
         # codes token axis == logical token axis (packing is channelwise)
         return meta.shape[-2]
 
+    def _n_pages(self) -> int:
+        """Physical pages in the pool (leading-axis count; a stacked group
+        axis, if any, is folded into the per-page byte size instead)."""
+        return int(self.k_pages.shape[-4])
+
+    def _page_nbytes(self, pages: jnp.ndarray) -> int:
+        """Bytes of ONE physical page (times the stacked group axis)."""
+        n = self._n_pages()
+        return int(pages.size // n * pages.dtype.itemsize) if n else 0
+
+    def _live_pages(self) -> int:
+        """Pages referenced by some slot's table row.  Static layout: every
+        pool page is slot-owned.  Free-list layout: host-side table scan —
+        unreferenced pages (and the sink) are free-pool overhead."""
+        if self.null_page is None:
+            return self._n_pages()
+        ids = np.unique(np.asarray(self.table))
+        return int((ids < self.null_page).sum())
+
     def nbytes_packed(self) -> int:
-        """Payload pages + quantization parameters (page-granular: includes
-        the zero padding of each slot's partial last page)."""
-        n = self.k_pages.size * self.k_pages.dtype.itemsize
-        n += self.v_pages.size * self.v_pages.dtype.itemsize
+        """Live payload pages + quantization parameters (page-granular:
+        includes the zero padding of each slot's partial last page; the
+        free-list layout's unallocated pages are NOT payload — they are
+        reported by `nbytes_free_pool` and count as pool overhead)."""
+        live = self._live_pages()
+        n = live * (self._page_nbytes(self.k_pages)
+                    + self._page_nbytes(self.v_pages))
         for meta in (self.k_meta, self.v_meta):
             for t in (meta.scale, meta.zero, meta.channel_scale):
                 if t is not None:
                     n += t.size * t.dtype.itemsize
         return int(n)
+
+    def nbytes_free_pool(self) -> int:
+        """Bytes of free-pool pages: pool pages not referenced by any slot
+        (plus the sink page).  0 for the static layout."""
+        free = self._n_pages() - self._live_pages()
+        return int(free * (self._page_nbytes(self.k_pages)
+                           + self._page_nbytes(self.v_pages)))
 
 
 def _store_from_token_store(ts: kvc.TokenStore, page_size: int,
@@ -211,15 +246,18 @@ class PagedKVCache:
     win_nnz: jnp.ndarray          # (b, W) f32
     length: jnp.ndarray           # (b,) int32
     win_fill: jnp.ndarray         # (b,) int32
+    # sink-page id of the staging-window pool (see PagedStore.null_page);
+    # None = static layout
+    win_null_page: Optional[int] = None
 
     def tree_flatten(self):
         return ((self.hi, self.lo, self.win_k_pages, self.win_v_pages,
                  self.win_table, self.win_pos, self.win_acc, self.win_nnz,
-                 self.length, self.win_fill), None)
+                 self.length, self.win_fill), (self.win_null_page,))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, win_null_page=aux[0])
 
     @property
     def page_size(self) -> int:
@@ -244,10 +282,34 @@ class PagedKVCache:
             win_pos=self.win_pos, win_acc=self.win_acc, win_nnz=self.win_nnz,
             length=self.length, win_fill=self.win_fill)
 
+    def _win_pages_total(self) -> int:
+        return int(self.win_k_pages.shape[-4])
+
+    def _win_live_pages(self) -> int:
+        if self.win_null_page is None:
+            return self._win_pages_total()
+        ids = np.unique(np.asarray(self.win_table))
+        return int((ids < self.win_null_page).sum())
+
+    def _win_page_nbytes(self) -> int:
+        n = self._win_pages_total()
+        if not n:
+            return 0
+        return int(sum(t.size // n * t.dtype.itemsize
+                       for t in (self.win_k_pages, self.win_v_pages)))
+
     def nbytes_packed(self) -> int:
         n = self.hi.nbytes_packed() + self.lo.nbytes_packed()
-        for t in (self.win_k_pages, self.win_v_pages):
-            n += t.size * t.dtype.itemsize
+        n += self._win_live_pages() * self._win_page_nbytes()
+        return int(n)
+
+    def nbytes_free_pool(self) -> int:
+        """Bytes of unallocated (free-list + sink) pages across the three
+        pools — provisioned pool capacity not currently holding any slot's
+        payload.  0 for the static layout, where every page is slot-owned."""
+        n = self.hi.nbytes_free_pool() + self.lo.nbytes_free_pool()
+        n += (self._win_pages_total() - self._win_live_pages()) \
+            * self._win_page_nbytes()
         return int(n)
 
     def nbytes_total(self) -> int:
@@ -255,7 +317,7 @@ class PagedKVCache:
                        for l in jax.tree_util.tree_leaves(self)))
 
     def nbytes_overhead(self) -> int:
-        """Page tables + positions/saliency/counters."""
+        """Page tables + positions/saliency/counters + free-pool pages."""
         return self.nbytes_total() - self.nbytes_packed()
 
 
@@ -282,6 +344,81 @@ def from_mixed(mx: kvc.MixedKVCache, page_size: int = DEFAULT_PAGE_SIZE,
         hi=hi, lo=lo, win_k_pages=win_pools[0], win_v_pages=win_pools[1],
         win_table=t_w, win_pos=mx.win_pos, win_acc=mx.win_acc,
         win_nnz=mx.win_nnz, length=mx.length, win_fill=mx.win_fill)
+
+
+# ---------------------------------------------------------------------------
+# Free-list layout (elastic pools; allocation lives in core/alloc.py)
+# ---------------------------------------------------------------------------
+
+def freelist_pool_pages(b: int, npp: int, fraction: float) -> int:
+    """Usable pool pages for a segment under `pool_fraction`: the given
+    fraction of the static worst case (`b * npp`), never below one full
+    request's worth (`npp` — a lone max-length request must always fit)."""
+    if npp == 0:
+        return 0
+    return max(int(np.ceil(b * npp * fraction)), npp)
+
+
+def from_mixed_freelist(mx: kvc.MixedKVCache, page_size: int,
+                        pool_pages: Tuple[int, int, int]) -> PagedKVCache:
+    """EMPTY free-list cache shaped like `mx` (which must be an
+    `init_cache` result — all-zero payload, no valid tokens).
+
+    Pools hold `pool_pages[i]` usable pages plus one SINK page; every table
+    entry starts at the sink id (`null_page`).  Pages are granted to slots
+    host-side by `alloc.FreeListAllocator` between jitted steps — reads of
+    unallocated logical pages land on the sink (finite garbage that no
+    consumer lets influence live rows: attention masks invalid positions
+    to exact-zero weights, recompression zeroes invalid payload), writes
+    to NULL entries are absorbed by the sink."""
+    base = from_mixed(mx, page_size)
+    b = int(mx.length.shape[0])
+    p_hi, p_lo, p_w = pool_pages
+
+    def seg(store: PagedStore, usable: int) -> PagedStore:
+        npp = store.table.shape[1]
+        if npp == 0:
+            return store
+        return dataclasses.replace(
+            store,
+            k_pages=jnp.zeros((usable + 1, *store.k_pages.shape[1:]),
+                              store.k_pages.dtype),
+            v_pages=jnp.zeros((usable + 1, *store.v_pages.shape[1:]),
+                              store.v_pages.dtype),
+            table=jnp.full((b, npp), usable, jnp.int32),
+            null_page=usable)
+
+    out = dataclasses.replace(base, hi=seg(base.hi, p_hi),
+                              lo=seg(base.lo, p_lo))
+    npp_w = base.win_table.shape[1]
+    if npp_w == 0:
+        return out
+    return dataclasses.replace(
+        out,
+        win_k_pages=jnp.zeros((p_w + 1, *base.win_k_pages.shape[1:]),
+                              base.win_k_pages.dtype),
+        win_v_pages=jnp.zeros((p_w + 1, *base.win_v_pages.shape[1:]),
+                              base.win_v_pages.dtype),
+        win_table=jnp.full((b, npp_w), p_w, jnp.int32),
+        win_null_page=p_w)
+
+
+def with_tables(cache: PagedKVCache, t_hi: np.ndarray, t_lo: np.ndarray,
+                t_win: np.ndarray) -> PagedKVCache:
+    """Install allocator-produced (slots, npp) page tables onto a cache
+    element, broadcasting over a stacked leading group axis if present.
+    Values-only: shapes and dtypes are unchanged, so jitted programs that
+    close over this cache's avals never retrace."""
+    def put(cur: jnp.ndarray, new: np.ndarray) -> jnp.ndarray:
+        if cur.shape[-1] == 0:
+            return cur
+        return jnp.asarray(np.broadcast_to(new.astype(np.int32), cur.shape))
+
+    return dataclasses.replace(
+        cache,
+        hi=dataclasses.replace(cache.hi, table=put(cache.hi.table, t_hi)),
+        lo=dataclasses.replace(cache.lo, table=put(cache.lo.table, t_lo)),
+        win_table=put(cache.win_table, t_win))
 
 
 # ---------------------------------------------------------------------------
@@ -387,9 +524,11 @@ def insert_slot(dst: PagedKVCache, src: PagedKVCache, slot,
 
 def free_slot(cache: PagedKVCache, slot, batch_axis: int = 0) -> PagedKVCache:
     """Retire a slot: invalidate its dense metadata rows.  Pages are left
-    stale (validity is pos-driven, exactly as in the mixed layout); with the
-    static round-robin assignment the slot keeps its pages — a dynamic
-    allocator would return them to a free list here."""
+    stale (validity is pos-driven, exactly as in the mixed layout).  With
+    the static round-robin assignment the slot keeps its pages; under the
+    free-list layout the engine-level allocator (core/alloc.py) returns
+    them to the free list and NULLs the slot's table rows host-side — this
+    jitted program only touches metadata either way."""
     return kvc.free_slot(cache, slot, batch_axis=batch_axis)
 
 
@@ -406,7 +545,7 @@ def _write_back(cache: PagedKVCache, mx: kvc.MixedKVCache,
             store.table,
             dataclasses.replace(ts.k, codes=None),
             dataclasses.replace(ts.v, codes=None),
-            ts.pos, ts.acc, ts.nnz)
+            ts.pos, ts.acc, ts.nnz, null_page=store.null_page)
 
     win_k = _scatter_dense(cache.win_k_pages, cache.win_table, mx.k_win, rows)
     win_v = _scatter_dense(cache.win_v_pages, cache.win_table, mx.v_win, rows)
@@ -528,18 +667,47 @@ class PagedKVBackend:
     per step.  Policies the kernel doesn't cover (groupwise/tokenwise
     stores) silently use the gather+dense fallback, which remains the
     reference the kernel is verified against (tests/test_paged_qattn.py).
+
+    Allocator API (`allocator`): "static" pre-assigns every slot its full
+    worst case (strided round-robin, pools sized slots x ceil(cap/page));
+    "freelist" provisions shared pools of `pool_fraction` x that worst case
+    (plus a sink page) and starts every table entry at NULL — physical
+    pages are granted/returned between jitted steps by a host-side
+    `alloc.FreeListAllocator` (the continuous engine owns one), so long
+    requests borrow pages freed by short ones.  The layout difference is
+    invisible to the numerics: greedy engine output is bitwise
+    token-identical across mixed / paged-static / paged-freelist
+    (tests/test_backend_conformance.py).
     """
 
     ccfg: CompressionConfig
     page_size: int = DEFAULT_PAGE_SIZE
     use_kernel: bool = False
+    allocator: str = "static"        # "static" | "freelist"
+    pool_fraction: float = 1.0       # freelist pools as a fraction of the
+    #                                  static worst case (floor: one full
+    #                                  request per segment)
 
     def init_cache(self, b, h_kv, d, max_len, dtype=jnp.bfloat16, d_v=None):
-        return from_mixed(kvc.init_cache(self.ccfg, b, h_kv, d, max_len,
-                                         dtype, d_v=d_v), self.page_size)
+        """Empty decode cache.  allocator="freelist" returns the elastic
+        layout: NULL tables over `pool_fraction`-sized shared pools, to be
+        populated via an engine-level `alloc.FreeListAllocator`."""
+        mx = kvc.init_cache(self.ccfg, b, h_kv, d, max_len, dtype, d_v=d_v)
+        if self.allocator != "freelist":
+            return from_mixed(mx, self.page_size)
+        pools = tuple(
+            freelist_pool_pages(b, n_pages(cap, self.page_size),
+                                self.pool_fraction)
+            for cap in (mx.hi.capacity, mx.lo.capacity, mx.window))
+        return from_mixed_freelist(mx, self.page_size, pools)
 
     def compress_prefill(self, k, v, token_saliency, max_len,
                          probe_nnz=None, dtype=jnp.bfloat16):
+        """Compress prefill K/V into a fresh cache.  Always the STATIC
+        layout, whatever `allocator` says: prefill slices are ephemeral
+        (inserted into the long-lived decode cache at admission, then
+        dropped), so elasticity buys nothing and the strided tables keep
+        the op allocator-free."""
         mx = kvc.compress_prefill(self.ccfg, k, v, token_saliency, max_len,
                                   probe_nnz=probe_nnz, dtype=dtype)
         return from_mixed(mx, self.page_size)
@@ -610,5 +778,10 @@ class PagedKVBackend:
         return cache.dense_view()
 
     def nbytes(self, cache) -> Tuple[int, int]:
+        """(packed, overhead): packed counts LIVE payload pages only
+        (page-granular) plus quantization params; overhead is metadata,
+        page tables and — for the free-list layout — the unallocated pool
+        pages, which `cache.nbytes_free_pool()` (and `cache_bytes`'s
+        `free_pool_bytes`) breaks out separately."""
         packed = cache.nbytes_packed()
         return int(packed), int(cache.nbytes_total() - packed)

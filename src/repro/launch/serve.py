@@ -27,6 +27,13 @@ dequantizes pages in place, instead of gathering every slot's pages into a
 dense view each step.  Greedy output stays token-identical
 (tests/test_backend_conformance.py); off keeps the gather path, which is
 the bitwise cross-backend reference.
+--page-allocator freelist (with --backend paged --continuous) switches the
+page pools to free-list allocation: pages are granted to slots on demand
+and returned when a request retires or its staging window folds, so the
+pool can be provisioned below slots x max_len (--pool-fraction) and long
+requests borrow pages freed by short ones; admission defers (backpressure)
+when the pool cannot cover a request's worst case.  Greedy output stays
+bitwise token-identical to the static assignment and to mixed.
 """
 
 from __future__ import annotations
@@ -68,9 +75,35 @@ def main(argv=None):
                     help="--backend paged only: decode attention via the "
                          "page-walking Pallas kernel (no per-step dense "
                          "gather); off = gather+dense reference path")
+    ap.add_argument("--page-allocator", default="static",
+                    choices=("static", "freelist"),
+                    help="--backend paged only: static = every slot owns its "
+                         "worst-case pages from init; freelist = pages are "
+                         "granted on demand from shared pools and returned "
+                         "on retirement/fold (vLLM-style elasticity), with "
+                         "admission deferred when the pool cannot cover a "
+                         "request's worst case")
+    ap.add_argument("--pool-fraction", type=float, default=1.0,
+                    help="--page-allocator freelist only: pool capacity as "
+                         "a fraction of the static worst case "
+                         "(slots x ceil(capacity/page) pages per segment); "
+                         "< 1.0 trades concurrency under long-budget load "
+                         "for memory")
+    ap.add_argument("--admit-watermark", type=float, default=0.0,
+                    help="--page-allocator freelist only: fraction of each "
+                         "pool held back as admission headroom (a request "
+                         "is admitted only if its worst case fits with this "
+                         "reserve left over)")
     args = ap.parse_args(argv)
     if args.paged_kernel == "on" and args.backend != "paged":
         ap.error("--paged-kernel on requires --backend paged")
+    if args.page_allocator == "freelist" and args.backend != "paged":
+        ap.error("--page-allocator freelist requires --backend paged")
+    if args.page_allocator == "freelist" and not args.continuous:
+        # the lockstep engine's caches come from compress_prefill, which is
+        # always the static layout — a silent no-op would misreport memory
+        ap.error("--page-allocator freelist requires --continuous (the "
+                 "lockstep engine has no admission events to allocate on)")
 
     cfg = configs.get_arch(args.arch, smoke=args.smoke)
     mesh = None
@@ -89,7 +122,10 @@ def main(argv=None):
     scfg = ServeConfig(batch_size=args.batch, prompt_len=args.prompt_len,
                        max_new_tokens=args.max_new, seed=args.seed,
                        backend=args.backend, page_size=args.page_size,
-                       paged_kernel=args.paged_kernel == "on")
+                       paged_kernel=args.paged_kernel == "on",
+                       page_allocator=args.page_allocator,
+                       pool_fraction=args.pool_fraction,
+                       admit_watermark=args.admit_watermark)
     # (--backend paged with a mesh is rejected where the backend is built,
     # launch/steps.serve_ctx — programmatic callers hit the same guard)
 
@@ -107,6 +143,12 @@ def main(argv=None):
             print(f"[serve] {rid}: {len(out.tokens)} tok "
                   f"({out.timings['tok_per_s']:.1f} tok/s) "
                   f"first={out.tokens[:16].tolist()}")
+        ps = eng.pool_stats()
+        if ps is not None:
+            used = {k: f"{v['peak_used']}/{v['pool_pages']}"
+                    for k, v in ps.items() if k != "deferrals"}
+            print(f"[serve] page pools peak used {used}, "
+                  f"{ps['deferrals']} admissions deferred")
         return {rid: eng.result(rid) for rid in rids}
 
     engine = ServingEngine(cfg, ccfg, scfg, params, mesh=mesh)

@@ -162,9 +162,12 @@ def serve_ctx(cfg: ArchConfig, shape: ShapeConfig, mesh,
             "physical pages, which need a page-axis partitioning story "
             "before they can shard over a mesh (ROADMAP §Serving) — use "
             "cache_backend='mixed' with a mesh")
-    backend = backend_lib.of(ccfg, kind=kind,
-                             page_size=getattr(shape, "page_size", None),
-                             paged_kernel=getattr(shape, "paged_kernel", False))
+    backend = backend_lib.of(
+        ccfg, kind=kind,
+        page_size=getattr(shape, "page_size", None),
+        paged_kernel=getattr(shape, "paged_kernel", False),
+        page_allocator=getattr(shape, "page_allocator", "static"),
+        pool_fraction=getattr(shape, "pool_fraction", 1.0))
     return _run_ctx(cfg, mesh, ccfg=ccfg, probe=probe,
                     max_cache_len=max_cache_len, q_block=q_block,
                     decode_impl=decode_impl, backend=backend)

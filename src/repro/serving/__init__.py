@@ -1,3 +1,7 @@
+from repro.core.alloc import (  # noqa: F401  (typed backpressure signals)
+    PagePoolExhausted,
+    PoolCapacityError,
+)
 from repro.serving.engine import (  # noqa: F401
     ContinuousEngine,
     Request,

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import alloc as alloc_lib
 from repro.core import backend as backend_lib
 from repro.core.policy import CompressionConfig
 from repro.launch import steps as steps_lib
@@ -88,6 +89,30 @@ class ServeConfig:
     # (tests/test_backend_conformance.py).  Off by default: the gather path
     # is the bitwise cross-backend reference.
     paged_kernel: bool = False
+    # "paged" only — page allocation policy (core/alloc.py):
+    #   static    every slot owns its worst-case pages from init (pool =
+    #             slots x ceil(capacity/page); no admission control needed)
+    #   freelist  pages live in shared pools of pool_fraction x that worst
+    #             case and are granted/returned per slot on demand, so long
+    #             requests borrow pages freed by short ones; the engine
+    #             admits a request only when the pools can cover its whole
+    #             prompt + decode budget (worst case) on top of the running
+    #             slots' reservations — out-of-pages pressure defers
+    #             admission instead of corrupting a running slot.  Greedy
+    #             output stays bitwise token-identical to static/mixed.
+    page_allocator: str = "static"
+    pool_fraction: float = 1.0
+    # "freelist" only: fraction of each pool held back as admission
+    # headroom — a request is admitted only if its worst case fits with
+    # this many pages left over (0.0 = admit up to the last page)
+    admit_watermark: float = 0.0
+    # "freelist" only: what _admit does when the head-of-queue request's
+    # worst case does not fit right now:
+    #   defer  leave it queued (FIFO) and try again next step — the typed
+    #          deferral is visible in pool_stats()["deferrals"]
+    #   error  raise alloc.PagePoolExhausted from step() (backpressure to
+    #          the caller, e.g. an async front that wants to shed load)
+    backpressure: str = "defer"
     # sampling is per-request (SamplingParams); the lockstep generate() path
     # is always greedy — it is the reference the continuous engine is
     # verified token-identical against
@@ -190,7 +215,9 @@ class _EngineBase:
         self.params = params
         shape = ShapeConfig("serve", scfg.prompt_len, scfg.batch_size, "prefill",
                             cache_backend=scfg.backend, page_size=scfg.page_size,
-                            paged_kernel=scfg.paged_kernel)
+                            paged_kernel=scfg.paged_kernel,
+                            page_allocator=scfg.page_allocator,
+                            pool_fraction=scfg.pool_fraction)
         self.ctx = steps_lib.serve_ctx(cfg, shape, mesh, ccfg,
                                        decode_budget=scfg.max_new_tokens,
                                        q_block=min(512, scfg.prompt_len))
@@ -327,6 +354,20 @@ class ContinuousEngine(_EngineBase):
         self.results: Dict[str, RequestOutput] = {}
         self._ids = itertools.count()
         self._step_no = 0
+        # Elastic page allocation (core/alloc.py): host-side free lists +
+        # page tables, synced onto the device cache tree between jitted
+        # steps.  None for the mixed backend and the static paged layout.
+        if scfg.backpressure not in ("defer", "error"):
+            raise ValueError(
+                f"ServeConfig.backpressure must be 'defer' or 'error', got "
+                f"{scfg.backpressure!r}")
+        self._alloc: Optional[alloc_lib.FreeListAllocator] = None
+        self._last_deferred: Optional[str] = None
+        if getattr(self.ctx.backend, "allocator", "static") == "freelist":
+            self._alloc = alloc_lib.FreeListAllocator.from_caches(
+                self.caches, page_size=self.ctx.backend.page_size,
+                watermark=scfg.admit_watermark)
+            self._sync_tables()
 
     # ------------------------------------------------------------------
     # lifecycle API
@@ -334,11 +375,30 @@ class ContinuousEngine(_EngineBase):
 
     @property
     def pending(self) -> bool:
+        """True while any submitted request is still queued or decoding."""
         return bool(self.queue) or any(s is not None for s in self.slots)
 
+    def _request_budget(self, request: Request) -> int:
+        return (request.max_new_tokens if request.max_new_tokens is not None
+                else self.scfg.max_new_tokens)
+
+    def _request_total_tokens(self, request: Request) -> int:
+        """Worst-case cached tokens of a request: the full (left-padded)
+        prompt window plus its decode budget — prefill caches all
+        `prompt_len` positions, so page demand varies only with the budget."""
+        return self.scfg.prompt_len + self._request_budget(request)
+
     def submit(self, request: Request) -> str:
-        """Validate + enqueue a request; returns its id.  Raises on prompts
-        or budgets that can never fit the engine's static shapes."""
+        """Validate + enqueue a request; returns its id.
+
+        Raises `ValueError` on prompts or budgets that can never fit the
+        engine's static shapes, and `alloc.PoolCapacityError` when the
+        free-list page pool is too small to EVER hold the request's worst
+        case (prompt + decode budget) — oversized requests fail fast here
+        instead of deadlocking the FIFO admission queue.  Transient
+        out-of-pages pressure is NOT an error: the request queues and
+        admission defers until running slots free enough pages
+        (`ServeConfig.backpressure`)."""
         n = int(np.asarray(request.tokens).shape[-1])
         if n > self.scfg.prompt_len:
             raise ValueError(
@@ -349,6 +409,13 @@ class ContinuousEngine(_EngineBase):
             raise ValueError(
                 f"max_new_tokens {request.max_new_tokens} outside the "
                 f"engine's [1, {self.scfg.max_new_tokens}] decode budget")
+        if self._alloc is not None and not self._alloc.fits_ever(
+                self._request_total_tokens(request), self.scfg.prompt_len):
+            raise alloc_lib.PoolCapacityError(
+                f"request needs "
+                f"{self._alloc.worst_pages(self._request_total_tokens(request), self.scfg.prompt_len)} "
+                f"pages worst-case, beyond the pool ({self._alloc.stats()}); "
+                "raise pool_fraction or lower the request budget")
         if request.id is None:
             rid = f"req-{next(self._ids)}"
             while self.poll(rid) != "unknown":  # user ids may shadow auto ids
@@ -363,7 +430,14 @@ class ContinuousEngine(_EngineBase):
         return request.id
 
     def poll(self, request_id: str) -> str:
-        """'queued' | 'running' | 'done' | 'unknown'."""
+        """Lifecycle state of a submitted request:
+
+        'queued'   waiting for a free slot (or, under the free-list
+                   allocator, for enough free pages — deferred admission)
+        'running'  occupying a decode slot
+        'done'     retired; `result(request_id)` returns its output
+        'unknown'  id never submitted (or submitted to another engine)
+        """
         if request_id in self.results:
             return "done"
         if any(s is not None and s.request.id == request_id for s in self.slots):
@@ -373,6 +447,10 @@ class ContinuousEngine(_EngineBase):
         return "unknown"
 
     def result(self, request_id: str) -> Optional[RequestOutput]:
+        """The finished request's RequestOutput — `.tokens` (stop token
+        included), `.finish_reason` ("stop" | "length") and `.timings`
+        (queued_s / prefill_s / decode_s / tok_per_s) — or None while it is
+        still queued or running (use `poll` to distinguish)."""
         return self.results.get(request_id)
 
     def run(self, max_steps: Optional[int] = None) -> Dict[str, RequestOutput]:
@@ -389,9 +467,41 @@ class ContinuousEngine(_EngineBase):
     # scheduler internals
     # ------------------------------------------------------------------
 
+    def _sync_tables(self) -> None:
+        """Install the allocator's current page tables onto the device cache
+        tree (values only — shapes never change, so no jitted program
+        retraces).  No-op unless the allocator mutated since the last sync;
+        page tables are mutated ONLY here, between jitted steps, never
+        inside them (static-shape discipline)."""
+        if self._alloc is None or not self._alloc.dirty:
+            return
+        from repro.core import paged as paged_lib
+
+        t = self._alloc.tables()
+        is_paged = lambda x: isinstance(x, paged_lib.PagedKVCache)
+        leaves, treedef = jax.tree_util.tree_flatten(
+            self.caches, is_leaf=is_paged)
+        self.caches = jax.tree_util.tree_unflatten(
+            treedef,
+            [paged_lib.with_tables(el, t["hi"], t["lo"], t["win"])
+             if is_paged(el) else el for el in leaves])
+        self._alloc.dirty = False
+
+    def pool_stats(self) -> Optional[Dict]:
+        """Free-list pool telemetry (None for static/mixed layouts):
+        per-segment {pool_pages, used, free, peak_used, outstanding} plus
+        the cumulative admission-deferral count."""
+        return None if self._alloc is None else self._alloc.stats()
+
     def free(self, slot_id: int) -> None:
         """Retire a slot: invalidate its batch row (cheap row writes; stale
-        codes are masked by pos == -1 until the next insert overwrites them)."""
+        codes are masked by pos == -1 until the next insert overwrites
+        them).  Under the free-list allocator, every page the slot held is
+        returned to the shared pools — the elasticity event that lets a
+        queued long request take over a short one's memory."""
+        if self._alloc is not None:
+            self._alloc.free(slot_id)
+            self._sync_tables()
         self.caches = self._free_slot(self.caches,
                                       jnp.asarray(slot_id, jnp.int32))
         self.slots[slot_id] = None
@@ -427,17 +537,52 @@ class ContinuousEngine(_EngineBase):
 
     def _admit(self) -> None:
         """Fill free slots from the queue: prefill (batch=1), sample the
-        first token, insert the compressed cache slice into the batch row."""
+        first token, insert the compressed cache slice into the batch row.
+
+        Free-list admission control: the head-of-queue request is admitted
+        only when every page pool can reserve its WORST case (prompt +
+        decode budget) on top of the running slots' outstanding
+        reservations and the configured watermark — which makes every
+        later grant (decode appends, window folds) infallible by
+        construction.  If it does not fit, admission defers (FIFO: later
+        requests do not jump the queue) or raises `PagePoolExhausted`
+        per `ServeConfig.backpressure`."""
         for slot_id in range(self.scfg.batch_size):
             if not self.queue:
                 return
             if self.slots[slot_id] is not None:
                 continue
+            if self._alloc is not None:
+                t_max = self._request_total_tokens(self.queue[0])
+                p_len = self.scfg.prompt_len
+                if not self._alloc.can_admit(t_max, p_len):
+                    if self.scfg.backpressure == "error":
+                        raise alloc_lib.PagePoolExhausted(
+                            f"request {self.queue[0].id!r} needs "
+                            f"{self._alloc.worst_pages(t_max, p_len)} pages "
+                            f"worst-case; pools: {self._alloc.stats()}")
+                    # count ADMISSIONS deferred, not scheduler steps: one
+                    # tick per request per contiguous blocked span, however
+                    # many steps it waits
+                    if self.queue[0].id != self._last_deferred:
+                        self._alloc.deferrals += 1
+                        self._last_deferred = self.queue[0].id
+                    return
             req = self.queue.popleft()
+            self._last_deferred = None
             t0 = time.perf_counter()
             prompt = pack_requests([req.tokens], 1, self.scfg.prompt_len)
             logits, slice_caches = self._prefill(
                 self.params, {"tokens": jnp.asarray(prompt)})
+            if self._alloc is not None:
+                # one small host read (three pos rows) -> exact per-segment
+                # valid counts; grant the slot's prefill pages + reserve
+                # its worst case before the insert scatters payload
+                self._alloc.admit(slot_id,
+                                  alloc_lib.slice_occupancy(slice_caches),
+                                  self._request_total_tokens(req),
+                                  self.scfg.prompt_len)
+                self._sync_tables()
             self.caches = self._insert(self.caches, slice_caches,
                                        jnp.asarray(slot_id, jnp.int32))
             first = int(np.asarray(self._sample(
@@ -453,15 +598,26 @@ class ContinuousEngine(_EngineBase):
             self._maybe_finish(slot_id)
 
     def step(self) -> int:
-        """One scheduler iteration: admit, decode one token for every active
-        slot, retire finished requests, fold windows on per-slot cadence.
-        Returns the number of slots that decoded."""
+        """One scheduler iteration: admit queued requests into free slots,
+        decode one token for every active slot, retire finished requests,
+        and fold staging windows on each slot's own cadence (paper Alg. 3
+        per request).  Returns the number of slots that decoded (0 = idle).
+
+        Under the free-list allocator every page movement happens here,
+        host-side, between the jitted programs: a staging-window page is
+        granted when a slot's append cursor crosses into it, hi/lo growth
+        pages are granted immediately before a fold's write-back, and the
+        emptied window's pages are returned immediately after."""
         self._admit()
         b = self.scfg.batch_size
         active_ids = [i for i in range(b) if self.slots[i] is not None]
         if not active_ids:
             return 0
         interval = self.ccfg.recompress_interval
+        if self._alloc is not None:
+            for i in active_ids:
+                self._alloc.note_append(i)
+            self._sync_tables()
 
         tok = np.zeros(b, np.int32)
         probes = np.zeros(b, bool)
@@ -497,6 +653,13 @@ class ContinuousEngine(_EngineBase):
                 due[i] = True
         n_due = int(due.sum())
         if n_due:
+            if self._alloc is not None:
+                # grant the hi/lo pages the fold will scatter into BEFORE
+                # the program runs (writes through NULL entries would land
+                # in the sink and lose tokens)
+                for i in np.flatnonzero(due):
+                    self._alloc.fold_grant(int(i))
+                self._sync_tables()
             # Per-slot programs fold each due slot at ~1/slots the FLOPs of
             # the rows-masked program (bitwise the same result — recompression
             # is row-independent), but every call also rewrites the cache
@@ -509,6 +672,12 @@ class ContinuousEngine(_EngineBase):
                         self.caches, jnp.asarray(int(i), jnp.int32))
             else:
                 self.caches = self._recompress_rows(self.caches, jnp.asarray(due))
+            if self._alloc is not None:
+                # the staging windows emptied: return their pages (the
+                # recompression-shrink half of the elasticity story)
+                for i in np.flatnonzero(due):
+                    self._alloc.fold_shrink(int(i))
+                self._sync_tables()
             for i in np.flatnonzero(due):
                 self.slots[i].since_rc = 0
         self._step_no += 1

@@ -135,6 +135,13 @@ ENGINE_VARIANTS = {
     "mixed": dict(backend="mixed", paged_kernel=False),
     "paged": dict(backend="paged", paged_kernel=False),
     "paged-kernel": dict(backend="paged", paged_kernel=True),
+    # free-list page allocation at pool_fraction=1.0: same admission
+    # schedule as static (nothing defers), but every page a slot touches is
+    # granted on demand from the shared free list and returned on
+    # retirement/fold — so the scenario's mid-run admission lands in
+    # REUSED pages of the retired request
+    "paged-freelist": dict(backend="paged", paged_kernel=False,
+                           page_allocator="freelist", pool_fraction=1.0),
 }
 
 
@@ -143,7 +150,8 @@ def engine_outputs():
     """One continuous-batching scenario — mid-run admission into a freed
     slot, per-slot recompress cadence (max_new > interval) — run through
     every decode configuration: mixed, paged with the gather+dense decode
-    path, and paged with the page-walking Pallas kernel (interpret mode)."""
+    path, paged with the page-walking Pallas kernel (interpret mode), and
+    paged with free-list page allocation."""
     rng = np.random.default_rng(0)
     cfg = configs.get_arch("yi-6b", smoke=True)
     ccfg = _ccfg()
@@ -183,6 +191,26 @@ def test_continuous_engine_token_identical_across_backends(engine_outputs):
     for (ra, a), (rb, b) in zip(outs["mixed"].items(), outs["paged"].items()):
         np.testing.assert_array_equal(a.tokens, b.tokens)
         assert a.finish_reason == b.finish_reason
+
+
+def test_continuous_engine_token_identical_with_freelist(engine_outputs):
+    """Free-list page allocation relocates payload through host-mutated
+    page tables (on-demand grant, return on retire/fold, reuse of freed
+    pages by the mid-run admission) but must not change a single greedy
+    token vs mixed OR vs the statically-assigned paged layout.  Carried by
+    two invariants: unallocated logical pages (sink reads) can never
+    influence live rows — attention masks invalid positions to exact-zero
+    weights and recompression zeroes invalid payload before requantizing —
+    and valid tokens always occupy a contiguous page prefix
+    (kvcache._valid_first), so count-driven whole-page grants cover
+    exactly the live payload."""
+    outs, fills = engine_outputs
+    for other in ("mixed", "paged"):
+        np.testing.assert_array_equal(fills[other], fills["paged-freelist"])
+        for (ra, a), (rb, b) in zip(outs[other].items(),
+                                    outs["paged-freelist"].items()):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert a.finish_reason == b.finish_reason
 
 
 def test_continuous_engine_token_identical_with_paged_kernel(engine_outputs):
@@ -249,10 +277,11 @@ def test_nbytes_partition_is_exact(kind, policy, rng):
                  for l in jax.tree_util.tree_leaves(cache))
     assert packed > 0 and overhead > 0
     assert packed + overhead == leaves
-    # the tree-walking accounting agrees with the backend's own
+    # the tree-walking accounting agrees with the backend's own; these
+    # static layouts (mixed, strided paged) have no free pool to report
     cb = backend_lib.cache_bytes(cache)
     assert cb == {"packed_bytes": packed, "overhead_bytes": overhead,
-                  "total_bytes": leaves}
+                  "free_pool_bytes": 0, "total_bytes": leaves}
 
 
 def test_paged_overhead_includes_page_tables(rng):

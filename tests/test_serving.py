@@ -316,9 +316,12 @@ def test_cache_bytes_reports_packed_and_overhead(rng):
     toks = [rng.integers(2, cfg.vocab, size=(48,)).astype(np.int32) for _ in range(2)]
     eng.generate({"tokens": pack_requests(toks, 2, 48)})
     cb = eng.cache_bytes(eng.last_caches)
-    assert set(cb) == {"packed_bytes", "overhead_bytes", "total_bytes"}
+    assert set(cb) == {"packed_bytes", "overhead_bytes", "free_pool_bytes",
+                       "total_bytes"}
     assert 0 < cb["packed_bytes"] < cb["total_bytes"]
     assert cb["packed_bytes"] + cb["overhead_bytes"] == cb["total_bytes"]
+    # mixed layout has no page pools: nothing to report as free-pool pages
+    assert cb["free_pool_bytes"] == 0
     # zipcache 4/2-bit packed payload must undercut raw bf16 KV for the
     # same token count by a wide margin: raw leaves include fp32 saliency
     # state that the old (buggy) accounting counted as compressed payload.

@@ -1,0 +1,160 @@
+#!/usr/bin/env python
+"""docs-check: keep README/docs claims mechanically honest.
+
+Validations (all against the LIVE code, so drift fails CI):
+
+  1. README's serving-CLI flag table vs the actual `repro.launch.serve`
+     argument parser — bidirectional: every table row must name a real
+     flag, every parser flag must be documented, and the table's defaults
+     must match the parser's.
+  2. Fenced ```python blocks in README.md and docs/*.md must at least
+     parse (compile(); nothing is executed).
+  3. Backtick-quoted repository paths in the docs must exist (paths are
+     also tried under src/repro/, the documented base for bare refs).
+
+Run via `make docs-check`.  Exit code 0 = clean; failures are listed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+DOCS = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+errors: list[str] = []
+
+
+def err(msg: str) -> None:
+    errors.append(msg)
+
+
+# ---------------------------------------------------------------------------
+# 1. the README flag table vs the serve driver's parser
+# ---------------------------------------------------------------------------
+
+def capture_serve_parser() -> argparse.ArgumentParser:
+    """Grab the parser `repro.launch.serve.main` builds, without running
+    the driver: parse_args is intercepted before any model work starts."""
+    import repro.launch.serve as serve_mod
+
+    captured: dict = {}
+
+    class _Captured(Exception):
+        pass
+
+    orig = argparse.ArgumentParser.parse_args
+
+    def grab(self, *a, **kw):
+        captured["parser"] = self
+        raise _Captured
+
+    argparse.ArgumentParser.parse_args = grab
+    try:
+        serve_mod.main([])
+    except _Captured:
+        pass
+    finally:
+        argparse.ArgumentParser.parse_args = orig
+    return captured["parser"]
+
+
+def parse_flag_table(md: str) -> dict:
+    """README flag table rows -> {flag: default-cell-text}."""
+    out = {}
+    for line in md.splitlines():
+        m = re.match(r"\|\s*`(--[\w-]+)`\s*\|\s*(.*?)\s*\|", line)
+        if m:
+            out[m.group(1)] = m.group(2).strip("`").strip()
+    return out
+
+
+def default_matches(action: argparse.Action, cell: str) -> bool:
+    if action.required:
+        return cell == "(required)"
+    if isinstance(action, (argparse._StoreTrueAction,)):
+        return cell in ("off", "False")
+    return cell == str(action.default)
+
+
+def check_flag_table() -> None:
+    readme = (ROOT / "README.md").read_text()
+    table = parse_flag_table(readme)
+    if not table:
+        err("README.md: serving flag table not found")
+        return
+    parser = capture_serve_parser()
+    actions = {opt: a for a in parser._actions for opt in a.option_strings
+               if opt.startswith("--")}
+    actions.pop("--help", None)
+
+    for flag, cell in table.items():
+        if flag not in actions:
+            err(f"README table documents {flag}, which repro.launch.serve "
+                "does not accept")
+        elif not default_matches(actions[flag], cell):
+            a = actions[flag]
+            shown = "(required)" if a.required else a.default
+            err(f"README table default for {flag} is {cell!r}; the parser "
+                f"says {shown!r}")
+    for flag in actions:
+        if flag not in table:
+            err(f"repro.launch.serve accepts {flag}, missing from the "
+                "README flag table")
+
+
+# ---------------------------------------------------------------------------
+# 2. fenced python snippets must parse
+# ---------------------------------------------------------------------------
+
+def check_snippets() -> None:
+    fence = re.compile(r"```python\n(.*?)```", re.DOTALL)
+    for doc in DOCS:
+        for i, block in enumerate(fence.findall(doc.read_text())):
+            try:
+                compile(block, f"{doc.name}:snippet{i}", "exec")
+            except SyntaxError as e:
+                err(f"{doc.relative_to(ROOT)}: python snippet {i} does not "
+                    f"parse: {e}")
+
+
+# ---------------------------------------------------------------------------
+# 3. backtick-quoted repo paths must exist
+# ---------------------------------------------------------------------------
+
+PATH_RE = re.compile(
+    r"`((?:src|tests|benchmarks|examples|docs|tools|kernels|core|models|"
+    r"serving|launch|configs)/[\w./-]+\.\w+)`")
+
+
+def check_paths() -> None:
+    for doc in DOCS:
+        for ref in set(PATH_RE.findall(doc.read_text())):
+            if not ((ROOT / ref).exists() or (ROOT / "src/repro" / ref).exists()):
+                err(f"{doc.relative_to(ROOT)}: referenced path {ref!r} "
+                    "does not exist (tried ./ and src/repro/)")
+
+
+def main() -> int:
+    for doc in DOCS:
+        if not doc.exists():
+            err(f"missing doc: {doc}")
+    check_flag_table()
+    check_snippets()
+    check_paths()
+    if errors:
+        print(f"docs-check: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"docs-check: OK ({', '.join(d.relative_to(ROOT).as_posix() for d in DOCS)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
