@@ -2,8 +2,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-conformance test-kernels test-alloc test-ci \
-    docs-check dev serve bench
+.PHONY: test test-fast test-conformance test-kernels test-alloc \
+    test-scheduling test-ci docs-check dev serve bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -23,6 +23,13 @@ test-conformance:
 # fragmentation reuse, engine admission deferral
 test-alloc:
 	$(PYTHON) -m pytest -x -q tests/test_page_alloc.py
+
+# scheduler/streaming/preemption: typed errors, priority ordering,
+# preempt+recompute bitwise identity + allocator invariants, and the
+# streaming-conformance check from the cross-backend suite
+test-scheduling:
+	$(PYTHON) -m pytest -x -q tests/test_scheduling.py \
+	    "tests/test_backend_conformance.py::test_streaming_concat_matches_result"
 
 # README/docs stay mechanically honest: flag tables vs the live argparse
 # surface, python snippets parse, referenced paths exist (tools/check_docs.py)

@@ -121,6 +121,10 @@ def run():
     # ---- measured (CPU): continuous batching vs lockstep, ragged budgets
     run_continuous_vs_lockstep()
 
+    # ---- measured (CPU): short-request first-token latency under a
+    # long-budget monopoly, FIFO vs priority+preemption
+    run_head_of_line()
+
     # ---- measured (CPU): static vs free-list page pools, staggered lengths
     run_pool_elasticity()
 
@@ -129,6 +133,81 @@ def run():
 
     # ---- measured (CPU): steady-state decode attention across decode paths
     run_decode_steady_state()
+
+
+def run_head_of_line():
+    """Head-of-line latency under a long-budget monopoly: two requests with
+    the full decode budget hold both slots when a burst of short
+    high-priority requests arrives.  Under FIFO the shorts wait for a long
+    to retire (first-token latency ~ the long's remaining budget in
+    scheduler steps); under the priority scheduler with
+    preemption=recompute a long is evicted (pages returned, tokens
+    retained) and the shorts start within a step or two, while the
+    preempted long is later re-admitted by replaying its retained tokens —
+    its final output is unchanged (tests/test_scheduling.py asserts it
+    bitwise).  Emitted per policy: total wall-clock, p50/p99 first-token
+    latency of the shorts in scheduler STEPS (the deterministic number)
+    and in seconds (CPU wall-clock, noisy), plus the preemption/deferral
+    counts.  The preemption row pays the recompute tax in total steps —
+    that is the trade being measured."""
+    import dataclasses
+
+    from repro import configs
+    from repro.core.policy import CompressionConfig
+    from repro.models import registry
+    from repro.serving import ContinuousEngine, Request, ServeConfig, TokenEvent
+
+    cfg = configs.get_arch("yi-6b", smoke=True)
+    params = registry.materialize_params(cfg, 0)
+    ccfg = dataclasses.replace(CompressionConfig.zipcache(),
+                               fp_window=8, recompress_interval=8)
+    slots, prompt_len, long_budget, n_short = 2, 16, 32, 4
+    rng = np.random.default_rng(0)
+    longs = [rng.integers(2, cfg.vocab, size=(prompt_len,)).astype(np.int32)
+             for _ in range(slots)]
+    shorts = [rng.integers(2, cfg.vocab, size=(prompt_len,)).astype(np.int32)
+              for _ in range(n_short)]
+
+    for label, kw in (("fifo", dict(scheduler="fifo", preemption="off")),
+                      ("priority_preempt", dict(scheduler="priority",
+                                                preemption="recompute"))):
+        scfg = ServeConfig(batch_size=slots, prompt_len=prompt_len,
+                           max_new_tokens=long_budget, backend="paged",
+                           page_size=8, page_allocator="freelist",
+                           pool_fraction=1.0, **kw)
+        eng = ContinuousEngine(cfg, ccfg, scfg, params)
+        wid = eng.submit(Request(tokens=longs[0], max_new_tokens=long_budget))
+        eng.run()           # warm-up: compile the program family
+        eng.results.pop(wid)
+        base_step = eng._step_no   # exclude warm-up from the step totals
+        t0 = time.perf_counter()
+        lids = [eng.submit(Request(tokens=p, max_new_tokens=long_budget))
+                for p in longs]
+        for _ in range(3):  # the monopolists occupy every slot
+            eng.step()
+        t_submit = time.perf_counter()
+        submit_step = eng._step_no
+        sids = [eng.submit(Request(tokens=p, max_new_tokens=2, priority=1))
+                for p in shorts]
+        ft_steps, ft_s = {}, {}
+        while eng.pending:
+            for ev in eng.step():
+                if (isinstance(ev, TokenEvent) and ev.request_id in sids
+                        and ev.index == 0):
+                    ft_steps[ev.request_id] = ev.step - submit_step
+                    ft_s[ev.request_id] = time.perf_counter() - t_submit
+        t = time.perf_counter() - t0
+        steps = np.array([ft_steps[r] for r in sids], float)
+        secs = np.array([ft_s[r] for r in sids], float)
+        ps = eng.pool_stats()
+        common.emit(
+            f"fig6.head_of_line.{label}", t * 1e6,
+            f"ft_steps_p50:{np.percentile(steps, 50):.0f};"
+            f"ft_steps_p99:{np.percentile(steps, 99):.0f};"
+            f"ft_s_p50:{np.percentile(secs, 50):.3f};"
+            f"ft_s_p99:{np.percentile(secs, 99):.3f};"
+            f"total_steps:{eng._step_no - base_step};"
+            f"preemptions:{ps['preemptions']};deferrals:{ps['deferrals']}")
 
 
 def run_pool_elasticity():

@@ -1,16 +1,22 @@
 """Continuous-batching serving demo (the paper is an inference paper — this
 is the primary example).
 
-Request-lifecycle API: build a `ContinuousEngine`, `submit` requests (each
-with its own sampling params, stop tokens and token budget), drive the
-scheduler with `step()`/`run()`, `poll`/`result` per request id:
+Request-lifecycle API: build a `ContinuousEngine` (an `EngineCore` with the
+scheduling policy from ServeConfig injected), `submit` requests (each with
+its own sampling params, stop tokens, token budget and priority), then
+either drive the scheduler with `step()`/`run()` and `poll`/`result` per
+request id, or consume tokens as they decode:
 
     eng = ContinuousEngine(cfg, ccfg, scfg, params)
     rid = eng.submit(Request(tokens=prompt, stop_tokens=(eos,),
-                             max_new_tokens=32))
-    while eng.poll(rid) != "done":
-        eng.step()                # admit from queue / decode / retire
+                             max_new_tokens=32, priority=1))
+    for tok in eng.stream(rid):   # drives step() itself; yields each token
+        print(tok)                # (other slots keep decoding inside)
     out = eng.result(rid)         # .tokens, .finish_reason, .timings
+
+`step()` returns typed events (TokenEvent / PreemptedEvent /
+FinishedEvent) and each Request may carry an `on_token` callback — the
+push-style twin of `stream`.
 
 Each step admits queued requests into free decode slots (prefill runs at
 batch=1 and the compressed cache slice is inserted into the running batch —
@@ -39,11 +45,21 @@ new request's worst case, admission defers (visible in the pool stats
 line) instead of corrupting a running slot — and the emitted tokens still
 match the static layouts bitwise.
 
+--scheduler priority --preemption recompute demonstrates the head-of-line
+story: a burst of short high-priority requests is submitted while
+long-budget requests hold every slot; the scheduler evicts a long (its
+pages return to the pool, its tokens are retained host-side), runs the
+shorts, then re-admits the long by replaying its tokens — its final output
+is unchanged, only later.  The per-request first-token latencies and
+preemption counts are printed from RequestOutput.timings.
+
     PYTHONPATH=src python examples/serve_zipcache.py [--arch yi-6b]
                                                      [--backend paged]
                                                      [--paged-kernel on]
                                                      [--page-allocator freelist]
                                                      [--pool-fraction 0.75]
+                                                     [--scheduler priority]
+                                                     [--preemption recompute]
 """
 
 import argparse
@@ -84,11 +100,24 @@ def main():
     ap.add_argument("--admit-watermark", type=float, default=0.0,
                     help="freelist admission headroom: fraction of each "
                          "pool kept free when admitting")
+    ap.add_argument("--scheduler", default="fifo",
+                    choices=("fifo", "priority"),
+                    help="admission policy: fifo = submission order; "
+                         "priority = highest Request.priority first "
+                         "(odd-numbered demo requests get priority 1)")
+    ap.add_argument("--preemption", default="off",
+                    choices=("off", "recompute"),
+                    help="--scheduler priority only: evict a running "
+                         "lower-priority slot for an urgent request and "
+                         "re-admit it later by replaying its retained "
+                         "tokens (final output unchanged)")
     args = ap.parse_args()
     if args.paged_kernel == "on" and args.backend != "paged":
         ap.error("--paged-kernel on requires --backend paged")
     if args.page_allocator == "freelist" and args.backend != "paged":
         ap.error("--page-allocator freelist requires --backend paged")
+    if args.preemption == "recompute" and args.scheduler != "priority":
+        ap.error("--preemption recompute requires --scheduler priority")
 
     cfg = configs.get_arch(args.arch, smoke=True)  # reduced config: CPU-friendly
     params = registry.materialize_params(cfg, 0)
@@ -101,12 +130,16 @@ def main():
                        paged_kernel=args.paged_kernel == "on",
                        page_allocator=args.page_allocator,
                        pool_fraction=args.pool_fraction,
-                       admit_watermark=args.admit_watermark)
+                       admit_watermark=args.admit_watermark,
+                       scheduler=args.scheduler,
+                       preemption=args.preemption)
 
     # ---- continuous batching: more requests than slots, mixed budgets ----
     print(f"== continuous serving {args.arch} (reduced config): "
           f"{args.requests} requests over {args.slots} slots, "
-          f"backend={args.backend}")
+          f"backend={args.backend}, scheduler={args.scheduler}"
+          + (f" (+{args.preemption} preemption)"
+             if args.preemption != "off" else ""))
     eng = ContinuousEngine(cfg, ccfg, scfg, params)
     rids = []
     for i in range(args.requests):
@@ -117,17 +150,24 @@ def main():
             sampling=SamplingParams(temperature=0.0 if i % 2 == 0 else 0.8,
                                     seed=i),
             max_new_tokens=int(rng.integers(8, args.max_new + 1)),
+            priority=i % 2 if args.scheduler == "priority" else 0,
             stop_tokens=(1,))))
-    n_steps = 0
-    while eng.pending:
-        eng.step()
-        n_steps += 1
+    # stream the first request token-by-token; its generator drives step()
+    # for the whole engine, so every other slot keeps decoding meanwhile
+    streamed = list(eng.stream(rids[0]))
+    eng.run()                     # drain whatever outlived the stream
+    n_steps = eng._step_no
+    print(f"  streamed {rids[0]}: {len(streamed)} tok, "
+          f"first={streamed[:6]} (== result: "
+          f"{streamed == eng.result(rids[0]).tokens.tolist()})")
     for rid in rids:
         out = eng.result(rid)
         t = out.timings
         print(f"  {rid:8s} {len(out.tokens):3d} tok ({out.finish_reason:6s}) "
               f"prefill={t['prefill_s']:.2f}s decode={t['decode_s']:.2f}s "
-              f"({t['tok_per_s']:.1f} tok/s)  first={out.tokens[:6].tolist()}")
+              f"({t['tok_per_s']:.1f} tok/s, first tok {t['first_token_s']:.2f}s, "
+              f"{int(t['n_preemptions'])} preemptions)  "
+              f"first={out.tokens[:6].tolist()}")
     cb = eng.cache_bytes(eng.caches)
     print(f"  scheduler: {n_steps} steps; cache {cb['packed_bytes']} B packed "
           f"+ {cb['overhead_bytes']} B overhead "
@@ -135,9 +175,10 @@ def main():
     ps = eng.pool_stats()
     if ps is not None:
         used = {k: f"{v['peak_used']}/{v['pool_pages']}"
-                for k, v in ps.items() if k != "deferrals"}
+                for k, v in ps.items() if isinstance(v, dict)}
         print(f"  page pools: peak used {used}; "
-              f"{ps['deferrals']} admissions deferred")
+              f"{ps['deferrals']} admissions deferred; "
+              f"{ps['preemptions']} slots preempted")
 
     # ---- lockstep per-policy throughput comparison ----
     prompts = [rng.integers(2, cfg.vocab, size=(args.prompt_len,)).astype(np.int32)

@@ -215,6 +215,13 @@ class FreeListAllocator:
         self.occ: List[Optional[Occupancy]] = [None] * slots
         self.watermark = watermark
         self.deferrals = 0
+        # preempt+recompute evictions (serving/scheduler.py): each one is a
+        # full `free(slot)` — every granted page returned, the reservation
+        # dropped — followed later by a fresh `admit` when the victim is
+        # re-admitted, which re-reserves its worst case from scratch.  The
+        # counter makes that page churn visible in `stats()` next to the
+        # admission deferrals.
+        self.preemptions = 0
         self.dirty = True
 
     # -- construction from a live cache tree --------------------------------
@@ -275,14 +282,22 @@ class FreeListAllocator:
     def _watermark_pages(self, seg: _Segment) -> int:
         return int(np.ceil(self.watermark * seg.pool_pages))
 
+    def admit_headroom(self) -> Dict[str, int]:
+        """Per-segment pages available to NEW reservations right now: free
+        pages minus outstanding reservations minus the admission watermark.
+        The admission-control primitive `serving.scheduler.PoolView` builds
+        on (a planned-but-unexecuted admission lowers every segment's
+        headroom by exactly its worst-case reservation)."""
+        return {n: self.segs[n].headroom(self._watermark_pages(self.segs[n]))
+                for n in self.SEGMENTS}
+
     def can_admit(self, total_tokens: int,
                   prompt_tokens: Optional[int] = None) -> bool:
         """True when every segment can reserve the request's worst case on
         top of the running slots' outstanding reservations + watermark."""
         worst = self.worst_pages(total_tokens, prompt_tokens)
-        return all(
-            self.segs[n].headroom(self._watermark_pages(self.segs[n]))
-            >= worst[n] for n in self.SEGMENTS)
+        head = self.admit_headroom()
+        return all(head[n] >= worst[n] for n in self.SEGMENTS)
 
     def fits_ever(self, total_tokens: int,
                   prompt_tokens: Optional[int] = None) -> bool:
@@ -377,6 +392,7 @@ class FreeListAllocator:
                       "free": len(seg.free), "peak_used": seg.peak_used,
                       "outstanding": seg.outstanding}
         out["deferrals"] = self.deferrals
+        out["preemptions"] = self.preemptions
         return out
 
     def check_invariants(self) -> None:

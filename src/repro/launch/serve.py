@@ -34,6 +34,14 @@ pool can be provisioned below slots x max_len (--pool-fraction) and long
 requests borrow pages freed by short ones; admission defers (backpressure)
 when the pool cannot cover a request's worst case.  Greedy output stays
 bitwise token-identical to the static assignment and to mixed.
+--scheduler picks the continuous engine's admission policy
+(serving/scheduler.py): fifo = strict submission order (the reference);
+priority = highest Request.priority first.  --preemption recompute arms
+vLLM-style eviction under the priority scheduler: a running lower-priority
+slot can be evicted (pages returned, tokens retained host-side) so an
+urgent request is never stuck behind a long-budget monopolist, and is
+later re-admitted by replaying its retained tokens — deterministic, the
+victim's final tokens are unchanged (tests/test_scheduling.py).
 """
 
 from __future__ import annotations
@@ -94,9 +102,30 @@ def main(argv=None):
                          "pool held back as admission headroom (a request "
                          "is admitted only if its worst case fits with this "
                          "reserve left over)")
+    ap.add_argument("--scheduler", default="fifo",
+                    choices=("fifo", "priority"),
+                    help="--continuous only: admission policy. fifo = strict "
+                         "submission order (head-of-line blocking, the "
+                         "reference); priority = highest Request.priority "
+                         "first, FIFO within a class")
+    ap.add_argument("--preemption", default="off",
+                    choices=("off", "recompute"),
+                    help="--scheduler priority only: recompute lets the "
+                         "scheduler evict a running lower-priority slot "
+                         "(pages returned, tokens retained host-side) and "
+                         "re-admit it later by replaying those tokens — "
+                         "deterministic, the victim's final tokens are "
+                         "unchanged; off never evicts")
     args = ap.parse_args(argv)
     if args.paged_kernel == "on" and args.backend != "paged":
         ap.error("--paged-kernel on requires --backend paged")
+    if args.scheduler != "fifo" and not args.continuous:
+        ap.error("--scheduler requires --continuous (the lockstep engine "
+                 "has no admission queue to schedule)")
+    if args.preemption == "recompute" and args.scheduler != "priority":
+        # FIFO never names a victim; arming preemption under it would be a
+        # silent no-op — reject instead of misleading
+        ap.error("--preemption recompute requires --scheduler priority")
     if args.page_allocator == "freelist" and args.backend != "paged":
         ap.error("--page-allocator freelist requires --backend paged")
     if args.page_allocator == "freelist" and not args.continuous:
@@ -125,7 +154,9 @@ def main(argv=None):
                        paged_kernel=args.paged_kernel == "on",
                        page_allocator=args.page_allocator,
                        pool_fraction=args.pool_fraction,
-                       admit_watermark=args.admit_watermark)
+                       admit_watermark=args.admit_watermark,
+                       scheduler=args.scheduler,
+                       preemption=args.preemption)
     # (--backend paged with a mesh is rejected where the backend is built,
     # launch/steps.serve_ctx — programmatic callers hit the same guard)
 
@@ -136,19 +167,26 @@ def main(argv=None):
 
     if args.continuous:
         eng = ContinuousEngine(cfg, ccfg, scfg, params, mesh=mesh)
-        rids = [eng.submit(Request(tokens=p)) for p in prompts]
+        # under the priority scheduler, stagger priorities so the policy is
+        # visible in the admission order (FIFO ignores the field entirely)
+        rids = [eng.submit(Request(tokens=p, priority=(
+                    i % 2 if args.scheduler == "priority" else 0)))
+                for i, p in enumerate(prompts)]
         eng.run()
         for rid in rids:
             out = eng.result(rid)
             print(f"[serve] {rid}: {len(out.tokens)} tok "
-                  f"({out.timings['tok_per_s']:.1f} tok/s) "
+                  f"({out.timings['tok_per_s']:.1f} tok/s, "
+                  f"first tok {out.timings['first_token_s']:.2f}s, "
+                  f"{int(out.timings['n_preemptions'])} preemptions) "
                   f"first={out.tokens[:16].tolist()}")
         ps = eng.pool_stats()
         if ps is not None:
             used = {k: f"{v['peak_used']}/{v['pool_pages']}"
-                    for k, v in ps.items() if k != "deferrals"}
+                    for k, v in ps.items() if isinstance(v, dict)}
             print(f"[serve] page pools peak used {used}, "
-                  f"{ps['deferrals']} admissions deferred")
+                  f"{ps['deferrals']} admissions deferred, "
+                  f"{ps['preemptions']} slots preempted")
         return {rid: eng.result(rid) for rid in rids}
 
     engine = ServingEngine(cfg, ccfg, scfg, params, mesh=mesh)

@@ -4,6 +4,7 @@ from repro.core.alloc import (  # noqa: F401  (typed backpressure signals)
 )
 from repro.serving.engine import (  # noqa: F401
     ContinuousEngine,
+    EngineCore,
     Request,
     RequestOutput,
     SamplingParams,
@@ -11,4 +12,18 @@ from repro.serving.engine import (  # noqa: F401
     ServingEngine,
     pack_requests,
     probe_flag,
+)
+from repro.serving.events import (  # noqa: F401
+    EngineClosedError,
+    Event,
+    FinishedEvent,
+    PreemptedEvent,
+    TokenEvent,
+    UnknownRequestError,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    FIFOScheduler,
+    PriorityScheduler,
+    Scheduler,
+    make_scheduler,
 )

@@ -5,13 +5,30 @@ Two engines share the same jitted programs:
   * ``ServingEngine``    — the lockstep batch path: one packed batch prefills
     together and decodes for a fixed number of steps (benchmarks, quality
     evals, and the reference for engine-equivalence tests).
-  * ``ContinuousEngine`` — continuous batching: an explicit request lifecycle
-    (``submit -> step/run -> result``) over a fixed number of decode *slots*.
-    Each slot holds one request; a new request prefills on its own (batch=1)
+  * ``EngineCore`` — continuous batching: an explicit request lifecycle
+    (``submit -> step/run -> result``, plus ``stream`` for token-at-a-time
+    delivery) over a fixed number of decode *slots*, with the scheduling
+    POLICY injected as a `serving.scheduler.Scheduler` (admission order,
+    head-of-line blocking, victim selection for preempt+recompute).  Each
+    slot holds one request; a new request prefills on its own (batch=1)
     and its compressed cache slice is ``insert``-ed into the running decode
     batch (jetstream-style), a finished request ``free``-s its slot.  All
     jitted programs keep static shapes — inactive slots are masked, never
-    sliced away — so the engine stays pjit/TPU-compatible.
+    sliced away — so the engine stays pjit/TPU-compatible.  ``step()``
+    returns the typed events (`serving.events`) that iteration produced.
+  * ``ContinuousEngine`` — the config-driven façade over ``EngineCore``:
+    builds the scheduler from ``ServeConfig.scheduler``/``.preemption`` and
+    keeps the blocking ``run()`` loop as the compatibility surface.
+
+Preemption (``preemption="recompute"``, vLLM-style): the scheduler may name
+a running victim so a more urgent request can take its slot.  The engine
+returns every page the victim held to the free pools, retains its generated
+tokens HOST-side, and re-admits it later by recompute: prefill the prompt
+again, then replay the retained tokens through the SAME masked decode/fold
+programs on the slot's own counters.  Replay re-runs the exact op sequence
+of the uncontended run, so the rebuilt cache state is bitwise identical and
+the request's remaining tokens are unchanged — preemption moves work in
+time, never changes results (tests/test_scheduling.py).
 
 Per-request cadence (paper Alg. 3 under continuous batching): every slot
 carries its own token counter; probe rows and window recompression fire on
@@ -33,7 +50,8 @@ import collections
 import dataclasses
 import itertools
 import time
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Deque, Dict, Iterator, List, Optional, Sequence,
+                    Set, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +63,8 @@ from repro.core import backend as backend_lib
 from repro.core.policy import CompressionConfig
 from repro.launch import steps as steps_lib
 from repro.models import registry
+from repro.serving import events as events_lib
+from repro.serving import scheduler as scheduler_lib
 
 
 # ---------------------------------------------------------------------------
@@ -113,6 +133,21 @@ class ServeConfig:
     #   error  raise alloc.PagePoolExhausted from step() (backpressure to
     #          the caller, e.g. an async front that wants to shed load)
     backpressure: str = "defer"
+    # Scheduling policy (serving/scheduler.py):
+    #   fifo      strict submission order, head-of-line blocking — bitwise
+    #             the pre-scheduler engine's behavior
+    #   priority  highest Request.priority first (FIFO within a class);
+    #             with preemption="recompute" it may evict a running
+    #             lower-priority slot so an urgent request is never stuck
+    #             behind a long-budget monopolist
+    scheduler: str = "fifo"
+    # "off" never evicts a running slot (out-of-slots pressure queues).
+    # "recompute": the scheduler may name a victim; its pages are returned,
+    # its generated tokens retained host-side, and it is re-admitted later
+    # by re-prefilling the prompt and replaying those tokens through the
+    # same decode/fold programs — deterministic: the victim's remaining
+    # tokens are unchanged vs an uncontended run (tests/test_scheduling.py)
+    preemption: str = "off"
     # sampling is per-request (SamplingParams); the lockstep generate() path
     # is always greedy — it is the reference the continuous engine is
     # verified token-identical against
@@ -126,23 +161,36 @@ class SamplingParams:
     seed: int = 0
 
 
-@dataclasses.dataclass
-class Request:
+@dataclasses.dataclass(eq=False)   # identity semantics: queue membership /
+class Request:                     # removal must not compare token arrays
     """One generation request.
 
     tokens: (<= prompt_len,) int32 prompt ids (left-padded on admission).
     max_new_tokens: per-request budget, capped by ServeConfig.max_new_tokens.
     stop_tokens: generation stops when one of these is produced (EOS).
+    priority: scheduling urgency (higher = sooner; only the priority
+        scheduler reads it — FIFO ignores priorities entirely).
+    on_token: optional callback invoked with each fresh `TokenEvent` as the
+        request decodes (the push-style twin of `engine.stream`).
     """
     tokens: np.ndarray
     id: Optional[str] = None
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     max_new_tokens: Optional[int] = None
     stop_tokens: Tuple[int, ...] = ()
+    priority: int = 0
+    on_token: Optional[Callable[[events_lib.TokenEvent], None]] = None
 
 
 @dataclasses.dataclass
 class RequestOutput:
+    """Final output of one request.
+
+    timings keys: queued_s (submit -> first admission), prefill_s (incl.
+    recompute replays), decode_s, tok_per_s, first_token_s (submit -> first
+    sampled token), preempted_s (wall time spent evicted), n_preemptions,
+    and n_deferrals (admissions the page pool deferred for THIS request —
+    the per-request view of `pool_stats()`'s cumulative counters)."""
     id: str
     tokens: np.ndarray               # (n_generated,) int32, stop token included
     finish_reason: str               # "stop" | "length"
@@ -312,16 +360,22 @@ class ServingEngine(_EngineBase):
 # Continuous-batching engine
 # ---------------------------------------------------------------------------
 
-class ContinuousEngine(_EngineBase):
-    """Continuous batching over a fixed slot count.
+class EngineCore(_EngineBase):
+    """Continuous batching over a fixed slot count, policy injected.
 
     Lifecycle::
 
-        eng = ContinuousEngine(cfg, ccfg, scfg, params)
+        eng = ContinuousEngine(cfg, ccfg, scfg, params)   # EngineCore + scfg's scheduler
         rid = eng.submit(Request(tokens=prompt, stop_tokens=(eos,)))
-        while eng.pending:              # or eng.run()
-            eng.step()                  # admit / decode one token / retire
+        for tok in eng.stream(rid):     # drives step() while tokens pending
+            ...                         # or: while eng.pending: eng.step()
         out = eng.result(rid)           # RequestOutput
+
+    Each ``step()`` asks the injected `Scheduler` which queued requests to
+    admit (and, with ``preemption="recompute"``, whether to evict a running
+    victim first), decodes one token for every active slot, retires
+    finished requests, and returns the typed events it produced
+    (`TokenEvent` / `PreemptedEvent` / `FinishedEvent`).
 
     The decode batch never changes shape: admission prefills one request
     (batch=1) and inserts its cache slice into a free slot of the running
@@ -331,7 +385,7 @@ class ContinuousEngine(_EngineBase):
     """
 
     def __init__(self, cfg: ArchConfig, ccfg: CompressionConfig, scfg: ServeConfig,
-                 params, mesh=None):
+                 params, scheduler: scheduler_lib.Scheduler, mesh=None):
         if cfg.encdec or cfg.frontend != "none":
             raise NotImplementedError(
                 "ContinuousEngine currently serves decoder-only text models; "
@@ -349,11 +403,17 @@ class ContinuousEngine(_EngineBase):
         super().__init__(cfg, ccfg, scfg, params, mesh)
         self.caches = registry.init_caches(cfg, self.ctx, scfg.batch_size)
         self._free_slot = jax.jit(registry.free_caches)
+        self.scheduler = scheduler
         self.slots: List[Optional[_Slot]] = [None] * scfg.batch_size
         self.queue: Deque[Request] = collections.deque()
         self.results: Dict[str, RequestOutput] = {}
         self._ids = itertools.count()
+        self._seq = itertools.count()      # arrival stamps (scheduler order)
         self._step_no = 0
+        self._known: Set[str] = set()      # every id ever submitted here
+        self._closed = False
+        self._token_log: Dict[str, List[int]] = {}   # feeds stream()
+        self._events: List[events_lib.Event] = []    # current step's events
         # Elastic page allocation (core/alloc.py): host-side free lists +
         # page tables, synced onto the device cache tree between jitted
         # steps.  None for the mixed backend and the static paged layout.
@@ -361,6 +421,10 @@ class ContinuousEngine(_EngineBase):
             raise ValueError(
                 f"ServeConfig.backpressure must be 'defer' or 'error', got "
                 f"{scfg.backpressure!r}")
+        if scfg.preemption not in ("off", "recompute"):
+            raise ValueError(
+                f"ServeConfig.preemption must be 'off' or 'recompute', got "
+                f"{scfg.preemption!r}")
         self._alloc: Optional[alloc_lib.FreeListAllocator] = None
         self._last_deferred: Optional[str] = None
         if getattr(self.ctx.backend, "allocator", "static") == "freelist":
@@ -392,13 +456,17 @@ class ContinuousEngine(_EngineBase):
         """Validate + enqueue a request; returns its id.
 
         Raises `ValueError` on prompts or budgets that can never fit the
-        engine's static shapes, and `alloc.PoolCapacityError` when the
-        free-list page pool is too small to EVER hold the request's worst
-        case (prompt + decode budget) — oversized requests fail fast here
-        instead of deadlocking the FIFO admission queue.  Transient
-        out-of-pages pressure is NOT an error: the request queues and
-        admission defers until running slots free enough pages
-        (`ServeConfig.backpressure`)."""
+        engine's static shapes, `events.EngineClosedError` after
+        `shutdown()`, and `alloc.PoolCapacityError` when the free-list page
+        pool is too small to EVER hold the request's worst case (prompt +
+        decode budget) — oversized requests fail fast here instead of
+        deadlocking the admission queue.  Transient out-of-pages pressure
+        is NOT an error: the request queues and admission defers until
+        running slots free enough pages (`ServeConfig.backpressure`)."""
+        if self._closed:
+            raise events_lib.EngineClosedError(
+                "engine is shut down: it drains what it has but accepts no "
+                "new requests")
         n = int(np.asarray(request.tokens).shape[-1])
         if n > self.scfg.prompt_len:
             raise ValueError(
@@ -418,14 +486,24 @@ class ContinuousEngine(_EngineBase):
                 "raise pool_fraction or lower the request budget")
         if request.id is None:
             rid = f"req-{next(self._ids)}"
-            while self.poll(rid) != "unknown":  # user ids may shadow auto ids
+            while rid in self._known:  # user ids may shadow auto ids
                 rid = f"req-{next(self._ids)}"
             request.id = rid
-        elif self.poll(request.id) != "unknown":
+        elif request.id in self._known:
             raise ValueError(
                 f"request id {request.id!r} already submitted; ids must be "
                 "unique (re-submitting the same Request object counts)")
         request._t_submit = time.perf_counter()
+        request._seq = next(self._seq)
+        request._t_first_admit = None    # first admission (queued_s)
+        request._t_first = None          # first sampled token (first_token_s)
+        request._prefill_s_acc = 0.0     # carried across preemptions
+        request._decode_s_acc = 0.0
+        request._preempt_s = 0.0
+        request._n_preempts = 0
+        request._n_deferrals = 0
+        self._known.add(request.id)
+        self._token_log[request.id] = []
         self.queue.append(request)
         return request.id
 
@@ -433,25 +511,68 @@ class ContinuousEngine(_EngineBase):
         """Lifecycle state of a submitted request:
 
         'queued'   waiting for a free slot (or, under the free-list
-                   allocator, for enough free pages — deferred admission)
+                   allocator, for enough free pages — deferred admission;
+                   a preempted request is queued again until recompute
+                   re-admits it)
         'running'  occupying a decode slot
         'done'     retired; `result(request_id)` returns its output
-        'unknown'  id never submitted (or submitted to another engine)
+
+        Raises the typed `events.UnknownRequestError` for an id this engine
+        never saw (never submitted, or submitted to another engine).
         """
+        if request_id not in self._known:
+            raise events_lib.UnknownRequestError(request_id)
         if request_id in self.results:
             return "done"
         if any(s is not None and s.request.id == request_id for s in self.slots):
             return "running"
-        if any(r.id == request_id for r in self.queue):
-            return "queued"
-        return "unknown"
+        return "queued"
 
     def result(self, request_id: str) -> Optional[RequestOutput]:
         """The finished request's RequestOutput — `.tokens` (stop token
         included), `.finish_reason` ("stop" | "length") and `.timings`
-        (queued_s / prefill_s / decode_s / tok_per_s) — or None while it is
-        still queued or running (use `poll` to distinguish)."""
+        (see `RequestOutput`) — or None while it is still queued or running
+        (use `poll` to distinguish).  Raises `events.UnknownRequestError`
+        for an id this engine never saw."""
+        if request_id not in self._known:
+            raise events_lib.UnknownRequestError(request_id)
         return self.results.get(request_id)
+
+    def stream(self, request_id: str) -> Iterator[int]:
+        """Yield the request's tokens as they decode (first token included).
+
+        The generator drives the engine itself: when it has yielded every
+        token decoded so far and the request is not finished, it calls
+        `step()` — so ``for tok in eng.stream(rid)`` is a complete serving
+        loop (other slots keep decoding inside those steps).  Safe to call
+        multiple times and after completion (each generator replays the
+        full stream from its own cursor); the concatenation of yielded
+        tokens is bitwise `result(request_id).tokens`.  Preemption does not
+        disturb a live stream: recompute re-derives exactly the retained
+        tokens, so nothing already yielded is ever revised.  Raises
+        `events.UnknownRequestError` for an id this engine never saw."""
+        if request_id not in self._known:
+            raise events_lib.UnknownRequestError(request_id)
+        sent = 0
+        while True:
+            # finished requests stream from their result (the in-flight
+            # token log is dropped at retirement — it would duplicate the
+            # result array for the lifetime of the engine)
+            out = self.results.get(request_id)
+            log = (out.tokens if out is not None
+                   else self._token_log.get(request_id, ()))
+            while sent < len(log):
+                yield int(log[sent])
+                sent += 1
+            if out is not None:
+                return
+            self.step()
+
+    def shutdown(self) -> None:
+        """Stop accepting new work: later `submit()` calls raise
+        `events.EngineClosedError`.  Queued and running requests drain
+        normally through `step()`/`run()`/`stream()`."""
+        self._closed = True
 
     def run(self, max_steps: Optional[int] = None) -> Dict[str, RequestOutput]:
         """Drive the scheduler until every submitted request finished."""
@@ -490,7 +611,9 @@ class ContinuousEngine(_EngineBase):
     def pool_stats(self) -> Optional[Dict]:
         """Free-list pool telemetry (None for static/mixed layouts):
         per-segment {pool_pages, used, free, peak_used, outstanding} plus
-        the cumulative admission-deferral count."""
+        the cumulative admission-deferral and preemption counts (the
+        per-request view of the same costs lives in
+        `RequestOutput.timings`)."""
         return None if self._alloc is None else self._alloc.stats()
 
     def free(self, slot_id: int) -> None:
@@ -508,18 +631,34 @@ class ContinuousEngine(_EngineBase):
 
     def _retire(self, slot_id: int, reason: str) -> None:
         s = self.slots[slot_id]
+        req = s.request
         now = time.perf_counter()
-        decode_s = max(now - s.t_admit - s.prefill_s, 1e-9)
-        self.results[s.request.id] = RequestOutput(
-            id=s.request.id,
+        decode_s = max(now - s.t_admit - s.prefill_s, 1e-9) + req._decode_s_acc
+        first_admit = (req._t_first_admit if req._t_first_admit is not None
+                       else s.t_admit)
+        self.results[req.id] = RequestOutput(
+            id=req.id,
             tokens=np.asarray(s.generated, np.int32),
             finish_reason=reason,
             timings={
-                "queued_s": s.t_admit - s.t_submit,
-                "prefill_s": s.prefill_s,
+                "queued_s": first_admit - s.t_submit,
+                "prefill_s": s.prefill_s + req._prefill_s_acc,
                 "decode_s": decode_s,
                 "tok_per_s": len(s.generated) / decode_s,
+                "first_token_s": (req._t_first if req._t_first is not None
+                                  else now) - s.t_submit,
+                "preempted_s": req._preempt_s,
+                "n_preemptions": req._n_preempts,
+                "n_deferrals": req._n_deferrals,
             })
+        self._events.append(events_lib.FinishedEvent(
+            req.id, self._step_no, finish_reason=reason,
+            n_tokens=len(s.generated)))
+        # the result array now carries the tokens; keeping the log too would
+        # leak one int list per request for the engine's lifetime (stream()
+        # reads finished requests from results)
+        self._token_log.pop(req.id, None)
+        self.scheduler.on_retire(slot_id, req)
         self.free(slot_id)
 
     def _maybe_finish(self, slot_id: int) -> bool:
@@ -535,84 +674,242 @@ class ContinuousEngine(_EngineBase):
             return True
         return False
 
-    def _admit(self) -> None:
-        """Fill free slots from the queue: prefill (batch=1), sample the
-        first token, insert the compressed cache slice into the batch row.
+    def _emit_token(self, request: Request, token: int, index: int) -> None:
+        """One fresh token: event, stream log, optional push callback."""
+        ev = events_lib.TokenEvent(request.id, self._step_no,
+                                   token=int(token), index=index)
+        self._events.append(ev)
+        self._token_log[request.id].append(int(token))
+        if request.on_token is not None:
+            request.on_token(ev)
 
-        Free-list admission control: the head-of-queue request is admitted
-        only when every page pool can reserve its WORST case (prompt +
-        decode budget) on top of the running slots' outstanding
-        reservations and the configured watermark — which makes every
-        later grant (decode appends, window folds) infallible by
-        construction.  If it does not fit, admission defers (FIFO: later
-        requests do not jump the queue) or raises `PagePoolExhausted`
-        per `ServeConfig.backpressure`."""
-        for slot_id in range(self.scfg.batch_size):
-            if not self.queue:
-                return
-            if self.slots[slot_id] is not None:
-                continue
-            if self._alloc is not None:
-                t_max = self._request_total_tokens(self.queue[0])
-                p_len = self.scfg.prompt_len
-                if not self._alloc.can_admit(t_max, p_len):
-                    if self.scfg.backpressure == "error":
-                        raise alloc_lib.PagePoolExhausted(
-                            f"request {self.queue[0].id!r} needs "
-                            f"{self._alloc.worst_pages(t_max, p_len)} pages "
-                            f"worst-case; pools: {self._alloc.stats()}")
-                    # count ADMISSIONS deferred, not scheduler steps: one
-                    # tick per request per contiguous blocked span, however
-                    # many steps it waits
-                    if self.queue[0].id != self._last_deferred:
-                        self._alloc.deferrals += 1
-                        self._last_deferred = self.queue[0].id
-                    return
-            req = self.queue.popleft()
-            self._last_deferred = None
-            t0 = time.perf_counter()
-            prompt = pack_requests([req.tokens], 1, self.scfg.prompt_len)
-            logits, slice_caches = self._prefill(
-                self.params, {"tokens": jnp.asarray(prompt)})
-            if self._alloc is not None:
-                # one small host read (three pos rows) -> exact per-segment
-                # valid counts; grant the slot's prefill pages + reserve
-                # its worst case before the insert scatters payload
-                self._alloc.admit(slot_id,
-                                  alloc_lib.slice_occupancy(slice_caches),
-                                  self._request_total_tokens(req),
-                                  self.scfg.prompt_len)
-                self._sync_tables()
-            self.caches = self._insert(self.caches, slice_caches,
-                                       jnp.asarray(slot_id, jnp.int32))
+    def _pool_view(self) -> scheduler_lib.PoolView:
+        return scheduler_lib.PoolView(
+            self._alloc,
+            lambda r: (self._request_total_tokens(r), self.scfg.prompt_len))
+
+    def _running_views(self) -> List[scheduler_lib.SlotView]:
+        return [scheduler_lib.SlotView(i, s.request, len(s.generated),
+                                       self._request_budget(s.request))
+                for i, s in enumerate(self.slots) if s is not None]
+
+    def _admit(self) -> None:
+        """Execute the scheduler's admission plan (and preemptions).
+
+        Free-list admission control is unchanged from the pre-scheduler
+        engine: a request is admitted only when every page pool can reserve
+        its WORST case (prompt + decode budget) on top of the running
+        slots' outstanding reservations and the configured watermark —
+        which makes every later grant (decode appends, window folds)
+        infallible by construction.  The scheduler decides ORDER and
+        head-of-line blocking through `PoolView.fits`; a blocked plan
+        defers (counted once per request per contiguous blocked span) or
+        raises `PagePoolExhausted` per `ServeConfig.backpressure`.
+
+        With ``preemption="recompute"``, requests still waiting after the
+        plan ran may name a running victim (`Scheduler.select_victim`):
+        the victim is evicted — pages returned, tokens retained — and the
+        loop re-plans with the freed slot/pages, at most once per slot per
+        step."""
+        n_evicted = 0
+        while True:
+            free_slots = [i for i in range(self.scfg.batch_size)
+                          if self.slots[i] is None]
+            plan = self.scheduler.admit(list(self.queue), free_slots,
+                                        self._pool_view())
+            for slot_id, req in plan.admissions:
+                self.queue.remove(req)
+                self._admit_one(slot_id, req)
+            if (self.scfg.preemption == "recompute" and self.queue
+                    and n_evicted < self.scfg.batch_size):
+                victim = self.scheduler.select_victim(
+                    list(self.queue), self._running_views(), self._pool_view())
+                if victim is not None:
+                    self._preempt(victim)
+                    n_evicted += 1
+                    continue       # re-plan with the freed slot and pages
+            if plan.blocked is not None:
+                if self.scfg.backpressure == "error":
+                    t_max = self._request_total_tokens(plan.blocked)
+                    raise alloc_lib.PagePoolExhausted(
+                        f"request {plan.blocked.id!r} needs "
+                        f"{self._alloc.worst_pages(t_max, self.scfg.prompt_len)} "
+                        f"pages worst-case; pools: {self._alloc.stats()}")
+                # count ADMISSIONS deferred, not scheduler steps: one tick
+                # per request per contiguous blocked span, however many
+                # steps it waits — mirrored per-request for timings.  The
+                # span is keyed on the blocked request's id (NOT reset by
+                # unrelated admissions: under the priority scheduler a
+                # high-priority arrival can be admitted past a still-blocked
+                # request without ending its span)
+                if plan.blocked.id != self._last_deferred:
+                    self._alloc.deferrals += 1
+                    plan.blocked._n_deferrals += 1
+                    self._last_deferred = plan.blocked.id
+            else:
+                self._last_deferred = None   # nothing blocked: span over
+            return
+
+    def _admit_one(self, slot_id: int, req: Request) -> None:
+        """Prefill (batch=1), insert the compressed slice into the slot,
+        then either sample the first token (fresh request) or replay the
+        retained tokens (recompute re-admission of a preempted request)."""
+        t0 = time.perf_counter()
+        prompt = pack_requests([req.tokens], 1, self.scfg.prompt_len)
+        logits, slice_caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompt)})
+        if self._alloc is not None:
+            # one small host read (three pos rows) -> exact per-segment
+            # valid counts; grant the slot's prefill pages + reserve
+            # its worst case before the insert scatters payload
+            self._alloc.admit(slot_id,
+                              alloc_lib.slice_occupancy(slice_caches),
+                              self._request_total_tokens(req),
+                              self.scfg.prompt_len)
+            self._sync_tables()
+        self.caches = self._insert(self.caches, slice_caches,
+                                   jnp.asarray(slot_id, jnp.int32))
+        resume = getattr(req, "_resume_tokens", None)
+        if resume is None:
             first = int(np.asarray(self._sample(
                 logits,
                 jnp.asarray([req.sampling.temperature], jnp.float32),
                 jnp.asarray([req.sampling.seed], jnp.int32),
                 jnp.asarray([0], jnp.int32)))[0])
-            t1 = time.perf_counter()
-            self.slots[slot_id] = _Slot(
-                request=req, generated=[first],
-                t_submit=getattr(req, "_t_submit", t0), t_admit=t0,
-                prefill_s=t1 - t0)
-            self._maybe_finish(slot_id)
+            generated = [first]
+        else:
+            # the first token was sampled at the ORIGINAL admission; the
+            # prefill above rebuilt exactly the cache it was sampled from
+            req._preempt_s += t0 - req._t_preempt
+            generated = [int(resume[0])]
+        t1 = time.perf_counter()
+        self.slots[slot_id] = _Slot(
+            request=req, generated=generated,
+            t_submit=getattr(req, "_t_submit", t0), t_admit=t0,
+            prefill_s=t1 - t0)
+        if req._t_first_admit is None:
+            req._t_first_admit = t0
+        if resume is None:
+            req._t_first = t1
+            self._emit_token(req, generated[0], 0)
+        else:
+            del req._resume_tokens
+            self._replay(slot_id, resume)
+            # recompute's replay cost is admission cost, not decode speed
+            self.slots[slot_id].prefill_s = time.perf_counter() - t0
+        self._maybe_finish(slot_id)
 
-    def step(self) -> int:
-        """One scheduler iteration: admit queued requests into free slots,
-        decode one token for every active slot, retire finished requests,
-        and fold staging windows on each slot's own cadence (paper Alg. 3
-        per request).  Returns the number of slots that decoded (0 = idle).
+    def _replay(self, slot_id: int, tokens: Sequence[int]) -> None:
+        """Recompute a preempted slot's cache: feed its retained tokens
+        back through the SAME masked decode and fold programs, on the
+        slot's own counters (probe flags, recompress cadence, page grants).
+
+        This re-runs the exact op sequence of the uncontended run — the
+        per-slot independence the lockstep-equivalence tests establish
+        means co-resident slots cannot perturb it — so the rebuilt cache
+        state is bitwise identical and every later decode step produces
+        the same token it would have produced without the preemption.  No
+        TokenEvents fire: these tokens were already delivered when first
+        decoded.  The last retained token is NOT fed — like any slot, the
+        next regular step() feeds `generated[-1]`."""
+        s = self.slots[slot_id]
+        b = self.scfg.batch_size
+        interval = self.ccfg.recompress_interval
+        act = np.zeros(b, bool)
+        act[slot_id] = True
+        jact = jnp.asarray(act)
+        for i in range(len(tokens) - 1):
+            if self._alloc is not None:
+                self._alloc.note_append(slot_id)
+                self._sync_tables()
+            tok = np.zeros(b, np.int32)
+            tok[slot_id] = int(tokens[i])
+            probes = np.zeros(b, bool)
+            probes[slot_id] = probe_flag(s.steps, interval, self.scfg.seed)
+            _, self.caches = self._decode_masked(
+                self.params, self.caches, jnp.asarray(tok),
+                jnp.asarray(probes), jact)
+            s.steps += 1
+            s.since_rc += 1
+            s.generated.append(int(tokens[i + 1]))
+            if s.since_rc >= interval:
+                self._fold([slot_id])
+                s.since_rc = 0
+
+    def _preempt(self, slot_id: int) -> None:
+        """Evict a running slot so a more urgent request can take it:
+        return every page it holds to the free pools (its reservation is
+        dropped — `FreeListAllocator.free`), retain its generated tokens
+        host-side for recompute, and requeue it at its original arrival
+        position (FIFO within its priority class)."""
+        s = self.slots[slot_id]
+        req = s.request
+        now = time.perf_counter()
+        req._resume_tokens = list(s.generated)
+        req._t_preempt = now
+        req._n_preempts += 1
+        req._prefill_s_acc += s.prefill_s
+        req._decode_s_acc += max(now - s.t_admit - s.prefill_s, 0.0)
+        if self._alloc is not None:
+            self._alloc.preemptions += 1
+        self.free(slot_id)
+        pos = next((j for j, r in enumerate(self.queue)
+                    if getattr(r, "_seq", 0) > req._seq), len(self.queue))
+        self.queue.insert(pos, req)
+        self._events.append(events_lib.PreemptedEvent(
+            req.id, self._step_no, n_generated=len(req._resume_tokens)))
+
+    def _fold(self, due_ids: Sequence[int]) -> None:
+        """Fold the due slots' staging windows (with the allocator's
+        grant-before/shrink-after page movements around the jitted
+        program).  Shared by step() and recompute replay."""
+        b = self.scfg.batch_size
+        if self._alloc is not None:
+            # grant the hi/lo pages the fold will scatter into BEFORE
+            # the program runs (writes through NULL entries would land
+            # in the sink and lose tokens)
+            for i in due_ids:
+                self._alloc.fold_grant(int(i))
+            self._sync_tables()
+        # Per-slot programs fold each due slot at ~1/slots the FLOPs of
+        # the rows-masked program (bitwise the same result — recompression
+        # is row-independent), but every call also rewrites the cache
+        # tree once.  Use them while the FLOP savings outweigh the extra
+        # dispatches/copies; co-due majorities (lockstep-aligned cadence)
+        # batch into the single rows-masked call as before.
+        if self._recompress_slot is not None and len(due_ids) * 2 <= b:
+            for i in due_ids:
+                self.caches = self._recompress_slot(
+                    self.caches, jnp.asarray(int(i), jnp.int32))
+        else:
+            due = np.zeros(b, bool)
+            due[np.asarray(due_ids, int)] = True
+            self.caches = self._recompress_rows(self.caches, jnp.asarray(due))
+        if self._alloc is not None:
+            # the staging windows emptied: return their pages (the
+            # recompression-shrink half of the elasticity story)
+            for i in due_ids:
+                self._alloc.fold_shrink(int(i))
+            self._sync_tables()
+
+    def step(self) -> List[events_lib.Event]:
+        """One scheduler iteration: run the injected scheduler's admission
+        plan (and preemptions), decode one token for every active slot,
+        retire finished requests, and fold staging windows on each slot's
+        own cadence (paper Alg. 3 per request).  Returns the typed events
+        this iteration produced, in order (empty = idle step).
 
         Under the free-list allocator every page movement happens here,
         host-side, between the jitted programs: a staging-window page is
         granted when a slot's append cursor crosses into it, hi/lo growth
         pages are granted immediately before a fold's write-back, and the
         emptied window's pages are returned immediately after."""
+        self._events = []
         self._admit()
         b = self.scfg.batch_size
         active_ids = [i for i in range(b) if self.slots[i] is not None]
         if not active_ids:
-            return 0
+            return self._events
         interval = self.ccfg.recompress_interval
         if self._alloc is not None:
             for i in active_ids:
@@ -641,44 +938,38 @@ class ContinuousEngine(_EngineBase):
             logits, jnp.asarray(temps), jnp.asarray(seeds),
             jnp.asarray(counters)))
 
-        due = np.zeros(b, bool)
+        due = []
         for i in active_ids:
             s = self.slots[i]
             s.steps += 1
             s.since_rc += 1
             s.generated.append(int(nxt[i]))
+            self._emit_token(s.request, int(nxt[i]), len(s.generated) - 1)
             if self._maybe_finish(i):
                 continue
             if s.since_rc >= interval:
-                due[i] = True
-        n_due = int(due.sum())
-        if n_due:
-            if self._alloc is not None:
-                # grant the hi/lo pages the fold will scatter into BEFORE
-                # the program runs (writes through NULL entries would land
-                # in the sink and lose tokens)
-                for i in np.flatnonzero(due):
-                    self._alloc.fold_grant(int(i))
-                self._sync_tables()
-            # Per-slot programs fold each due slot at ~1/slots the FLOPs of
-            # the rows-masked program (bitwise the same result — recompression
-            # is row-independent), but every call also rewrites the cache
-            # tree once.  Use them while the FLOP savings outweigh the extra
-            # dispatches/copies; co-due majorities (lockstep-aligned cadence)
-            # batch into the single rows-masked call as before.
-            if self._recompress_slot is not None and n_due * 2 <= b:
-                for i in np.flatnonzero(due):
-                    self.caches = self._recompress_slot(
-                        self.caches, jnp.asarray(int(i), jnp.int32))
-            else:
-                self.caches = self._recompress_rows(self.caches, jnp.asarray(due))
-            if self._alloc is not None:
-                # the staging windows emptied: return their pages (the
-                # recompression-shrink half of the elasticity story)
-                for i in np.flatnonzero(due):
-                    self._alloc.fold_shrink(int(i))
-                self._sync_tables()
-            for i in np.flatnonzero(due):
+                due.append(i)
+        if due:
+            self._fold(due)
+            for i in due:
                 self.slots[i].since_rc = 0
         self._step_no += 1
-        return len(active_ids)
+        return self._events
+
+
+class ContinuousEngine(EngineCore):
+    """`EngineCore` with the scheduler built from `ServeConfig`: the
+    compatibility surface every existing caller keeps using.
+
+    ``ServeConfig.scheduler`` picks the policy ("fifo" reproduces the
+    pre-split engine bitwise; "priority" orders by `Request.priority`), and
+    ``ServeConfig.preemption`` arms recompute eviction.  Pass `scheduler=`
+    to inject a custom `serving.scheduler.Scheduler` implementation
+    directly (ServeConfig's string field is then ignored)."""
+
+    def __init__(self, cfg: ArchConfig, ccfg: CompressionConfig, scfg: ServeConfig,
+                 params, mesh=None,
+                 scheduler: Optional[scheduler_lib.Scheduler] = None):
+        super().__init__(cfg, ccfg, scfg, params,
+                         scheduler or scheduler_lib.make_scheduler(scfg.scheduler),
+                         mesh=mesh)

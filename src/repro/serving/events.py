@@ -1,0 +1,71 @@
+"""Typed event stream + typed API errors for the serving engine.
+
+`EngineCore.step()` returns the list of events that iteration produced, in
+order.  Three event kinds cover the request lifecycle after admission:
+
+  * ``TokenEvent``     — one freshly decoded token (``index`` is its position
+    in the request's output stream; the first token, sampled from the
+    prefill logits at admission, is index 0).  Replayed tokens during
+    preempt+recompute re-admission are NOT re-emitted: they were already
+    delivered when first decoded, and recompute reproduces them exactly.
+  * ``PreemptedEvent`` — the request's slot was evicted (its pages returned
+    to the free pools, its ``n_generated`` tokens retained host-side); the
+    request is back in the queue and will be re-admitted by recompute.
+  * ``FinishedEvent``  — the request retired; ``result(id)`` is available.
+
+Consumers: ``engine.stream(request_id)`` (a generator yielding tokens as
+they decode — it drives ``step()`` itself when its buffer runs dry),
+``Request.on_token`` (a per-request callback invoked with each TokenEvent),
+or direct iteration over ``step()``'s return value.
+
+The errors make misuse typed instead of leaking dict internals:
+``UnknownRequestError`` subclasses ``KeyError`` (old-style handlers keep
+working) and ``EngineClosedError`` signals ``submit()`` after
+``shutdown()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+class UnknownRequestError(KeyError):
+    """``poll``/``result``/``stream`` on a request id this engine has never
+    seen (never submitted, or submitted to another engine)."""
+
+    def __init__(self, request_id: str):
+        super().__init__(request_id)
+        self.request_id = request_id
+
+    def __str__(self) -> str:  # KeyError quotes its arg; keep the hint
+        return (f"unknown request id {self.request_id!r}: never submitted "
+                "to this engine")
+
+
+class EngineClosedError(RuntimeError):
+    """``submit()`` after ``shutdown()``: the engine drains what it has but
+    accepts no new work."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """Base: which request, at which scheduler step the event fired."""
+    request_id: str
+    step: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent(Event):
+    token: int
+    index: int          # position in the request's output stream (0-based)
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptedEvent(Event):
+    n_generated: int    # tokens retained host-side for recompute
+
+
+@dataclasses.dataclass(frozen=True)
+class FinishedEvent(Event):
+    finish_reason: str  # "stop" | "length"
+    n_tokens: int

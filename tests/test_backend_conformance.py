@@ -11,7 +11,11 @@ Parametrized over `MixedKVBackend` and `PagedKVBackend`, asserting:
       fresh prefill (slot churn leaves no residue);
   (c) greedy ContinuousEngine output is token-identical across backends,
       including mid-run admission into a freed slot and per-slot recompress
-      cadence (the acceptance criterion);
+      cadence (the acceptance criterion) — the engine matrix also carries a
+      SCHEDULER axis (priority scheduler with preemption armed but never
+      firing must degenerate to FIFO bitwise) and a streaming-conformance
+      check (`engine.stream()` concatenates bitwise to `result().tokens`
+      on every variant);
   (d) nbytes packed + overhead equals the sum over pytree leaves — no byte
       is double-counted or dropped by the page-granular accounting.
 """
@@ -142,6 +146,14 @@ ENGINE_VARIANTS = {
     # REUSED pages of the retired request
     "paged-freelist": dict(backend="paged", paged_kernel=False,
                            page_allocator="freelist", pool_fraction=1.0),
+    # the SCHEDULER axis: the priority scheduler (preemption armed) over the
+    # free-list layout.  Every request in the scenario has equal priority
+    # and the pool never blocks, so no preemption fires — and the policy
+    # must then degenerate to FIFO exactly: same admission order, same
+    # slots, bitwise the same tokens
+    "priority-sched": dict(backend="paged", paged_kernel=False,
+                           page_allocator="freelist", pool_fraction=1.0,
+                           scheduler="priority", preemption="recompute"),
 }
 
 
@@ -150,8 +162,13 @@ def engine_outputs():
     """One continuous-batching scenario — mid-run admission into a freed
     slot, per-slot recompress cadence (max_new > interval) — run through
     every decode configuration: mixed, paged with the gather+dense decode
-    path, paged with the page-walking Pallas kernel (interpret mode), and
-    paged with free-list page allocation."""
+    path, paged with the page-walking Pallas kernel (interpret mode), paged
+    with free-list page allocation, and the priority scheduler over the
+    free-list layout (the scheduler axis).  Completion is driven through
+    ``engine.stream()`` generators (which call ``step()`` themselves when
+    their buffer runs dry), so the streaming surface is exercised live —
+    including for the mid-run-admitted request — and its per-request
+    concatenation is captured for the streaming-conformance test."""
     rng = np.random.default_rng(0)
     cfg = configs.get_arch("yi-6b", smoke=True)
     ccfg = _ccfg()
@@ -161,6 +178,7 @@ def engine_outputs():
 
     outs = {}
     fills = {}
+    streams = {}
     for name, kw in ENGINE_VARIANTS.items():
         scfg = ServeConfig(batch_size=2, prompt_len=48, max_new_tokens=12,
                            page_size=8, **kw)
@@ -176,9 +194,12 @@ def engine_outputs():
         el = jax.tree_util.tree_leaves(
             eng.caches["groups"], is_leaf=backend_lib.is_kv_cache)[0]
         fills[name] = np.asarray(el.win_fill)
-        res = eng.run()
+        # drain via live streams: each generator yields what is already
+        # decoded, then drives step() until its request finishes
+        streams[name] = {r: list(eng.stream(r)) for r in (r0, r1, r2)}
+        res = eng.run()  # no-op mop-up: the streams drained everything
         outs[name] = {r: res[r] for r in (r0, r1, r2)}
-    return outs, fills
+    return outs, fills, streams
 
 
 def test_continuous_engine_token_identical_across_backends(engine_outputs):
@@ -186,7 +207,7 @@ def test_continuous_engine_token_identical_across_backends(engine_outputs):
     and paged layouts — including a request admitted mid-run into a freed
     slot, and windows folding on per-slot cadence (max_new > interval, so
     both the early and the late-admitted slot cross a recompression)."""
-    outs, fills = engine_outputs
+    outs, fills, _ = engine_outputs
     np.testing.assert_array_equal(fills["mixed"], fills["paged"])
     for (ra, a), (rb, b) in zip(outs["mixed"].items(), outs["paged"].items()):
         np.testing.assert_array_equal(a.tokens, b.tokens)
@@ -204,7 +225,7 @@ def test_continuous_engine_token_identical_with_freelist(engine_outputs):
     and valid tokens always occupy a contiguous page prefix
     (kvcache._valid_first), so count-driven whole-page grants cover
     exactly the live payload."""
-    outs, fills = engine_outputs
+    outs, fills, _ = engine_outputs
     for other in ("mixed", "paged"):
         np.testing.assert_array_equal(fills[other], fills["paged-freelist"])
         for (ra, a), (rb, b) in zip(outs[other].items(),
@@ -221,13 +242,44 @@ def test_continuous_engine_token_identical_with_paged_kernel(engine_outputs):
     saliency state — and with it every recompression top-k split — stays
     identical), and the kernel's attention output agrees with the dense
     path to float tolerance (test_paged_qattn.py)."""
-    outs, fills = engine_outputs
+    outs, fills, _ = engine_outputs
     for other in ("mixed", "paged"):
         np.testing.assert_array_equal(fills[other], fills["paged-kernel"])
         for (ra, a), (rb, b) in zip(outs[other].items(),
                                     outs["paged-kernel"].items()):
             np.testing.assert_array_equal(a.tokens, b.tokens)
             assert a.finish_reason == b.finish_reason
+
+
+def test_continuous_engine_token_identical_with_priority_scheduler(engine_outputs):
+    """The scheduler axis of the conformance matrix: with every request at
+    equal priority and the pool never blocking, the priority scheduler
+    (preemption armed but never firing) must degenerate to FIFO exactly —
+    same admission order into the same slots, bitwise the same tokens and
+    cadence state as every other variant.  Scheduling policy is host-side
+    ordering only; it can never touch the numerics."""
+    outs, fills, _ = engine_outputs
+    for other in ("mixed", "paged-freelist"):
+        np.testing.assert_array_equal(fills[other], fills["priority-sched"])
+        for (ra, a), (rb, b) in zip(outs[other].items(),
+                                    outs["priority-sched"].items()):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert a.finish_reason == b.finish_reason
+    # the run was preemption-free: nothing in the scenario outranks anything
+    for out in outs["priority-sched"].values():
+        assert out.timings["n_preemptions"] == 0
+
+
+def test_streaming_concat_matches_result(engine_outputs):
+    """Streaming conformance: for EVERY engine variant in the matrix, the
+    tokens yielded by `engine.stream(rid)` — live generators that drove the
+    engine to completion themselves, including the mid-run-admitted request
+    — concatenate bitwise to `result(rid).tokens`.  (The forced-preemption
+    streaming case lives in tests/test_scheduling.py.)"""
+    outs, _, streams = engine_outputs
+    for name in ENGINE_VARIANTS:
+        for rid, out in outs[name].items():
+            assert streams[name][rid] == out.tokens.tolist(), (name, rid)
 
 
 def test_mla_decode_token_identical_across_backends(rng):

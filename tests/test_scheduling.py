@@ -1,0 +1,278 @@
+"""Scheduler/streaming/preemption suite for the event-driven serving API.
+
+Covers the engine-core/scheduler split (serving/scheduler.py), the typed
+event stream (serving/events.py), and vLLM-style preempt+recompute:
+
+  * typed API errors: `UnknownRequestError` from poll/result/stream,
+    `EngineClosedError` from submit-after-shutdown (graceful drain);
+  * priority admission ordering without preemption;
+  * the acceptance scenario: with long-budget requests monopolizing every
+    slot, short high-priority requests reach their first token in bounded
+    steps under the priority scheduler with preemption, the preempted
+    request's final tokens are BITWISE an uncontended run's, and
+    `FreeListAllocator.check_invariants` holds after every step;
+  * streaming through a forced preemption: nothing already yielded is ever
+    revised, and the concatenation matches `result().tokens`;
+  * per-request timings carry the first-token/preemption/deferral
+    observability the pool-level counters only report in aggregate.
+
+Unit-level scheduler tests at the bottom run without an engine (no jit).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.policy import CompressionConfig
+from repro.models import registry
+from repro.serving import (ContinuousEngine, EngineClosedError, FinishedEvent,
+                           PreemptedEvent, Request, SamplingParams,
+                           ServeConfig, TokenEvent, UnknownRequestError)
+from repro.serving.scheduler import (FIFOScheduler, PoolView,
+                                     PriorityScheduler, SlotView,
+                                     make_scheduler)
+
+
+def _setup(**scfg_kw):
+    cfg = configs.get_arch("yi-6b", smoke=True)
+    ccfg = dataclasses.replace(CompressionConfig.zipcache(),
+                               fp_window=8, recompress_interval=8)
+    params = registry.materialize_params(cfg, 0)
+    scfg = ServeConfig(**{**dict(batch_size=2, prompt_len=32,
+                                 max_new_tokens=20), **scfg_kw})
+    return cfg, ccfg, scfg, params
+
+
+# ---------------------------------------------------------------------------
+# typed API errors (satellite: no KeyError leaks, clean shutdown)
+# ---------------------------------------------------------------------------
+
+def test_unknown_request_id_raises_typed_error(rng):
+    cfg, ccfg, scfg, params = _setup(max_new_tokens=4)
+    eng = ContinuousEngine(cfg, ccfg, scfg, params)
+    with pytest.raises(UnknownRequestError):
+        eng.poll("never-submitted")
+    with pytest.raises(UnknownRequestError):
+        eng.result("never-submitted")
+    with pytest.raises(UnknownRequestError):
+        next(eng.stream("never-submitted"))
+    # the typed error still satisfies old-style KeyError handlers
+    assert issubclass(UnknownRequestError, KeyError)
+
+    prompt = rng.integers(2, cfg.vocab, size=(16,)).astype(np.int32)
+    rid = eng.submit(Request(tokens=prompt, max_new_tokens=2))
+    assert eng.poll(rid) == "queued"
+    eng.shutdown()
+    with pytest.raises(EngineClosedError):
+        eng.submit(Request(tokens=prompt))
+    # shutdown is a drain, not an abort: the queued request still finishes
+    res = eng.run()
+    assert res[rid].finish_reason == "length" and len(res[rid].tokens) == 2
+
+
+# ---------------------------------------------------------------------------
+# priority admission order (no preemption)
+# ---------------------------------------------------------------------------
+
+def test_priority_scheduler_admits_most_urgent_first(rng):
+    """Three requests queued before any step over ONE slot: the priority
+    scheduler must run them in priority order (2, 1, 0), not submission
+    order, with FIFO preserved inside a class."""
+    cfg, ccfg, scfg, params = _setup(batch_size=1, max_new_tokens=3,
+                                     scheduler="priority")
+    eng = ContinuousEngine(cfg, ccfg, scfg, params)
+    prompts = [rng.integers(2, cfg.vocab, size=(16,)).astype(np.int32)
+               for _ in range(3)]
+    r_low = eng.submit(Request(tokens=prompts[0], max_new_tokens=2, priority=0))
+    r_high = eng.submit(Request(tokens=prompts[1], max_new_tokens=2, priority=2))
+    r_mid = eng.submit(Request(tokens=prompts[2], max_new_tokens=2, priority=1))
+    finish_order = []
+    while eng.pending:
+        for ev in eng.step():
+            if isinstance(ev, FinishedEvent):
+                finish_order.append(ev.request_id)
+    assert finish_order == [r_high, r_mid, r_low]
+
+
+# ---------------------------------------------------------------------------
+# preempt+recompute: the acceptance scenario
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def preemption_scenario():
+    """Two long-budget requests monopolize both slots of a free-list paged
+    engine; a burst of short high-priority requests arrives mid-decode.
+    Under `PriorityScheduler` + `preemption="recompute"` the shorts must
+    preempt, run, and finish while the longs are recomputed — with the
+    allocator invariants checked after every step.  An uncontended run of
+    the same longs (identical config, no shorts) is the bitwise reference.
+    One of the longs samples at temperature > 0: preemption determinism
+    must cover seeded sampling too (keys derive from (seed, counter), both
+    replay-invariant)."""
+    cfg, ccfg, scfg, params = _setup(
+        backend="paged", page_size=8, page_allocator="freelist",
+        pool_fraction=1.0, scheduler="priority", preemption="recompute")
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab, size=(32,)).astype(np.int32)
+               for _ in range(4)]
+    longs = [Request(tokens=prompts[0], max_new_tokens=20),
+             Request(tokens=prompts[1], max_new_tokens=20,
+                     sampling=SamplingParams(temperature=0.8, seed=3))]
+
+    ref = ContinuousEngine(cfg, ccfg, scfg, params)
+    ref_ids = [ref.submit(Request(tokens=r.tokens, max_new_tokens=20,
+                                  sampling=r.sampling)) for r in longs]
+    ref.run()
+    ref_tokens = [ref.result(r).tokens for r in ref_ids]
+
+    eng = ContinuousEngine(cfg, ccfg, scfg, params)
+    long_ids = [eng.submit(r) for r in longs]
+    events = []
+    for _ in range(5):
+        events += eng.step()
+        eng._alloc.check_invariants()
+    # a live stream opened BEFORE the preemption storm: tokens it has
+    # already yielded must never be revised by recompute
+    early_stream = eng.stream(long_ids[0])
+    early = [next(early_stream) for _ in range(3)]
+    submit_step = eng._step_no
+    short_ids = [eng.submit(Request(tokens=prompts[2 + i], max_new_tokens=3,
+                                    priority=2)) for i in range(2)]
+    first_token_step = {}
+    while eng.pending:
+        for ev in eng.step():
+            events.append(ev)
+            if (isinstance(ev, TokenEvent) and ev.request_id in short_ids
+                    and ev.index == 0):
+                first_token_step[ev.request_id] = ev.step
+        eng._alloc.check_invariants()
+    return dict(eng=eng, events=events, long_ids=long_ids, short_ids=short_ids,
+                ref_tokens=ref_tokens, first_token_step=first_token_step,
+                submit_step=submit_step, early=early,
+                early_stream=early_stream)
+
+
+def test_preemption_bounds_short_request_first_token(preemption_scenario):
+    """The head-of-line acceptance criterion: with every slot held by a
+    20-token-budget request, a priority-2 short must reach its FIRST token
+    within 2 scheduler steps of submission (preempt -> admit -> sample at
+    admission), not after a long's remaining ~16 steps as under FIFO."""
+    sc = preemption_scenario
+    for rid in sc["short_ids"]:
+        waited = sc["first_token_step"][rid] - sc["submit_step"]
+        assert waited <= 2, (rid, waited)
+        out = sc["eng"].result(rid)
+        assert out.finish_reason == "length" and len(out.tokens) == 3
+
+
+def test_preempted_requests_finish_with_uncontended_tokens(preemption_scenario):
+    """Preempt+recompute must be invisible in the output: each long's final
+    tokens are bitwise the uncontended run's (greedy AND temperature
+    sampling), only later in time.  Replay re-runs the exact op sequence —
+    prompt prefill + retained-token decode on the slot's own counters — so
+    the rebuilt cache state is bitwise the uncontended one."""
+    sc = preemption_scenario
+    preempted = {e.request_id for e in sc["events"]
+                 if isinstance(e, PreemptedEvent)}
+    assert preempted, "scenario must force at least one preemption"
+    for rid, ref in zip(sc["long_ids"], sc["ref_tokens"]):
+        out = sc["eng"].result(rid)
+        np.testing.assert_array_equal(out.tokens, ref)
+        assert out.finish_reason == "length"
+        assert out.timings["n_preemptions"] == (1 if rid in preempted else 0)
+
+
+def test_preemption_counters_and_timings(preemption_scenario):
+    """pool_stats() aggregates match the events, and the per-request view
+    (satellite: observability without engine internals) is carried into
+    RequestOutput.timings: first-token latency, evicted wall time,
+    preemption/deferral counts."""
+    sc = preemption_scenario
+    st = sc["eng"].pool_stats()
+    n_preempts = sum(isinstance(e, PreemptedEvent) for e in sc["events"])
+    assert st["preemptions"] == n_preempts > 0
+    assert st["deferrals"] == sum(
+        sc["eng"].result(r).timings["n_deferrals"]
+        for r in sc["long_ids"] + sc["short_ids"])
+    for rid in sc["long_ids"] + sc["short_ids"]:
+        t = sc["eng"].result(rid).timings
+        assert 0 < t["first_token_s"] and t["tok_per_s"] > 0
+        if t["n_preemptions"]:
+            assert t["preempted_s"] > 0
+    # every page came home: preemption returns the victim's pages in full
+    for seg in ("hi", "lo", "win"):
+        assert st[seg]["used"] == 0 and st[seg]["free"] == st[seg]["pool_pages"]
+
+
+def test_stream_through_forced_preemption(preemption_scenario):
+    """Streaming conformance under preemption: a generator that yielded
+    tokens BEFORE its request was evicted continues seamlessly after
+    recompute — the concatenation is bitwise result().tokens, nothing
+    already yielded is revised."""
+    sc = preemption_scenario
+    out = sc["eng"].result(sc["long_ids"][0])
+    assert sc["early"] == out.tokens[:3].tolist()
+    rest = list(sc["early_stream"])
+    assert sc["early"] + rest == out.tokens.tolist()
+    # post-hoc streams replay the full log for every participant
+    for rid in sc["long_ids"] + sc["short_ids"]:
+        assert list(sc["eng"].stream(rid)) == \
+            sc["eng"].result(rid).tokens.tolist()
+
+
+# ---------------------------------------------------------------------------
+# scheduler unit tests (no engine, no jit)
+# ---------------------------------------------------------------------------
+
+def _req(seq, priority=0, rid=None):
+    r = Request(tokens=np.zeros(4, np.int32), id=rid or f"r{seq}",
+                priority=priority)
+    r._seq = seq
+    return r
+
+
+def _pool():
+    return PoolView(None, lambda r: (0, 0))   # no allocator: everything fits
+
+
+def test_fifo_scheduler_plans_in_submission_order():
+    q = [_req(0), _req(1), _req(2)]
+    plan = FIFOScheduler().admit(q, free_slots=[1, 3], pool=_pool())
+    assert [(s, r.id) for s, r in plan.admissions] == [(1, "r0"), (3, "r1")]
+    assert plan.blocked is None
+    assert FIFOScheduler().select_victim(q, [SlotView(0, _req(9), 1, 20)],
+                                         _pool()) is None
+
+
+def test_priority_scheduler_orders_and_selects_victim():
+    sched = make_scheduler("priority")
+    q = [_req(0, priority=0), _req(1, priority=2), _req(2, priority=2),
+         _req(3, priority=1)]
+    plan = sched.admit(q, free_slots=[0, 1, 2], pool=_pool())
+    # priority desc, FIFO within a class; the slot ids fill in ascending order
+    assert [(s, r.id) for s, r in plan.admissions] == \
+        [(0, "r1"), (1, "r2"), (2, "r3")]
+    # victim: strictly lower priority than the most urgent waiter; among
+    # candidates the largest remaining budget, then the lowest slot id
+    # (budgets are engine-resolved — a request that left max_new_tokens
+    # unset arrives here with the ServeConfig default filled in)
+    running = [
+        SlotView(0, Request(tokens=np.zeros(4, np.int32), id="a", priority=1),
+                 n_generated=5, budget=30),
+        SlotView(1, Request(tokens=np.zeros(4, np.int32), id="b", priority=0),
+                 n_generated=2, budget=30),
+        SlotView(2, Request(tokens=np.zeros(4, np.int32), id="c", priority=0),
+                 n_generated=20, budget=30),
+    ]
+    assert sched.select_victim([_req(9, priority=2)], running, _pool()) == 1
+    # equal priorities never preempt: no thrash between peers
+    assert sched.select_victim([_req(9, priority=0)], running, _pool()) is None
+
+
+def test_make_scheduler_rejects_unknown_policy():
+    with pytest.raises(ValueError):
+        make_scheduler("round-robin")
+    assert isinstance(make_scheduler("fifo"), FIFOScheduler)
+    assert isinstance(make_scheduler("priority"), PriorityScheduler)
