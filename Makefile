@@ -3,10 +3,23 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-conformance test-kernels test-alloc \
-    test-scheduling test-ci docs-check dev serve bench
+    test-scheduling test-retrace test-ci lint docs-check dev serve bench
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+# repo-specific invariant lint (tools/analyze): retrace safety, host-sync
+# lint over the decode hot loop, allocator/scheduler host purity, kernel
+# triple completeness, conformance-axis coverage — plus the docs checks.
+# Static only; the runtime zero-retrace proof is `make test-retrace`.
+lint:
+	$(PYTHON) -m tools.analyze
+	$(PYTHON) tools/check_docs.py
+
+# runtime retrace guard: a live engine must compile ZERO new XLA programs
+# at steady state (admission/fold/deferral/preempt+recompute, both backends)
+test-retrace:
+	$(PYTHON) -m pytest -x -q tests/test_retrace.py tests/test_analyze.py
 
 # skip the slow integration files while iterating
 test-fast:

@@ -99,14 +99,14 @@ def slice_occupancy(caches) -> Occupancy:
     One small host transfer (three position rows) per admission.
     """
     el = kv_elements(caches)[0]
-    hi_pos = np.asarray(el.hi.pos)
-    lo_pos = np.asarray(el.lo.pos)
-    fill = np.asarray(el.win_fill)
+    hi_pos = np.asarray(el.hi.pos)   # sync: ok(admission-time read of one pos row)
+    lo_pos = np.asarray(el.lo.pos)   # sync: ok(admission-time read of one pos row)
+    fill = np.asarray(el.win_fill)   # sync: ok(admission-time read of one fill row)
     # leaves may carry a leading group axis: (G, 1, S) -> row 0 of group 0
-    return Occupancy(
-        hi=int((hi_pos.reshape(-1, hi_pos.shape[-1])[0] >= 0).sum()),
-        lo=int((lo_pos.reshape(-1, lo_pos.shape[-1])[0] >= 0).sum()),
-        win=int(fill.reshape(-1)[0]))
+    n_hi = (hi_pos.reshape(-1, hi_pos.shape[-1])[0] >= 0).sum()
+    n_lo = (lo_pos.reshape(-1, lo_pos.shape[-1])[0] >= 0).sum()
+    n_win = fill.reshape(-1)[0]
+    return Occupancy(hi=int(n_hi), lo=int(n_lo), win=int(n_win))
 
 
 def kv_elements(caches):

@@ -408,11 +408,18 @@ def with_tables(cache: PagedKVCache, t_hi: np.ndarray, t_lo: np.ndarray,
     """Install allocator-produced (slots, npp) page tables onto a cache
     element, broadcasting over a stacked leading group axis if present.
     Values-only: shapes and dtypes are unchanged, so jitted programs that
-    close over this cache's avals never retrace."""
-    def put(cur: jnp.ndarray, new: np.ndarray) -> jnp.ndarray:
+    close over this cache's avals never retrace.
+
+    Accepts host OR device tables.  Callers installing onto many elements
+    should upload each table once (`jnp.asarray`) and pass the device
+    array — the broadcast then happens device-side instead of shipping a
+    full broadcast-shaped host copy per element per table."""
+    def put(cur: jnp.ndarray, new) -> jnp.ndarray:
         if cur.shape[-1] == 0:
             return cur
-        return jnp.asarray(np.broadcast_to(new.astype(np.int32), cur.shape))
+        return jnp.broadcast_to(
+            jnp.asarray(new, jnp.int32),  # sync: ok(no-op for device tables; one small upload when handed a host table)
+            cur.shape)
 
     return dataclasses.replace(
         cache,

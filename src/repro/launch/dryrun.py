@@ -97,7 +97,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, policy: str = "zipcache",
     elif configs.get_shape(shape).kind == "decode":
         donate = (1,)
     with mesh:
-        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,  # retrace: ok(dryrun compiles ONCE per invocation by design — AOT lower/compile to measure the compile itself)
                          donate_argnums=donate)
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0

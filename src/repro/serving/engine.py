@@ -251,6 +251,30 @@ def _sample_tokens(logits: jnp.ndarray, temps: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Per-step input staging (one host->device transfer per decode step)
+# ---------------------------------------------------------------------------
+
+# rows of the (6, b) int32 staging matrix EngineCore builds host-side each
+# step; row TEMP carries the float32 temperatures bitcast to int32 so the
+# whole step's scalar inputs ride ONE transfer (tools/analyze hostsync
+# lint: per-slot int()/jnp.asarray churn serializes the dispatch pipeline)
+_ROW_TOK, _ROW_PROBE, _ROW_ACT, _ROW_TEMP, _ROW_SEED, _ROW_CTR = range(6)
+
+
+def _unpack_step_inputs(packed: jnp.ndarray):
+    """(6, b) int32 staging matrix -> (tok, probes, active, temps, seeds,
+    counters) with the exact dtypes the decode/sample programs expect.
+    Runs jitted on device; the bitcast restores temperatures bit-exactly,
+    so staging is invisible to the numerics (conformance stays bitwise)."""
+    return (packed[_ROW_TOK],
+            packed[_ROW_PROBE].astype(jnp.bool_),
+            packed[_ROW_ACT].astype(jnp.bool_),
+            jax.lax.bitcast_convert_type(packed[_ROW_TEMP], jnp.float32),
+            packed[_ROW_SEED],
+            packed[_ROW_CTR])
+
+
+# ---------------------------------------------------------------------------
 # Shared jitted-program bundle
 # ---------------------------------------------------------------------------
 
@@ -403,6 +427,7 @@ class EngineCore(_EngineBase):
         super().__init__(cfg, ccfg, scfg, params, mesh)
         self.caches = registry.init_caches(cfg, self.ctx, scfg.batch_size)
         self._free_slot = jax.jit(registry.free_caches)
+        self._unstage = jax.jit(_unpack_step_inputs)
         self.scheduler = scheduler
         self.slots: List[Optional[_Slot]] = [None] * scfg.batch_size
         self.queue: Deque[Request] = collections.deque()
@@ -599,12 +624,16 @@ class EngineCore(_EngineBase):
         from repro.core import paged as paged_lib
 
         t = self._alloc.tables()
+        # upload each (slots, npp) table ONCE and share the device array
+        # across all cache elements — with_tables broadcasts device-side
+        jt = {k: jnp.asarray(v, jnp.int32)  # sync: ok(three small table uploads per allocator mutation, shared across elements)
+              for k, v in t.items()}
         is_paged = lambda x: isinstance(x, paged_lib.PagedKVCache)
         leaves, treedef = jax.tree_util.tree_flatten(
             self.caches, is_leaf=is_paged)
         self.caches = jax.tree_util.tree_unflatten(
             treedef,
-            [paged_lib.with_tables(el, t["hi"], t["lo"], t["win"])
+            [paged_lib.with_tables(el, jt["hi"], jt["lo"], jt["win"])
              if is_paged(el) else el for el in leaves])
         self._alloc.dirty = False
 
@@ -625,8 +654,9 @@ class EngineCore(_EngineBase):
         if self._alloc is not None:
             self._alloc.free(slot_id)
             self._sync_tables()
-        self.caches = self._free_slot(self.caches,
-                                      jnp.asarray(slot_id, jnp.int32))
+        self.caches = self._free_slot(
+            self.caches,
+            jnp.asarray(slot_id, jnp.int32))  # sync: ok(one scalar upload per retire/preempt event, not per step)
         self.slots[slot_id] = None
 
     def _retire(self, slot_id: int, reason: str) -> None:
@@ -638,7 +668,7 @@ class EngineCore(_EngineBase):
                        else s.t_admit)
         self.results[req.id] = RequestOutput(
             id=req.id,
-            tokens=np.asarray(s.generated, np.int32),
+            tokens=np.asarray(s.generated, np.int32),  # sync: ok(s.generated is a host-side python list)
             finish_reason=reason,
             timings={
                 "queued_s": first_admit - s.t_submit,
@@ -757,7 +787,8 @@ class EngineCore(_EngineBase):
         t0 = time.perf_counter()
         prompt = pack_requests([req.tokens], 1, self.scfg.prompt_len)
         logits, slice_caches = self._prefill(
-            self.params, {"tokens": jnp.asarray(prompt)})
+            self.params,
+            {"tokens": jnp.asarray(prompt)})  # sync: ok(the prompt upload itself — once per admission, not per step)
         if self._alloc is not None:
             # one small host read (three pos rows) -> exact per-segment
             # valid counts; grant the slot's prefill pages + reserve
@@ -767,15 +798,16 @@ class EngineCore(_EngineBase):
                               self._request_total_tokens(req),
                               self.scfg.prompt_len)
             self._sync_tables()
-        self.caches = self._insert(self.caches, slice_caches,
-                                   jnp.asarray(slot_id, jnp.int32))
+        self.caches = self._insert(
+            self.caches, slice_caches,
+            jnp.asarray(slot_id, jnp.int32))  # sync: ok(one scalar upload per admission event)
         resume = getattr(req, "_resume_tokens", None)
         if resume is None:
-            first = int(np.asarray(self._sample(
-                logits,
-                jnp.asarray([req.sampling.temperature], jnp.float32),
-                jnp.asarray([req.sampling.seed], jnp.int32),
-                jnp.asarray([0], jnp.int32)))[0])
+            temp = jnp.asarray([req.sampling.temperature], jnp.float32)  # sync: ok(admission-time one-shot sample input)
+            seed = jnp.asarray([req.sampling.seed], jnp.int32)  # sync: ok(admission-time one-shot sample input)
+            ctr = jnp.asarray([0], jnp.int32)  # sync: ok(admission-time one-shot sample input)
+            first = int(np.asarray(  # sync: ok(admission-time readback of the first sampled token)
+                self._sample(logits, temp, seed, ctr))[0])
             generated = [first]
         else:
             # the first token was sampled at the ORIGINAL admission; the
@@ -815,20 +847,21 @@ class EngineCore(_EngineBase):
         s = self.slots[slot_id]
         b = self.scfg.batch_size
         interval = self.ccfg.recompress_interval
-        act = np.zeros(b, bool)
-        act[slot_id] = True
-        jact = jnp.asarray(act)
+        # same staging-matrix scheme as step(): one transfer per replayed
+        # step (sampling rows stay zero — replay never samples)
+        stage = np.zeros((6, b), np.int32)
+        stage[_ROW_ACT, slot_id] = 1
         for i in range(len(tokens) - 1):
             if self._alloc is not None:
                 self._alloc.note_append(slot_id)
                 self._sync_tables()
-            tok = np.zeros(b, np.int32)
-            tok[slot_id] = int(tokens[i])
-            probes = np.zeros(b, bool)
-            probes[slot_id] = probe_flag(s.steps, interval, self.scfg.seed)
+            stage[_ROW_TOK, slot_id] = int(tokens[i])
+            stage[_ROW_PROBE, slot_id] = probe_flag(
+                s.steps, interval, self.scfg.seed)
+            tok, probes, act, _, _, _ = self._unstage(
+                jnp.asarray(stage))  # sync: ok(one batched staging transfer per replayed step)
             _, self.caches = self._decode_masked(
-                self.params, self.caches, jnp.asarray(tok),
-                jnp.asarray(probes), jact)
+                self.params, self.caches, tok, probes, act)
             s.steps += 1
             s.since_rc += 1
             s.generated.append(int(tokens[i + 1]))
@@ -880,11 +913,14 @@ class EngineCore(_EngineBase):
         if self._recompress_slot is not None and len(due_ids) * 2 <= b:
             for i in due_ids:
                 self.caches = self._recompress_slot(
-                    self.caches, jnp.asarray(int(i), jnp.int32))
+                    self.caches,
+                    jnp.asarray(int(i), jnp.int32))  # sync: ok(one scalar upload per due slot per fold event, cadence 1/interval steps)
         else:
             due = np.zeros(b, bool)
             due[np.asarray(due_ids, int)] = True
-            self.caches = self._recompress_rows(self.caches, jnp.asarray(due))
+            self.caches = self._recompress_rows(
+                self.caches,
+                jnp.asarray(due))  # sync: ok(one mask upload per fold event, cadence 1/interval steps)
         if self._alloc is not None:
             # the staging windows emptied: return their pages (the
             # recompression-shrink half of the elasticity story)
@@ -916,27 +952,27 @@ class EngineCore(_EngineBase):
                 self._alloc.note_append(i)
             self._sync_tables()
 
-        tok = np.zeros(b, np.int32)
-        probes = np.zeros(b, bool)
-        act = np.zeros(b, bool)
-        temps = np.zeros(b, np.float32)
-        seeds = np.zeros(b, np.int32)
-        counters = np.zeros(b, np.int32)
+        # all per-slot scalars ride ONE (6, b) staging matrix: a single
+        # host->device transfer per step instead of six (the hostsync lint
+        # flags per-scalar churn; values/dtypes are bit-identical after the
+        # jitted unpack, so conformance stays bitwise)
+        stage = np.zeros((6, b), np.int32)
+        stage_temps = stage[_ROW_TEMP].view(np.float32)
         for i in active_ids:
             s = self.slots[i]
-            tok[i] = s.generated[-1]
-            probes[i] = probe_flag(s.steps, interval, self.scfg.seed)
-            act[i] = True
-            temps[i] = s.request.sampling.temperature
-            seeds[i] = s.request.sampling.seed
-            counters[i] = len(s.generated)
+            stage[_ROW_TOK, i] = s.generated[-1]
+            stage[_ROW_PROBE, i] = probe_flag(s.steps, interval, self.scfg.seed)
+            stage[_ROW_ACT, i] = 1
+            stage_temps[i] = s.request.sampling.temperature
+            stage[_ROW_SEED, i] = s.request.sampling.seed
+            stage[_ROW_CTR, i] = len(s.generated)
+        tok, probes, act, temps, seeds, counters = self._unstage(
+            jnp.asarray(stage))  # sync: ok(the single batched host->device staging transfer per step)
 
         logits, self.caches = self._decode_masked(
-            self.params, self.caches, jnp.asarray(tok),
-            jnp.asarray(probes), jnp.asarray(act))
-        nxt = np.asarray(self._sample(
-            logits, jnp.asarray(temps), jnp.asarray(seeds),
-            jnp.asarray(counters)))
+            self.params, self.caches, tok, probes, act)
+        nxt = np.asarray(  # sync: ok(the single batched device->host token read per step)
+            self._sample(logits, temps, seeds, counters))
 
         due = []
         for i in active_ids:

@@ -7,6 +7,10 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+# fixture trees for the tools/analyze self-tests contain deliberately-bad
+# source (including a fake test_backend_conformance.py) — never collect them
+collect_ignore = ["fixtures"]
+
 
 @pytest.fixture()
 def rng():

@@ -1,0 +1,8 @@
+"""Deliberately-impure allocator: jax compute in a host-pure module."""
+
+import jax
+import jax.numpy as jnp
+
+
+def occupancy(x):
+    return jnp.sum(x).tolist()

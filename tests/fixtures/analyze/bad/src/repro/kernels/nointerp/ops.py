@@ -1,0 +1,2 @@
+def dispatch(x):
+    return x

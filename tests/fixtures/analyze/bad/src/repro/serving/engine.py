@@ -1,0 +1,34 @@
+"""Deliberately-bad engine: seeds one violation per hostsync/retrace rule.
+
+Every pattern here is a real failure mode the suite must catch — if a
+checker stops flagging its line, tests/test_analyze.py fails.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import alloc as alloc_lib
+
+
+@jax.jit
+def masked(x, flag):
+    if flag:                       # branch on a traced argument
+        return x
+    return x * 2
+
+
+class EngineCore:
+    def step(self):
+        prog = jax.jit(lambda c: c + 1)       # jit built per step
+        tok = int(self._sample())             # implicit d->h sync
+        arr = jnp.asarray([tok])              # per-scalar h->d churn
+        self._push(arr)                       # self.method edge
+        alloc_lib.occupancy(arr)              # cross-module edge
+        return prog
+
+    def _push(self, a):
+        a.item()                              # explicit d->h sync
+
+    def stream(self):
+        yield self.step()

@@ -1,0 +1,4 @@
+# fixture stand-in: covers the backend axis but NOT widget_mode
+ENGINE_VARIANTS = {
+    "mixed": dict(backend="mixed"),
+}

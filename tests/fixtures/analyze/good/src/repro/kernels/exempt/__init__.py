@@ -1,0 +1,1 @@
+# kernel: ok(oracle and dispatch live in the sibling goodkern package)

@@ -1,0 +1,3 @@
+def dispatch(x, interpret=None):
+    interpret = True if interpret is None else interpret
+    return x

@@ -1,0 +1,11 @@
+import argparse
+
+from repro.serving import ServeConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="mixed")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    return ServeConfig(backend=args.backend, seed=args.seed)

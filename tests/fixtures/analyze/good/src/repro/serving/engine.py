@@ -1,0 +1,36 @@
+"""Known-good engine: every pattern here must pass the suite clean.
+
+Covers the allowed idioms: jit built in __init__, module-scope
+`@partial(jax.jit, static_argnames=...)` (the decorator-attribution
+regression), a branch on a STATIC argument, and a suppressed staging
+transfer with a written reason.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import alloc as alloc_lib
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def run(x, interpret=False):
+    if interpret:                  # branching on a static is the idiom
+        return x
+    return x * 2
+
+
+class EngineCore:
+    def __init__(self):
+        self._decode = jax.jit(lambda c: c + 1)
+
+    def step(self):
+        stage = np.zeros((6, 2), np.int32)
+        occ = alloc_lib.occupancy(4)
+        dev = jnp.asarray(stage)  # sync: ok(single batched staging transfer per step)
+        return self._decode(dev), occ
+
+    def stream(self):
+        yield self.step()

@@ -1,0 +1,5 @@
+"""Known-good scheduler: pure host-side policy."""
+
+
+def plan(slots):
+    return [i for i, s in enumerate(slots) if s is None]

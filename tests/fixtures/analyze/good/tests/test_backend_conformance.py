@@ -1,0 +1,4 @@
+# fixture stand-in: covers the backend axis (seed is globally exempt)
+ENGINE_VARIANTS = {
+    "mixed": dict(backend="mixed"),
+}

@@ -1,0 +1,254 @@
+"""Tests for the invariant lint suite itself (`tools/analyze`).
+
+Two fixture trees under tests/fixtures/analyze/ mirror the real layout:
+
+  * ``bad/``  — one seeded violation per checker rule (jit-in-step, traced
+    branch, every hostsync sync class through every call-graph edge kind,
+    impure allocator/scheduler, incomplete kernel triple, missing
+    interpret path, uncovered conformance axis);
+  * ``good/`` — the same surfaces written correctly, including the allowed
+    idioms the checkers must NOT flag: jit in __init__, module-scope
+    ``@partial(jax.jit, static_argnames=...)`` (decorator-attribution
+    regression), branch on a static argument, function-local tree_util
+    import, dir-level kernel exemption, suppressed staging transfer, and
+    a globally-exempt ServeConfig field.
+
+Plus the suppression-comment round trip, baseline semantics (missing
+justifications rejected, stale entries fail, --write-baseline output is
+rejected until edited), and the acceptance check that the shipped tree is
+clean against the shipped (empty) baseline.
+"""
+
+import ast
+from pathlib import Path
+
+import pytest
+
+from tools.analyze import (__main__ as analyze_main, common,
+                           conformance_axes, hostsync, kerneltriple, purity,
+                           retrace)
+
+REPO = Path(__file__).resolve().parents[1]
+BAD = REPO / "tests/fixtures/analyze/bad"
+GOOD = REPO / "tests/fixtures/analyze/good"
+
+
+def _keys(violations):
+    return {v.key for v in violations}
+
+
+# ---------------------------------------------------------------------------
+# checker (a): retrace safety
+# ---------------------------------------------------------------------------
+
+def test_retrace_flags_jit_in_step_and_traced_branch():
+    keys = _keys(retrace.check(BAD))
+    assert "retrace:src/repro/serving/engine.py:EngineCore.step:" \
+           "jit-in-step" in keys
+    assert "retrace:src/repro/serving/engine.py:masked:" \
+           "branch-on-flag" in keys
+
+
+def test_retrace_clean_on_good_tree():
+    # in particular: the module-scope @partial(jax.jit, ...) decorator is
+    # NOT attributed to the function body, and the branch on the
+    # static_argnames-exempt `interpret` is NOT a traced branch
+    assert retrace.check(GOOD) == []
+
+
+# ---------------------------------------------------------------------------
+# checker (b): host-sync lint over the call graph
+# ---------------------------------------------------------------------------
+
+def test_hostsync_flags_every_sync_class_through_every_edge():
+    keys = _keys(hostsync.check(BAD))
+    expected = {
+        # directly in step(): implicit d->h cast, per-scalar h->d churn
+        "hostsync:src/repro/serving/engine.py:EngineCore.step:int",
+        "hostsync:src/repro/serving/engine.py:EngineCore.step:asarray",
+        # through the self.method edge: explicit .item()
+        "hostsync:src/repro/serving/engine.py:EngineCore._push:item",
+        # through the cross-module alias edge: .tolist() in the allocator
+        "hostsync:src/repro/core/alloc.py:occupancy:tolist",
+    }
+    assert expected <= keys
+
+
+def test_hostsync_clean_on_good_tree():
+    # the staging transfer is suppressed WITH a reason; int(bare_name) in
+    # the reachable allocator helper is not a sync
+    assert hostsync.check(GOOD) == []
+
+
+# ---------------------------------------------------------------------------
+# checker (c): host purity
+# ---------------------------------------------------------------------------
+
+def test_purity_flags_jnp_and_module_level_jax():
+    keys = _keys(purity.check(BAD))
+    assert "purity:src/repro/core/alloc.py::import-jnp" in keys
+    assert "purity:src/repro/core/alloc.py::import-jax-module-scope" in keys
+    assert any(k.startswith("purity:src/repro/core/alloc.py:occupancy:jnp.")
+               for k in keys)
+    assert "purity:src/repro/serving/scheduler.py::" \
+           "from-jax-import-numpy" in keys
+
+
+def test_purity_clean_on_good_tree():
+    # function-local `from jax import tree_util` is the allowed idiom
+    assert purity.check(GOOD) == []
+
+
+# ---------------------------------------------------------------------------
+# checker (d): kernel-triple completeness
+# ---------------------------------------------------------------------------
+
+def test_kerneltriple_flags_missing_members_and_interpret_path():
+    keys = _keys(kerneltriple.check(BAD))
+    assert "kerneltriple:src/repro/kernels/badkern:badkern:" \
+           "missing-ref.py" in keys
+    assert "kerneltriple:src/repro/kernels/badkern:badkern:" \
+           "missing-ops.py" in keys
+    assert "kerneltriple:src/repro/kernels/nointerp/ops.py:nointerp:" \
+           "no-interpret-path" in keys
+
+
+def test_kerneltriple_clean_on_good_tree():
+    # complete triple passes; the dir-level `# kernel: ok(...)` exemption
+    # covers the intentionally-partial package
+    assert kerneltriple.check(GOOD) == []
+
+
+# ---------------------------------------------------------------------------
+# checker (e): conformance-axis coverage
+# ---------------------------------------------------------------------------
+
+def test_axis_flags_uncovered_field():
+    keys = _keys(conformance_axes.check(BAD, live=False))
+    assert "axis:tests/test_backend_conformance.py:ENGINE_VARIANTS:" \
+           "uncovered-widget_mode" in keys
+    # backend IS covered by the fixture's variant row
+    assert not any("uncovered-backend" in k for k in keys)
+
+
+def test_axis_clean_on_good_tree():
+    # backend covered by the fixture, seed by the global exemption
+    assert conformance_axes.check(GOOD, live=False) == []
+
+
+def test_axis_live_parser_matches_ast_on_real_repo():
+    """The live half on the REAL repo: every AST-derived flag must exist
+    on the parser serve.main actually builds (drift detector)."""
+    fields = conformance_axes.serve_flag_fields(REPO / conformance_axes.SERVE)
+    assert fields, "serve.py must feed ServeConfig from argparse"
+    live = conformance_axes._live_parser_flags(REPO)
+    assert live is not None
+    assert set(fields.values()) <= live
+
+
+# ---------------------------------------------------------------------------
+# suppression syntax round trip
+# ---------------------------------------------------------------------------
+
+def test_suppression_requires_nonempty_reason(tmp_path):
+    p = tmp_path / "m.py"
+    p.write_text("x = f()  # sync: ok(batched once per step)\n"
+                 "y = g()  # sync: ok()\n"
+                 "z = h()  # sync: ok\n")
+    src = common.SourceFile(p, tmp_path)
+    x_node, y_node, z_node = (s.value for s in src.tree.body)
+    assert src.suppressed(x_node, "sync")
+    assert not src.suppressed(y_node, "sync"), "empty reason must not suppress"
+    assert not src.suppressed(z_node, "sync"), "missing parens must not suppress"
+    # tags are scoped: a sync suppression does not silence other checkers
+    assert not src.suppressed(x_node, "retrace")
+
+
+def test_suppression_spans_multiline_statements(tmp_path):
+    p = tmp_path / "m.py"
+    p.write_text("x = f(\n"
+                 "    1,  # sync: ok(reason on an inner line)\n"
+                 "    2)\n")
+    src = common.SourceFile(p, tmp_path)
+    assert src.suppressed(src.tree.body[0].value, "sync")
+
+
+def test_bad_tree_violations_all_suppressible(tmp_path):
+    """Round trip: appending the matching `# <tag>: ok(...)` to every
+    flagged line of the bad tree silences exactly those findings."""
+    import shutil
+    work = tmp_path / "bad"
+    shutil.copytree(BAD, work)
+    tag = {"hostsync": "sync", "retrace": "retrace", "purity": "purity"}
+    before = (hostsync.check(work) + purity.check(work)
+              + [v for v in retrace.check(work) if "jit-in" in v.pattern])
+    assert before
+    by_file = {}
+    for v in before:
+        by_file.setdefault(v.path, set()).add((v.line, tag[v.checker]))
+    for rel, sites in by_file.items():
+        lines = (work / rel).read_text().splitlines()
+        for ln, t in sites:
+            lines[ln - 1] += f"  # {t}: ok(seeded fixture, silenced by test)"
+        (work / rel).write_text("\n".join(lines) + "\n")
+    after = (hostsync.check(work) + purity.check(work)
+             + [v for v in retrace.check(work) if "jit-in" in v.pattern])
+    assert after == []
+
+
+# ---------------------------------------------------------------------------
+# CLI driver + baseline semantics
+# ---------------------------------------------------------------------------
+
+def test_main_exits_nonzero_on_bad_tree(capsys):
+    assert analyze_main.main(["--root", str(BAD), "--no-import"]) == 1
+    out = capsys.readouterr().out
+    # one seeded violation of EVERY checker class surfaced
+    for checker in ("retrace", "hostsync", "purity", "kerneltriple", "axis"):
+        assert f"[{checker}]" in out, f"{checker} missing from:\n{out}"
+
+
+def test_main_exits_zero_on_good_tree():
+    assert analyze_main.main(["--root", str(GOOD), "--no-import"]) == 0
+
+
+def test_baseline_hides_known_debt_but_rejects_stale(tmp_path, capsys):
+    bl = tmp_path / "baseline.txt"
+    keys = sorted(_keys(analyze_main.run_checkers(BAD, live=False)))
+    bl.write_text("".join(f"{k}  # seeded fixture debt\n" for k in keys))
+    assert analyze_main.main(["--root", str(BAD), "--no-import",
+                              "--baseline", str(bl)]) == 0
+    # a stale entry (debt that no longer reproduces) must FAIL the run —
+    # otherwise it shields an identical future regression
+    bl.write_text(bl.read_text()
+                  + "hostsync:src/gone.py:f:int  # fixed long ago\n")
+    assert analyze_main.main(["--root", str(BAD), "--no-import",
+                              "--baseline", str(bl)]) == 1
+    assert "stale" in capsys.readouterr().out
+
+
+def test_baseline_rejects_missing_justification(tmp_path):
+    bl = tmp_path / "baseline.txt"
+    bl.write_text("hostsync:src/x.py:f:int\n")
+    with pytest.raises(SystemExit):
+        common.load_baseline(bl)
+
+
+def test_write_baseline_output_needs_human_edit(tmp_path):
+    """--write-baseline emits TODO justifications that load_baseline
+    rejects: regenerating can never silently launder new debt into CI."""
+    bl = tmp_path / "baseline.txt"
+    assert analyze_main.main(["--root", str(BAD), "--no-import",
+                              "--baseline", str(bl),
+                              "--write-baseline"]) == 0
+    assert bl.exists() and "TODO" in bl.read_text()
+    with pytest.raises(SystemExit):
+        common.load_baseline(bl)
+
+
+def test_shipped_tree_is_clean():
+    """Acceptance: the shipped repo passes its own lint suite against the
+    shipped baseline (which is empty — every finding was fixed or carries
+    an inline reason)."""
+    assert common.load_baseline(REPO / analyze_main.DEFAULT_BASELINE) == {}
+    assert analyze_main.main(["--root", str(REPO), "--no-import"]) == 0

@@ -154,6 +154,16 @@ ENGINE_VARIANTS = {
     "priority-sched": dict(backend="paged", paged_kernel=False,
                            page_allocator="freelist", pool_fraction=1.0,
                            scheduler="priority", preemption="recompute"),
+    # the ADMISSION-WATERMARK axis: same free-list pool, but admission
+    # keeps a 25% page-headroom reserve, so the mid-run request DEFERS
+    # until the short request retires and returns its pages.  The
+    # admission schedule legitimately shifts — only admission-time
+    # independence (a request's tokens don't depend on WHEN it was
+    # admitted) makes this variant comparable, and only token/finish
+    # identity is asserted (cadence snapshots differ by construction)
+    "admit-watermark": dict(backend="paged", paged_kernel=False,
+                            page_allocator="freelist", pool_fraction=1.0,
+                            admit_watermark=0.25),
 }
 
 
@@ -179,6 +189,7 @@ def engine_outputs():
     outs = {}
     fills = {}
     streams = {}
+    stats = {}
     for name, kw in ENGINE_VARIANTS.items():
         scfg = ServeConfig(batch_size=2, prompt_len=48, max_new_tokens=12,
                            page_size=8, **kw)
@@ -199,7 +210,8 @@ def engine_outputs():
         streams[name] = {r: list(eng.stream(r)) for r in (r0, r1, r2)}
         res = eng.run()  # no-op mop-up: the streams drained everything
         outs[name] = {r: res[r] for r in (r0, r1, r2)}
-    return outs, fills, streams
+        stats[name] = eng.pool_stats()  # None for static layouts
+    return outs, fills, streams, stats
 
 
 def test_continuous_engine_token_identical_across_backends(engine_outputs):
@@ -207,7 +219,7 @@ def test_continuous_engine_token_identical_across_backends(engine_outputs):
     and paged layouts — including a request admitted mid-run into a freed
     slot, and windows folding on per-slot cadence (max_new > interval, so
     both the early and the late-admitted slot cross a recompression)."""
-    outs, fills, _ = engine_outputs
+    outs, fills, _, _ = engine_outputs
     np.testing.assert_array_equal(fills["mixed"], fills["paged"])
     for (ra, a), (rb, b) in zip(outs["mixed"].items(), outs["paged"].items()):
         np.testing.assert_array_equal(a.tokens, b.tokens)
@@ -225,7 +237,7 @@ def test_continuous_engine_token_identical_with_freelist(engine_outputs):
     and valid tokens always occupy a contiguous page prefix
     (kvcache._valid_first), so count-driven whole-page grants cover
     exactly the live payload."""
-    outs, fills, _ = engine_outputs
+    outs, fills, _, _ = engine_outputs
     for other in ("mixed", "paged"):
         np.testing.assert_array_equal(fills[other], fills["paged-freelist"])
         for (ra, a), (rb, b) in zip(outs[other].items(),
@@ -242,7 +254,7 @@ def test_continuous_engine_token_identical_with_paged_kernel(engine_outputs):
     saliency state — and with it every recompression top-k split — stays
     identical), and the kernel's attention output agrees with the dense
     path to float tolerance (test_paged_qattn.py)."""
-    outs, fills, _ = engine_outputs
+    outs, fills, _, _ = engine_outputs
     for other in ("mixed", "paged"):
         np.testing.assert_array_equal(fills[other], fills["paged-kernel"])
         for (ra, a), (rb, b) in zip(outs[other].items(),
@@ -258,7 +270,7 @@ def test_continuous_engine_token_identical_with_priority_scheduler(engine_output
     same admission order into the same slots, bitwise the same tokens and
     cadence state as every other variant.  Scheduling policy is host-side
     ordering only; it can never touch the numerics."""
-    outs, fills, _ = engine_outputs
+    outs, fills, _, _ = engine_outputs
     for other in ("mixed", "paged-freelist"):
         np.testing.assert_array_equal(fills[other], fills["priority-sched"])
         for (ra, a), (rb, b) in zip(outs[other].items(),
@@ -270,13 +282,38 @@ def test_continuous_engine_token_identical_with_priority_scheduler(engine_output
         assert out.timings["n_preemptions"] == 0
 
 
+def test_continuous_engine_token_identical_with_admit_watermark(engine_outputs):
+    """The admission-watermark axis: a 25% page-headroom reserve makes the
+    mid-run request DEFER until the short request retires and returns its
+    pages — a genuinely different admission schedule, the one axis of the
+    matrix where lockstep state snapshots (win_fill) legitimately diverge.
+    What must NOT change is the tokens: admission-time independence (a
+    request's prefill + decode sequence depends only on its own prompt and
+    per-slot counters, never on WHEN it was admitted or what its
+    neighbours are doing) guarantees bitwise-identical output per request
+    even under a shifted schedule.  The deferral itself must actually have
+    fired — otherwise this variant silently degenerates to paged-freelist
+    and the axis tests nothing."""
+    outs, _, _, stats = engine_outputs
+    for (ra, a), (rb, b) in zip(outs["mixed"].items(),
+                                outs["admit-watermark"].items()):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert a.finish_reason == b.finish_reason
+    # the watermark really bit: at least one admission was deferred here...
+    assert stats["admit-watermark"]["deferrals"] >= 1, stats["admit-watermark"]
+    # ...and none was under the same pool without the reserve
+    assert stats["paged-freelist"]["deferrals"] == 0, stats["paged-freelist"]
+    # mixed/paged static layouts have no pool to report
+    assert stats["mixed"] is None and stats["paged"] is None
+
+
 def test_streaming_concat_matches_result(engine_outputs):
     """Streaming conformance: for EVERY engine variant in the matrix, the
     tokens yielded by `engine.stream(rid)` — live generators that drove the
     engine to completion themselves, including the mid-run-admitted request
     — concatenate bitwise to `result(rid).tokens`.  (The forced-preemption
     streaming case lives in tests/test_scheduling.py.)"""
-    outs, _, streams = engine_outputs
+    outs, _, streams, _ = engine_outputs
     for name in ENGINE_VARIANTS:
         for rid, out in outs[name].items():
             assert streams[name][rid] == out.tokens.tolist(), (name, rid)

@@ -1,0 +1,1 @@
+# repo tooling namespace (`python -m tools.analyze`, tools/check_docs.py)

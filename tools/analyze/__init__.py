@@ -1,0 +1,26 @@
+"""repro-analyze: the repo-specific invariant lint suite (`make lint`).
+
+Five static checkers, each guarding an invariant the test suite asserts
+only indirectly (ROADMAP "hard-won invariants"):
+
+  (a) `retrace`          — jax.jit/pmap built only at setup time; no
+                           Python branches on traced values in jitted fns
+  (b) `hostsync`         — no device syncs / per-scalar transfers in the
+                           decode hot loop rooted at EngineCore.step/stream
+  (c) `purity`           — core/alloc.py and serving/scheduler.py import
+                           no jax compute (tables/policy stay host-side)
+  (d) `kerneltriple`     — every kernels/*/ dir ships kernel+ref+ops with
+                           an interpret-mode fallback
+  (e) `conformance_axes` — every ServeConfig-feeding CLI flag appears in
+                           the conformance fixture (or is exempt, with a
+                           written reason)
+
+The runtime half of the story — proving the decode loop compiles ZERO new
+XLA programs at steady state — is `repro.runtime.compile_guard` plus
+`tests/test_retrace.py`; it needs a live engine, so it runs with the test
+suite, not with `make lint`.
+
+Run: `python -m tools.analyze` (repo root, PYTHONPATH=src).  Suppression
+syntax and the baseline format are documented in `tools/analyze/common.py`
+and README "Static invariant lint".
+"""

@@ -1,0 +1,91 @@
+"""CLI driver for the invariant lint suite: `python -m tools.analyze`.
+
+Exit code 0 = clean (modulo the baseline), 1 = violations.  Pass
+``--write-baseline`` to (re)generate the baseline from the current tree —
+entries are written with a TODO justification that `load_baseline` will
+reject until a human replaces it, so regenerating can never silently
+launder new debt into CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+from typing import List
+
+from tools.analyze import (common, conformance_axes, hostsync, kerneltriple,
+                           purity, retrace)
+
+DEFAULT_BASELINE = "tools/analyze/baseline.txt"
+
+
+def run_checkers(root: Path, live: bool = True) -> List[common.Violation]:
+    violations: List[common.Violation] = []
+    violations += retrace.check(root)
+    violations += hostsync.check(root)
+    violations += purity.check(root)
+    violations += kerneltriple.check(root)
+    violations += conformance_axes.check(root, live=live)
+    return violations
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="tools.analyze")
+    ap.add_argument("--root", type=Path,
+                    default=Path(__file__).resolve().parents[2],
+                    help="repo root to analyze (default: this repo)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help=f"baseline file (default: <root>/{DEFAULT_BASELINE})")
+    ap.add_argument("--no-import", action="store_true",
+                    help="skip the live-argparse half of the axis checker "
+                         "(AST-only; for fixture trees without a importable "
+                         "repro package)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current violations to the baseline file "
+                         "with TODO justifications, then exit 0")
+    args = ap.parse_args(argv)
+    root = args.root.resolve()
+    baseline_path = args.baseline or root / DEFAULT_BASELINE
+
+    t0 = time.perf_counter()
+    violations = run_checkers(root, live=not args.no_import)
+
+    if args.write_baseline:
+        lines = ["# repro-analyze baseline — pre-existing violations, one",
+                 "# per line as '<key>  # <justification>'.  Replace every",
+                 "# TODO before committing: load_baseline rejects entries",
+                 "# without a real reason.", ""]
+        for v in sorted(set(v.key for v in violations)):
+            lines.append(f"{v}  # TODO justify or fix")
+        baseline_path.write_text("\n".join(lines) + "\n")
+        print(f"repro-analyze: wrote {len(set(v.key for v in violations))} "
+              f"baseline entries to {baseline_path}")
+        return 0
+
+    baseline = common.load_baseline(baseline_path)
+    fresh = common.apply_baseline(violations, baseline)
+    stale = sorted(set(baseline) - {v.key for v in violations})
+
+    dt = time.perf_counter() - t0
+    if fresh:
+        print(f"repro-analyze: {len(fresh)} violation(s) "
+              f"({len(violations) - len(fresh)} baselined) in {dt:.1f}s")
+        for v in fresh:
+            print(f"  - {v.render()}")
+            print(f"    key: {v.key}")
+        return 1
+    msg = f"repro-analyze: OK ({len(violations)} baselined) in {dt:.1f}s"
+    print(msg)
+    if stale:
+        # fixed debt must leave the baseline, or it shields a regression
+        print("repro-analyze: stale baseline entries (fixed — delete them):")
+        for k in stale:
+            print(f"  - {k}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

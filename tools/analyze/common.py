@@ -1,0 +1,169 @@
+"""Shared infrastructure for the repo's invariant lint suite.
+
+Every checker in `tools/analyze` produces `Violation` records against the
+same three escape hatches:
+
+  * **suppression comments** — ``# <tag>: ok(<reason>)`` on any line of the
+    offending statement.  The reason is mandatory: an empty ``ok()`` does
+    not suppress (the point is to *document* the boundary crossing, not to
+    silence the tool).  Each checker owns one tag (``sync``, ``retrace``,
+    ``trace``, ``purity``, ``kernel``, ``axis``).
+  * **the baseline file** (`tools/analyze/baseline.txt`) — one violation
+    key per line, for pre-existing debt that is tracked instead of fixed.
+    Keys are line-number-free (checker:path:scope:pattern) so unrelated
+    edits don't churn the file.  The shipped baseline is EMPTY: every
+    violation the suite found at introduction time was either fixed or
+    given an inline suppression with a reason.
+  * nothing else — checkers have no per-rule config knobs on purpose.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence
+
+# suppression syntax: `# sync: ok(one batched read per step)` — tag, then
+# a mandatory non-empty reason in parentheses
+_SUPPRESS_RE = re.compile(r"#\s*(?P<tag>[a-z]+):\s*ok\((?P<reason>[^)]+)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    checker: str          # "hostsync" | "retrace" | "purity" | ...
+    path: str             # repo-relative posix path
+    line: int             # 1-indexed, for humans; not part of the key
+    scope: str            # enclosing qualname ("EngineCore.step"), or ""
+    pattern: str          # short machine tag for the construct flagged
+    message: str          # human explanation
+
+    @property
+    def key(self) -> str:
+        """Line-number-free identity used by the baseline file."""
+        return f"{self.checker}:{self.path}:{self.scope}:{self.pattern}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.checker}] {self.message}"
+
+
+class SourceFile:
+    """One parsed python file plus its suppression-comment index."""
+
+    def __init__(self, path: Path, root: Path):
+        self.path = path
+        self.rel = path.relative_to(root).as_posix()
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(path))
+        # line -> {tag: reason} for every well-formed suppression comment
+        self.suppressions: Dict[int, Dict[str, str]] = {}
+        for i, line in enumerate(self.lines, start=1):
+            for m in _SUPPRESS_RE.finditer(line):
+                reason = m.group("reason").strip()
+                if reason:
+                    self.suppressions.setdefault(i, {})[m.group("tag")] = reason
+
+    def suppressed(self, node: ast.AST, tag: str) -> bool:
+        """True if any line the statement spans carries `# <tag>: ok(...)`."""
+        first = getattr(node, "lineno", None)
+        if first is None:
+            return False
+        last = getattr(node, "end_lineno", first) or first
+        return any(tag in self.suppressions.get(ln, {})
+                   for ln in range(first, last + 1))
+
+
+def python_files(root: Path, sub: str = "src/repro") -> List[Path]:
+    base = root / sub
+    if not base.exists():
+        return []
+    return sorted(p for p in base.rglob("*.py") if "__pycache__" not in p.parts)
+
+
+def parse_all(root: Path, sub: str = "src/repro") -> List[SourceFile]:
+    return [SourceFile(p, root) for p in python_files(root, sub)]
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by several checkers
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """`jax.tree_util.tree_flatten` -> "jax.tree_util.tree_flatten"."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def contains_call_or_attribute(node: ast.AST) -> bool:
+    """Does the expression contain a Call or Attribute anywhere?  A bare
+    name or a subscript of a bare name (`nxt[i]`) is assumed host-side; a
+    call or attribute chain may reach device state."""
+    return any(isinstance(n, (ast.Call, ast.Attribute)) for n in ast.walk(node))
+
+
+class ScopedVisitor(ast.NodeVisitor):
+    """NodeVisitor that tracks the (class, function) qualname stack."""
+
+    def __init__(self) -> None:
+        self.stack: List[str] = []
+
+    @property
+    def qualname(self) -> str:
+        return ".".join(self.stack)
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    def _visit_func(self, node) -> None:
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: Path) -> Dict[str, str]:
+    """baseline.txt -> {violation key: justification}.  Format per line:
+    `<key>  # <justification>`; blank lines and full-line comments ignored.
+    A key with no justification is rejected (the baseline exists to record
+    WHY debt is tolerated, not to be a mute button)."""
+    out: Dict[str, str] = {}
+    if not path.exists():
+        return out
+    for ln, raw in enumerate(path.read_text().splitlines(), start=1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        key, sep, why = line.partition("#")
+        key, why = key.strip(), why.strip()
+        if not sep or not why:
+            raise SystemExit(
+                f"{path}:{ln}: baseline entry {key!r} has no justification "
+                "(format: '<key>  # <why this is tolerated>')")
+        if why.upper().startswith("TODO"):
+            raise SystemExit(
+                f"{path}:{ln}: baseline entry {key!r} still carries the "
+                "--write-baseline TODO placeholder — replace it with the "
+                "actual reason this debt is tolerated")
+        out[key] = why
+    return out
+
+
+def apply_baseline(violations: Sequence[Violation],
+                   baseline: Dict[str, str]) -> List[Violation]:
+    return [v for v in violations if v.key not in baseline]

@@ -1,0 +1,171 @@
+"""Checker (e) — conformance-axis coverage.
+
+The 5-way conformance fixture (`tests/test_backend_conformance.py`) is the
+repo's crown jewel: greedy output must stay bitwise token-identical across
+every backend/kernel/allocator/scheduler combination.  That guarantee is
+only as strong as the fixture's AXIS COVERAGE — a new serving flag that
+feeds `ServeConfig` but never appears in the fixture is a numerics-
+affecting knob that can ship untested.
+
+This checker cross-references three surfaces:
+
+  1. the `repro.launch.serve` argparse AST: which `--flags` flow into
+     which `ServeConfig(...)` fields;
+  2. (live, unless ``live=False``) the actual parser built by
+     `serve.main`, captured the same way `tools/check_docs.py` does —
+     so the AST mapping cannot drift from the real CLI;
+  3. the conformance test module's AST: which ServeConfig fields the
+     fixture exercises (ENGINE_VARIANTS `dict(...)` kwargs plus explicit
+     `ServeConfig(...)` kwargs).
+
+Every flag-fed field must appear in the fixture or carry a justified
+exemption below.  Exemptions are per-entry and reviewed like code — they
+are the checker's analogue of the suppression comment.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set
+
+from tools.analyze import common
+
+CHECKER = "axis"
+
+SERVE = "src/repro/launch/serve.py"
+FIXTURE = "tests/test_backend_conformance.py"
+
+# ServeConfig fields a serve flag feeds that are deliberately NOT a
+# conformance axis — each entry needs a reason a reviewer would accept.
+EXEMPT_FIELDS: Dict[str, str] = {
+    "batch_size": "scenario shape: the fixture pins one slot count so the "
+                  "mid-run-admission schedule is comparable across variants",
+    "prompt_len": "scenario shape: pinned so every variant sees identical "
+                  "prompts (the axis under test is the layout, not the data)",
+    "max_new_tokens": "scenario shape: pinned above recompress_interval so "
+                      "every variant crosses a fold; varying it is covered "
+                      "by per-request budgets inside the scenario",
+    "seed": "scenario constant: probe schedule and sampling keys must be "
+            "identical across variants for bitwise comparison to be "
+            "meaningful at all",
+}
+
+
+def serve_flag_fields(serve_path: Path) -> Dict[str, str]:
+    """{ServeConfig field: --flag} for every field fed from argparse."""
+    tree = ast.parse(serve_path.read_text(), filename=str(serve_path))
+    flags: Dict[str, str] = {}           # dest -> --flag
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "add_argument" and node.args:
+            opt = node.args[0]
+            if isinstance(opt, ast.Constant) and isinstance(opt.value, str) \
+                    and opt.value.startswith("--"):
+                flags[opt.value[2:].replace("-", "_")] = opt.value
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) \
+                and common.dotted_name(node.func) == "ServeConfig":
+            for kw in node.keywords:
+                if kw.arg is None:
+                    continue
+                dests = {n.attr for n in ast.walk(kw.value)
+                         if isinstance(n, ast.Attribute)
+                         and isinstance(n.value, ast.Name)
+                         and n.value.id == "args"}
+                for dest in dests:
+                    if dest in flags:
+                        out[kw.arg] = flags[dest]
+    return out
+
+
+def fixture_axes(fixture_path: Path) -> Set[str]:
+    """ServeConfig fields the conformance module exercises: keywords of
+    every `dict(...)` call (the ENGINE_VARIANTS rows) plus keywords of
+    every `ServeConfig(...)` call."""
+    tree = ast.parse(fixture_path.read_text(), filename=str(fixture_path))
+    axes: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) \
+                and common.dotted_name(node.func) in ("dict", "ServeConfig"):
+            axes.update(kw.arg for kw in node.keywords if kw.arg)
+    return axes
+
+
+def _live_parser_flags(root: Path) -> Optional[Set[str]]:
+    """Capture `repro.launch.serve`'s real parser (check_docs idiom) and
+    return its --flags; None if the import environment is unavailable."""
+    import argparse
+    import sys
+
+    src = str(root / "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    try:
+        import repro.launch.serve as serve_mod
+    except Exception:
+        return None
+
+    captured: dict = {}
+
+    class _Captured(Exception):
+        pass
+
+    orig = argparse.ArgumentParser.parse_args
+
+    def grab(self, *a, **kw):
+        captured["parser"] = self
+        raise _Captured
+
+    argparse.ArgumentParser.parse_args = grab
+    try:
+        serve_mod.main([])
+    except _Captured:
+        pass
+    finally:
+        argparse.ArgumentParser.parse_args = orig
+    parser = captured.get("parser")
+    if parser is None:
+        return None
+    return {opt for a in parser._actions for opt in a.option_strings
+            if opt.startswith("--")} - {"--help"}
+
+
+def check(root: Path, live: bool = True) -> List[common.Violation]:
+    violations: List[common.Violation] = []
+    serve_path, fixture_path = root / SERVE, root / FIXTURE
+    for p in (serve_path, fixture_path):
+        if not p.exists():
+            violations.append(common.Violation(
+                CHECKER, p.relative_to(root).as_posix(), 1, "",
+                "missing-file", f"{p.name} is missing — cannot cross-check "
+                "the serving CLI against the conformance fixture"))
+    if violations:
+        return violations
+
+    fields = serve_flag_fields(serve_path)
+    axes = fixture_axes(fixture_path)
+
+    if live:
+        live_flags = _live_parser_flags(root)
+        if live_flags is not None:
+            for field, flag in fields.items():
+                if flag not in live_flags:
+                    violations.append(common.Violation(
+                        CHECKER, SERVE, 1, "serve.main", f"drift-{flag}",
+                        f"AST says {flag} feeds ServeConfig.{field}, but "
+                        "the live parser does not accept it — the checker's "
+                        "static view drifted from the CLI"))
+
+    for field, flag in sorted(fields.items()):
+        if field in axes or field in EXEMPT_FIELDS:
+            continue
+        violations.append(common.Violation(
+            CHECKER, FIXTURE, 1, "ENGINE_VARIANTS", f"uncovered-{field}",
+            f"serving flag {flag} feeds ServeConfig.{field}, but the "
+            "conformance fixture never exercises that field — add an "
+            "ENGINE_VARIANTS axis (or a justified EXEMPT_FIELDS entry in "
+            "tools/analyze/conformance_axes.py) so the knob cannot ship "
+            "untested"))
+    return violations

@@ -1,0 +1,222 @@
+"""Checker (b) — host-sync lint over the decode hot loop.
+
+ZipCache's serving throughput dies quietly when the per-step loop grows a
+device→host sync (`int()`/`float()` on a jax array, `.item()`,
+`.tolist()`, `np.asarray` of device state) or per-step host→device churn
+(a fresh `jnp.asarray` per scalar per slot): each one serializes the
+dispatch pipeline, and none of them fail a correctness test.
+
+This checker builds the intra-repo call graph rooted at the engine's hot
+entry points (`EngineCore.step` / `EngineCore.stream`) — following
+`self.method(...)` calls through the class hierarchy, bare calls to
+module-level functions, and `alias.func(...)` calls through repro-internal
+imports; attribute chains it cannot resolve statically (jitted program
+handles like `self._decode_masked`, injected policy objects) are the
+device/policy boundary and are not descended into — and flags, inside
+every reachable function:
+
+  * `.item()` / `.tolist()` / `.block_until_ready()` / `jax.device_get`
+    — always (explicit device→host syncs);
+  * `int(x)` / `float(x)` / `bool(x)` / `np.asarray(x)` / `np.array(x)`
+    where `x` contains a call or attribute chain (a bare local name or
+    `name[i]` is assumed already host-side);
+  * `jnp.asarray` / `jnp.array` / `jax.device_put` — always (host→device
+    transfers; the hot loop gets ONE batched staging transfer per step,
+    everything else must justify itself).
+
+The ONLY suppression is an inline ``# sync: ok(<reason>)`` on the
+offending statement — the reasons collectively document the host/device
+boundary contract (docs/ARCHITECTURE.md §8).
+"""
+
+from __future__ import annotations
+
+import ast
+import collections
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from tools.analyze import common
+
+CHECKER = "hostsync"
+
+# (module, qualname) roots of the decode hot loop
+DEFAULT_ROOTS: Tuple[Tuple[str, str], ...] = (
+    ("repro.serving.engine", "EngineCore.step"),
+    ("repro.serving.engine", "EngineCore.stream"),
+)
+
+_ALWAYS_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_GUARDED_CASTS = {"int", "float", "bool", "np.asarray", "np.array",
+                  "numpy.asarray", "numpy.array"}
+_H2D_CALLS = {"jnp.asarray", "jnp.array", "jax.device_put",
+              "jax.numpy.asarray", "jax.numpy.array"}
+_D2H_CALLS = {"jax.device_get"}
+
+
+def _module_name(rel: str) -> Optional[str]:
+    # "src/repro/serving/engine.py" -> "repro.serving.engine"
+    if not rel.startswith("src/") or not rel.endswith(".py"):
+        return None
+    mod = rel[len("src/"):-len(".py")].replace("/", ".")
+    return mod[:-len(".__init__")] if mod.endswith(".__init__") else mod
+
+
+class _Module:
+    """Per-file symbol tables: functions, classes+bases, repro imports."""
+
+    def __init__(self, src: common.SourceFile):
+        self.src = src
+        self.name = _module_name(src.rel)
+        self.functions: Dict[str, ast.FunctionDef] = {}
+        self.class_bases: Dict[str, List[str]] = {}
+        # alias -> repro module name (import repro.core.alloc as alloc_lib)
+        self.mod_aliases: Dict[str, str] = {}
+        # alias -> (repro module, symbol)  (from m import f [as g])
+        self.sym_aliases: Dict[str, Tuple[str, str]] = {}
+        for node in src.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions[node.name] = node
+            elif isinstance(node, ast.ClassDef):
+                self.class_bases[node.name] = [
+                    b.id for b in node.bases if isinstance(b, ast.Name)]
+                for item in node.body:
+                    if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        self.functions[f"{node.name}.{item.name}"] = item
+        # imports anywhere in the file (incl. function-local ones)
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name.startswith("repro"):
+                        self.mod_aliases[a.asname or a.name] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.module.startswith("repro"):
+                for a in node.names:
+                    self.sym_aliases[a.asname or a.name] = (
+                        node.module, a.name)
+
+    def methods_of(self, cls: str) -> List[str]:
+        """cls and its (same-module) ancestors, subclass-first."""
+        out, seen = [], set()
+        stack = [cls]
+        while stack:
+            c = stack.pop(0)
+            if c in seen:
+                continue
+            seen.add(c)
+            out.append(c)
+            stack.extend(self.class_bases.get(c, []))
+        return out
+
+
+class _Graph:
+    def __init__(self, root: Path, sub: str):
+        self.modules: Dict[str, _Module] = {}
+        for src in common.parse_all(root, sub):
+            m = _Module(src)
+            if m.name:
+                self.modules[m.name] = m
+
+    # -- call resolution ---------------------------------------------------
+    def resolve(self, mod: _Module, scope: str,
+                call: ast.Call) -> Optional[Tuple[str, str]]:
+        func = call.func
+        if isinstance(func, ast.Name):
+            name = func.id
+            if name in mod.functions:
+                return (mod.name, name)
+            if name in mod.sym_aliases:
+                target_mod, sym = mod.sym_aliases[name]
+                tm = self.modules.get(target_mod)
+                if tm is not None and sym in tm.functions:
+                    return (target_mod, sym)
+                # `from repro.core import alloc` imports a MODULE
+                full = f"{target_mod}.{sym}"
+                if full in self.modules:
+                    return None
+            return None
+        if isinstance(func, ast.Attribute):
+            base, attr = func.value, func.attr
+            # self.method() — search the enclosing class hierarchy
+            if isinstance(base, ast.Name) and base.id == "self" and "." in scope:
+                cls = scope.split(".")[0]
+                for c in mod.methods_of(cls):
+                    if f"{c}.{attr}" in mod.functions:
+                        return (mod.name, f"{c}.{attr}")
+                return None
+            # alias.func() through a repro module import
+            if isinstance(base, ast.Name):
+                target = None
+                if base.id in mod.mod_aliases:
+                    target = mod.mod_aliases[base.id]
+                elif base.id in mod.sym_aliases:
+                    tmod, sym = mod.sym_aliases[base.id]
+                    full = f"{tmod}.{sym}"
+                    target = full if full in self.modules else None
+                if target is not None:
+                    tm = self.modules.get(target)
+                    if tm is not None and attr in tm.functions:
+                        return (target, attr)
+        return None
+
+    def reachable(self, roots: Sequence[Tuple[str, str]]
+                  ) -> List[Tuple[str, str]]:
+        seen: Set[Tuple[str, str]] = set()
+        queue = collections.deque(r for r in roots
+                                  if r[0] in self.modules
+                                  and r[1] in self.modules[r[0]].functions)
+        while queue:
+            mod_name, qual = queue.popleft()
+            if (mod_name, qual) in seen:
+                continue
+            seen.add((mod_name, qual))
+            mod = self.modules[mod_name]
+            for node in ast.walk(mod.functions[qual]):
+                if isinstance(node, ast.Call):
+                    target = self.resolve(mod, qual, node)
+                    if target is not None and target not in seen:
+                        queue.append(target)
+        return sorted(seen)
+
+
+def _scan_function(mod: _Module, qual: str) -> List[common.Violation]:
+    src = mod.src
+    out: List[common.Violation] = []
+
+    def flag(node: ast.AST, pattern: str, msg: str) -> None:
+        if not src.suppressed(node, "sync"):
+            out.append(common.Violation(
+                CHECKER, src.rel, node.lineno, qual, pattern,
+                f"{msg} in hot-loop function {qual}() — batch it, hoist it "
+                "out of the per-step path, or suppress with "
+                "'# sync: ok(<reason>)'"))
+
+    for node in ast.walk(mod.functions[qual]):
+        if not isinstance(node, ast.Call):
+            continue
+        name = common.dotted_name(node.func)
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _ALWAYS_SYNC_METHODS:
+            flag(node, node.func.attr,
+                 f"explicit device sync `.{node.func.attr}()`")
+        elif name in _D2H_CALLS:
+            flag(node, "device_get", "device->host transfer `jax.device_get`")
+        elif name in _H2D_CALLS:
+            flag(node, name.split(".")[-1],
+                 f"host->device transfer `{name}(...)`")
+        elif name in _GUARDED_CASTS and node.args \
+                and common.contains_call_or_attribute(node.args[0]):
+            flag(node, name,
+                 f"`{name}(...)` of a call/attribute expression (implicit "
+                 "device->host sync if the value is a jax array)")
+    return out
+
+
+def check(root: Path, sub: str = "src/repro",
+          roots: Sequence[Tuple[str, str]] = DEFAULT_ROOTS
+          ) -> List[common.Violation]:
+    graph = _Graph(root, sub)
+    violations: List[common.Violation] = []
+    for mod_name, qual in graph.reachable(roots):
+        violations.extend(_scan_function(graph.modules[mod_name], qual))
+    return violations

@@ -1,0 +1,115 @@
+"""Checker (c) — host purity of the allocator and scheduler modules.
+
+`core/alloc.py` (page tables, free lists, admission math) and
+`serving/scheduler.py` (admission/preemption policy) are host-side BY
+CONSTRUCTION: the whole PR-4/PR-5 design rests on page tables and policy
+decisions being plain numpy/python state mutated between jitted steps, so
+that admission, deferral, and preemption can never retrace or dispatch a
+device program.  A `jnp.` call creeping into either module would silently
+move table math onto the device — per-step transfers at best, per-request
+retraces at worst.
+
+Rules, per configured module:
+
+  * no `import jax.numpy` / `from jax import numpy` / any `jnp` usage;
+  * no `from jax import <compute>` (anything but `tree_util`);
+  * no `jax.<attr>` attribute use except `jax.tree_util` (pure pytree
+    bookkeeping — flattening a cache tree to COUNT it is host work);
+  * no module-level `import jax` at all: even allowed helpers must import
+    function-locally, so importing the allocator never drags the device
+    runtime in (and the allowed surface stays greppable at the use site).
+
+Suppress with ``# purity: ok(<reason>)``.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Sequence
+
+from tools.analyze import common
+
+CHECKER = "purity"
+
+# modules that must stay host-pure (repo-relative paths)
+DEFAULT_MODULES: Sequence[str] = (
+    "src/repro/core/alloc.py",
+    "src/repro/serving/scheduler.py",
+)
+
+_ALLOWED_JAX_ATTRS = {"tree_util"}
+
+
+class _PurityVisitor(common.ScopedVisitor):
+    def __init__(self, src: common.SourceFile):
+        super().__init__()
+        self.src = src
+        self.violations: List[common.Violation] = []
+        self.depth = 0            # 0 = module scope
+
+    def _flag(self, node: ast.AST, pattern: str, msg: str) -> None:
+        if not self.src.suppressed(node, "purity"):
+            self.violations.append(common.Violation(
+                CHECKER, self.src.rel, node.lineno, self.qualname, pattern,
+                f"{msg} — this module is host-pure by construction (tables "
+                "and policy never touch the device); suppress with "
+                "'# purity: ok(<reason>)'"))
+
+    def _visit_func(self, node) -> None:
+        self.depth += 1
+        super()._visit_func(node)
+        self.depth -= 1
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            if a.name == "jax.numpy" or a.name.startswith("jax.numpy."):
+                self._flag(node, "import-jnp", "imports jax.numpy")
+            elif a.name == "jax" and self.depth == 0:
+                self._flag(node, "import-jax-module-scope",
+                           "module-level `import jax` (allowed helpers must "
+                           "import function-locally)")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module and (node.module == "jax"
+                            or node.module.startswith("jax.")):
+            if node.module.startswith("jax.numpy"):
+                self._flag(node, "import-jnp", "imports from jax.numpy")
+            else:
+                bad = [a.name for a in node.names
+                       if a.name not in _ALLOWED_JAX_ATTRS]
+                if bad:
+                    self._flag(node, f"from-jax-import-{'-'.join(bad)}",
+                               f"imports {', '.join(bad)} from jax")
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if isinstance(node.value, ast.Name):
+            if node.value.id == "jnp":
+                self._flag(node, f"jnp.{node.attr}", f"uses jnp.{node.attr}")
+            elif node.value.id == "jax" \
+                    and node.attr not in _ALLOWED_JAX_ATTRS:
+                self._flag(node, f"jax.{node.attr}",
+                           f"uses jax.{node.attr} (only jax.tree_util is "
+                           "allowed here)")
+        self.generic_visit(node)
+
+
+def check(root: Path, modules: Sequence[str] = DEFAULT_MODULES
+          ) -> List[common.Violation]:
+    violations: List[common.Violation] = []
+    for rel in modules:
+        path = root / rel
+        if not path.exists():
+            violations.append(common.Violation(
+                CHECKER, rel, 1, "", "missing-module",
+                f"host-pure module {rel} is configured but missing"))
+            continue
+        v = _PurityVisitor(common.SourceFile(path, root))
+        v.visit(v.src.tree)
+        violations.extend(v.violations)
+    return violations

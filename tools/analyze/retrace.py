@@ -1,0 +1,191 @@
+"""Checker (a) — retrace safety.
+
+The decode loop's efficiency story (paper §4.3: the decoupled probe rides
+the fast attention path; nothing recompiles at steady state) assumes every
+`jax.jit` program is constructed ONCE, at setup time, and reused.  A jit
+wrapper created inside a per-step or per-request path silently recompiles
+on every call — correctness survives, the 56.9% decode-latency win does
+not.  Two rules:
+
+  1. **jit construction sites.**  `jax.jit` / `jax.pmap` / `pjit` calls are
+     allowed only at module scope, in class bodies, inside `__init__` /
+     `__post_init__` (engine program bundles), inside factory functions
+     (name starting with `make_` or `build_`), or inside a driver `main`.
+     Anywhere else — `step()`, `admit()`, any per-request path — is
+     flagged.  Suppress with ``# retrace: ok(<reason>)`` for genuine
+     setup-time sites with unlucky names.
+
+  2. **Python branches on traced values.**  Inside a function that is
+     jitted (decorated with `@jax.jit` / `@partial(jax.jit, ...)`, or
+     passed by name to a `jax.jit(...)` call in the same module), an
+     `if`/`while` on a parameter forces concretization: at best a retrace
+     per value, at worst a TracerBoolConversionError in production.
+     Parameters named in `static_argnames` / positions in `static_argnums`
+     are exempt (branching on statics is the idiom for interpret-mode
+     fallbacks).  Suppress with ``# trace: ok(<reason>)``.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Set
+
+from tools.analyze import common
+
+CHECKER = "retrace"
+
+_JIT_CALLS = {"jax.jit", "jax.pmap", "pjit", "pjit.pjit", "jit", "pmap",
+              "jax.experimental.pjit.pjit"}
+_ALLOWED_FUNCS = {"__init__", "__post_init__", "main"}
+_ALLOWED_PREFIXES = ("make_", "build_")
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    name = common.dotted_name(call.func)
+    if name in _JIT_CALLS:
+        return True
+    # functools.partial(jax.jit, ...) — the decorated-jit idiom
+    if name in ("functools.partial", "partial") and call.args:
+        return common.dotted_name(call.args[0]) in _JIT_CALLS
+    return False
+
+
+def _allowed_scope(stack: List[str]) -> bool:
+    funcs = [s for s in stack if s is not None]
+    if not funcs:
+        return True                      # module scope / class body
+    name = funcs[-1]
+    return (name in _ALLOWED_FUNCS
+            or any(name.startswith(p) for p in _ALLOWED_PREFIXES))
+
+
+class _JitSiteVisitor(common.ScopedVisitor):
+    def __init__(self, src: common.SourceFile):
+        super().__init__()
+        self.src = src
+        self.func_stack: List[str] = []  # function names only (no classes)
+        self.violations: List[common.Violation] = []
+
+    def _visit_func(self, node) -> None:
+        # decorators evaluate when the `def` statement executes — in the
+        # ENCLOSING scope, not per call — so `@partial(jax.jit, ...)` on a
+        # module-level kernel entry point is the canonical setup-time idiom,
+        # not a per-call construction site
+        for dec in node.decorator_list:
+            self.visit(dec)
+        self.func_stack.append(node.name)
+        self.stack.append(node.name)
+        for field, value in ast.iter_fields(node):
+            if field == "decorator_list":
+                continue
+            for child in (value if isinstance(value, list) else [value]):
+                if isinstance(child, ast.AST):
+                    self.visit(child)
+        self.stack.pop()
+        self.func_stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if _is_jit_call(node) and not _allowed_scope(self.func_stack) \
+                and not self.src.suppressed(node, "retrace"):
+            self.violations.append(common.Violation(
+                CHECKER, self.src.rel, node.lineno, self.qualname,
+                f"jit-in-{self.func_stack[-1]}",
+                f"jax.jit/pmap constructed inside {self.qualname}() — "
+                "programs must be built once at setup time (module scope, "
+                "__init__, or a make_*/build_* factory), or the call "
+                "recompiles per invocation; suppress with "
+                "'# retrace: ok(<reason>)' if this really is setup code"))
+        self.generic_visit(node)
+
+
+# ---------------------------------------------------------------------------
+# rule 2: traced-value branches inside jitted functions
+# ---------------------------------------------------------------------------
+
+def _static_params(dec: ast.expr, func: ast.FunctionDef) -> Optional[Set[str]]:
+    """If `dec` marks `func` as jitted, return its NON-static parameter
+    names; else None."""
+    call = dec if isinstance(dec, ast.Call) else None
+    name = common.dotted_name(call.func if call else dec)
+    is_jit = name in _JIT_CALLS or (
+        call is not None and name in ("functools.partial", "partial")
+        and call.args and common.dotted_name(call.args[0]) in _JIT_CALLS)
+    if not is_jit:
+        return None
+    params = [a.arg for a in (func.args.posonlyargs + func.args.args
+                              + func.args.kwonlyargs)]
+    static: Set[str] = set()
+    if call is not None:
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                for el in ast.walk(kw.value):
+                    if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                        static.add(el.value)
+            elif kw.arg == "static_argnums":
+                for el in ast.walk(kw.value):
+                    if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                        if 0 <= el.value < len(params):
+                            static.add(params[el.value])
+    return {p for p in params if p not in static and p != "self"}
+
+
+def _names_jitted_in_module(tree: ast.Module) -> Set[str]:
+    """Function names passed by name to a jax.jit(...) call anywhere in the
+    module (e.g. `self._sample = jax.jit(_sample_tokens)`)."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jit_call(node):
+            for arg in node.args:
+                if isinstance(arg, ast.Name):
+                    out.add(arg.id)
+    return out
+
+
+def _flag_traced_branches(src: common.SourceFile, func: ast.FunctionDef,
+                          traced: Set[str], scope: str,
+                          out: List[common.Violation]) -> None:
+    for node in ast.walk(func):
+        if not isinstance(node, (ast.If, ast.While)):
+            continue
+        names = {n.id for n in ast.walk(node.test) if isinstance(n, ast.Name)}
+        hit = sorted(names & traced)
+        if hit and not src.suppressed(node, "trace"):
+            out.append(common.Violation(
+                CHECKER, src.rel, node.lineno, scope,
+                f"branch-on-{'-'.join(hit)}",
+                f"Python `{type(node).__name__.lower()}` on traced "
+                f"argument(s) {', '.join(hit)} inside jitted {scope}() — "
+                "this concretizes the tracer (retrace per value or "
+                "TracerBoolConversionError); use lax.cond/jnp.where, mark "
+                "the argument static, or suppress with "
+                "'# trace: ok(<reason>)'"))
+
+
+def check(root: Path, sub: str = "src/repro") -> List[common.Violation]:
+    violations: List[common.Violation] = []
+    for src in common.parse_all(root, sub):
+        v = _JitSiteVisitor(src)
+        v.visit(src.tree)
+        violations.extend(v.violations)
+
+        jitted_names = _names_jitted_in_module(src.tree)
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            traced: Optional[Set[str]] = None
+            for dec in node.decorator_list:
+                traced = _static_params(dec, node)
+                if traced is not None:
+                    break
+            if traced is None and node.name in jitted_names:
+                traced = {a.arg for a in (node.args.posonlyargs
+                                          + node.args.args
+                                          + node.args.kwonlyargs)
+                          if a.arg != "self"}
+            if traced:
+                _flag_traced_branches(src, node, traced, node.name, violations)
+    return violations

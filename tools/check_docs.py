@@ -11,13 +11,22 @@ Validations (all against the LIVE code, so drift fails CI):
      parse (compile(); nothing is executed).
   3. Backtick-quoted repository paths in the docs must exist (paths are
      also tried under src/repro/, the documented base for bare refs).
+  4. Backtick-quoted CODE references must resolve against the live tree:
+     `module.symbol` (lowercase repro module basename) must name something
+     that module actually defines, `Class.member` must exist on a repro
+     class (same-module bases included), and dotted `repro.x.y[.symbol]`
+     paths must resolve to a real module or a symbol it defines.  Refs
+     whose head is not a repro module/class (`np.`, `jax.`, `lax.`) are
+     out of scope and skipped.
 
-Run via `make docs-check`.  Exit code 0 = clean; failures are listed.
+Run via `make docs-check` (also part of `make lint`).  Exit code 0 =
+clean; failures are listed.
 """
 
 from __future__ import annotations
 
 import argparse
+import ast
 import re
 import sys
 from pathlib import Path
@@ -140,6 +149,112 @@ def check_paths() -> None:
                     "does not exist (tried ./ and src/repro/)")
 
 
+# ---------------------------------------------------------------------------
+# 4. backtick-quoted code references must resolve
+# ---------------------------------------------------------------------------
+
+CODE_REF_RE = re.compile(
+    r"`([A-Za-z_][A-Za-z0-9_]*(?:\.[A-Za-z_][A-Za-z0-9_]*)+)(?:\(\))?`")
+_FILE_EXTS = {"py", "md", "txt", "json", "yml", "yaml", "sh", "cfg", "toml",
+              "jsonl", "csv", "html"}
+
+
+def _top_level_names(tree: ast.Module) -> set:
+    names: set = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            names.update(t.id for t in node.targets
+                         if isinstance(t, ast.Name))
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name):
+            names.add(node.target.id)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            names.update((a.asname or a.name).split(".")[0]
+                         for a in node.names if a.name != "*")
+    return names
+
+
+def _index_repro():
+    """Symbol tables of src/repro: {module basename: top-level + class-member
+    names} and {class name: [(members, same-module base names, module)]}."""
+    mods: dict = {}
+    classes: dict = {}
+    for p in sorted((ROOT / "src/repro").rglob("*.py")):
+        if "__pycache__" in p.parts:
+            continue
+        tree = ast.parse(p.read_text(), filename=str(p))
+        base = p.parent.name if p.stem == "__init__" else p.stem
+        names = mods.setdefault(base, set())
+        names.update(_top_level_names(tree))
+        for node in tree.body:
+            if not isinstance(node, ast.ClassDef):
+                continue
+            members: set = set()
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    members.add(item.name)
+                elif isinstance(item, ast.Assign):
+                    members.update(t.id for t in item.targets
+                                   if isinstance(t, ast.Name))
+                elif isinstance(item, ast.AnnAssign) \
+                        and isinstance(item.target, ast.Name):
+                    members.add(item.target.id)
+            bases = [b.id for b in node.bases if isinstance(b, ast.Name)]
+            classes.setdefault(node.name, []).append((members, bases, base))
+            # `engine.step` style refs may name a method through the module
+            names.update(members)
+    return mods, classes
+
+
+def _class_has(classes: dict, cls: str, member: str, _seen=None) -> bool:
+    seen = _seen or set()
+    if cls in seen or cls not in classes:
+        return False
+    seen.add(cls)
+    for members, bases, _mod in classes[cls]:
+        if member in members:
+            return True
+        if any(_class_has(classes, b, member, seen) for b in bases):
+            return True
+    return False
+
+
+def check_code_refs() -> None:
+    mods, classes = _index_repro()
+    for doc in DOCS:
+        for ref in sorted(set(CODE_REF_RE.findall(doc.read_text()))):
+            parts = ref.split(".")
+            if parts[-1] in _FILE_EXTS:
+                continue                       # a filename, handled by rule 3
+            head = parts[0]
+            where = doc.relative_to(ROOT)
+            if head == "repro":
+                base = ROOT / "src" / Path(*parts)
+                if base.with_suffix(".py").exists() \
+                        or (base / "__init__.py").exists():
+                    continue
+                parent = ROOT / "src" / Path(*parts[:-1])
+                if (parent.with_suffix(".py").exists()
+                        or (parent / "__init__.py").exists()) \
+                        and parts[-1] in mods.get(parts[-2], set()):
+                    continue
+                err(f"{where}: code ref `{ref}` does not resolve to a "
+                    "repro module or a symbol one defines")
+            elif len(parts) == 2 and head in mods and head[0].islower():
+                if parts[1] not in mods[head]:
+                    err(f"{where}: code ref `{ref}` — no module named "
+                        f"{head}.py defines `{parts[1]}`")
+            elif len(parts) == 2 and head in classes:
+                if not _class_has(classes, head, parts[1]):
+                    err(f"{where}: code ref `{ref}` — class {head} has no "
+                        f"member `{parts[1]}`")
+            # any other head (np., jnp., jax., lax., ...) is out of scope
+
+
 def main() -> int:
     for doc in DOCS:
         if not doc.exists():
@@ -147,6 +262,7 @@ def main() -> int:
     check_flag_table()
     check_snippets()
     check_paths()
+    check_code_refs()
     if errors:
         print(f"docs-check: {len(errors)} problem(s)")
         for e in errors:
