@@ -3,7 +3,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-conformance test-kernels test-alloc \
-    test-scheduling test-retrace test-ci lint docs-check dev serve bench
+    test-scheduling test-http test-retrace test-ci lint docs-check dev \
+    serve bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -43,6 +44,12 @@ test-alloc:
 test-scheduling:
 	$(PYTHON) -m pytest -x -q tests/test_scheduling.py \
 	    "tests/test_backend_conformance.py::test_streaming_concat_matches_result"
+
+# HTTP/SSE front + replica router: drive-loop backoff, SSE bitwise identity,
+# disconnect/deadline/endpoint cancellation, least-loaded placement and
+# session affinity, and the serve/serve_http argparse guard rails
+test-http:
+	$(PYTHON) -m pytest -x -q tests/test_http.py
 
 # README/docs stay mechanically honest: flag tables vs the live argparse
 # surface, python snippets parse, referenced paths exist (tools/check_docs.py)

@@ -58,19 +58,20 @@ from repro.serving import (ContinuousEngine, Request, ServeConfig,
                            ServingEngine, pack_requests)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def add_engine_args(ap: argparse.ArgumentParser) -> None:
+    """The engine/`ServeConfig` argument surface, shared by this batch
+    driver and the HTTP front (`repro.launch.serve_http`) so the two CLIs
+    cannot drift: every flag that feeds `ServeConfig` is declared ONCE,
+    here, where the conformance-axes lint cross-checks it against the
+    fixture (tools/analyze/conformance_axes.py)."""
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--policy", default="zipcache")
     ap.add_argument("--saliency-ratio", type=float, default=0.4)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--continuous", action="store_true",
-                    help="continuous-batching engine (submit/step/result)")
     ap.add_argument("--backend", default="mixed", choices=("mixed", "paged"),
                     help="KV cache layout: mixed = dense per-slot arrays "
                          "(mesh-shardable); paged = page-pool payload behind "
@@ -116,10 +117,16 @@ def main(argv=None):
                          "re-admit it later by replaying those tokens — "
                          "deterministic, the victim's final tokens are "
                          "unchanged; off never evicts")
-    args = ap.parse_args(argv)
+
+
+def validate_engine_args(args, ap: argparse.ArgumentParser,
+                         continuous: bool) -> None:
+    """Reject invalid flag combinations instead of silently ignoring them
+    ("reject instead of misleading").  Shared by both CLIs; `continuous`
+    is the caller's engine mode (the HTTP front is always continuous)."""
     if args.paged_kernel == "on" and args.backend != "paged":
         ap.error("--paged-kernel on requires --backend paged")
-    if args.scheduler != "fifo" and not args.continuous:
+    if args.scheduler != "fifo" and not continuous:
         ap.error("--scheduler requires --continuous (the lockstep engine "
                  "has no admission queue to schedule)")
     if args.preemption == "recompute" and args.scheduler != "priority":
@@ -128,11 +135,57 @@ def main(argv=None):
         ap.error("--preemption recompute requires --scheduler priority")
     if args.page_allocator == "freelist" and args.backend != "paged":
         ap.error("--page-allocator freelist requires --backend paged")
-    if args.page_allocator == "freelist" and not args.continuous:
+    if args.page_allocator == "freelist" and not continuous:
         # the lockstep engine's caches come from compress_prefill, which is
         # always the static layout — a silent no-op would misreport memory
         ap.error("--page-allocator freelist requires --continuous (the "
                  "lockstep engine has no admission events to allocate on)")
+    # these two only exist under the free-list allocator: a non-default
+    # value anywhere else would be silently ignored — the exact failure
+    # mode every other guard here rejects
+    if args.pool_fraction != 1.0 and args.page_allocator != "freelist":
+        ap.error("--pool-fraction requires --page-allocator freelist (the "
+                 "static assignment always provisions the full worst case)")
+    if args.admit_watermark != 0.0 and args.page_allocator != "freelist":
+        ap.error("--admit-watermark requires --page-allocator freelist "
+                 "(static/mixed layouts have no admission headroom to hold)")
+
+
+def build_serve_config(args) -> ServeConfig:
+    """args (from a parser `add_engine_args` populated) -> `ServeConfig`.
+    The single place CLI flags meet ServeConfig — the conformance-axes
+    lint reads exactly this call to learn which flags feed which fields."""
+    return ServeConfig(batch_size=args.batch, prompt_len=args.prompt_len,
+                       max_new_tokens=args.max_new, seed=args.seed,
+                       backend=args.backend, page_size=args.page_size,
+                       paged_kernel=args.paged_kernel == "on",
+                       page_allocator=args.page_allocator,
+                       pool_fraction=args.pool_fraction,
+                       admit_watermark=args.admit_watermark,
+                       scheduler=args.scheduler,
+                       preemption=args.preemption)
+
+
+def build_compression_config(args) -> CompressionConfig:
+    """args -> `CompressionConfig` (smoke shrinks the fold cadence so short
+    runs still cross a recompression)."""
+    kw = {}
+    if args.policy in ("zipcache", "mikv"):
+        kw["saliency_ratio"] = args.saliency_ratio
+    ccfg = CompressionConfig.preset(args.policy, **kw)
+    return type(ccfg)(**{**ccfg.__dict__,
+                         "fp_window": 16, "recompress_interval": 16}) \
+        if args.smoke else ccfg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    add_engine_args(ap)
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine (submit/step/result)")
+    args = ap.parse_args(argv)
+    validate_engine_args(args, ap, continuous=args.continuous)
 
     cfg = configs.get_arch(args.arch, smoke=args.smoke)
     mesh = None
@@ -142,21 +195,8 @@ def main(argv=None):
         d, m = (int(t) for t in args.mesh.split("x"))
         mesh = mesh_lib.make_mesh((d, m), ("data", "model"))
 
-    kw = {}
-    if args.policy in ("zipcache", "mikv"):
-        kw["saliency_ratio"] = args.saliency_ratio
-    ccfg = CompressionConfig.preset(args.policy, **kw)
-    ccfg = type(ccfg)(**{**ccfg.__dict__, "fp_window": 16, "recompress_interval": 16}) \
-        if args.smoke else ccfg
-    scfg = ServeConfig(batch_size=args.batch, prompt_len=args.prompt_len,
-                       max_new_tokens=args.max_new, seed=args.seed,
-                       backend=args.backend, page_size=args.page_size,
-                       paged_kernel=args.paged_kernel == "on",
-                       page_allocator=args.page_allocator,
-                       pool_fraction=args.pool_fraction,
-                       admit_watermark=args.admit_watermark,
-                       scheduler=args.scheduler,
-                       preemption=args.preemption)
+    ccfg = build_compression_config(args)
+    scfg = build_serve_config(args)
     # (--backend paged with a mesh is rejected where the backend is built,
     # launch/steps.serve_ctx — programmatic callers hit the same guard)
 

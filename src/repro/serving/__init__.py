@@ -14,12 +14,18 @@ from repro.serving.engine import (  # noqa: F401
     probe_flag,
 )
 from repro.serving.events import (  # noqa: F401
+    CallbackErrorEvent,
+    CancelledEvent,
     EngineClosedError,
     Event,
     FinishedEvent,
     PreemptedEvent,
     TokenEvent,
     UnknownRequestError,
+)
+from repro.serving.router import (  # noqa: F401
+    EngineRouter,
+    NoReplicaError,
 )
 from repro.serving.scheduler import (  # noqa: F401
     FIFOScheduler,

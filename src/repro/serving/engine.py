@@ -166,12 +166,21 @@ class Request:                     # removal must not compare token arrays
     """One generation request.
 
     tokens: (<= prompt_len,) int32 prompt ids (left-padded on admission).
+        `submit()` COPIES them: later caller-side mutation of the buffer
+        cannot change what recompute replays after a preemption.
     max_new_tokens: per-request budget, capped by ServeConfig.max_new_tokens.
     stop_tokens: generation stops when one of these is produced (EOS).
     priority: scheduling urgency (higher = sooner; only the priority
         scheduler reads it — FIFO ignores priorities entirely).
+    deadline_s: wall-clock budget from submit, in seconds.  A request whose
+        deadline expires — queued OR running — is cancelled at the next
+        step boundary (`finish_reason="cancelled"`, typed `CancelledEvent`
+        with reason "deadline"); schedulers see the field on the Request
+        they are ordering.  None = no deadline.
     on_token: optional callback invoked with each fresh `TokenEvent` as the
-        request decodes (the push-style twin of `engine.stream`).
+        request decodes (the push-style twin of `engine.stream`).  A raising
+        callback is detached and surfaced as a `CallbackErrorEvent`; it can
+        never corrupt the step it fired in.
     """
     tokens: np.ndarray
     id: Optional[str] = None
@@ -179,6 +188,7 @@ class Request:                     # removal must not compare token arrays
     max_new_tokens: Optional[int] = None
     stop_tokens: Tuple[int, ...] = ()
     priority: int = 0
+    deadline_s: Optional[float] = None
     on_token: Optional[Callable[[events_lib.TokenEvent], None]] = None
 
 
@@ -190,10 +200,15 @@ class RequestOutput:
     recompute replays), decode_s, tok_per_s, first_token_s (submit -> first
     sampled token), preempted_s (wall time spent evicted), n_preemptions,
     and n_deferrals (admissions the page pool deferred for THIS request —
-    the per-request view of `pool_stats()`'s cumulative counters)."""
+    the per-request view of `pool_stats()`'s cumulative counters).
+
+    tok_per_s counts DECODE-phase tokens only: the first token is sampled
+    from the prefill logits at admission, so a request whose only token is
+    its first (e.g. the prompt immediately hits a stop token) reports 0.0,
+    not prompt-dependent noise divided by ~zero decode seconds."""
     id: str
     tokens: np.ndarray               # (n_generated,) int32, stop token included
-    finish_reason: str               # "stop" | "length"
+    finish_reason: str               # "stop" | "length" | "cancelled"
     timings: Dict[str, float]
 
 
@@ -399,7 +414,10 @@ class EngineCore(_EngineBase):
     admit (and, with ``preemption="recompute"``, whether to evict a running
     victim first), decodes one token for every active slot, retires
     finished requests, and returns the typed events it produced
-    (`TokenEvent` / `PreemptedEvent` / `FinishedEvent`).
+    (`TokenEvent` / `PreemptedEvent` / `FinishedEvent` / `CancelledEvent`
+    / `CallbackErrorEvent`).  ``cancel(rid)`` retires a queued or running
+    request early (slot freed, pages returned) — the hook the network
+    front uses for client disconnects and expired deadlines.
 
     The decode batch never changes shape: admission prefills one request
     (batch=1) and inserts its cache slice into a free slot of the running
@@ -464,8 +482,12 @@ class EngineCore(_EngineBase):
 
     @property
     def pending(self) -> bool:
-        """True while any submitted request is still queued or decoding."""
-        return bool(self.queue) or any(s is not None for s in self.slots)
+        """True while any submitted request is still queued or decoding, or
+        undelivered events are buffered: a between-steps `cancel()` appends
+        its `CancelledEvent` into the NEXT step's drain, so drivers that
+        step while `pending` must take one more step to deliver it."""
+        return (bool(self.queue) or any(s is not None for s in self.slots)
+                or bool(self._events))
 
     def _request_budget(self, request: Request) -> int:
         return (request.max_new_tokens if request.max_new_tokens is not None
@@ -492,7 +514,12 @@ class EngineCore(_EngineBase):
             raise events_lib.EngineClosedError(
                 "engine is shut down: it drains what it has but accepts no "
                 "new requests")
-        n = int(np.asarray(request.tokens).shape[-1])
+        # Copy the prompt NOW: admission may be steps away, and recompute
+        # re-prefills from request.tokens — a caller mutating its buffer
+        # after submit must not change what replay prefills (the bitwise
+        # preemption guarantee re-runs the ORIGINAL admission).
+        request.tokens = np.array(request.tokens, dtype=np.int32)
+        n = int(request.tokens.shape[-1])
         if n > self.scfg.prompt_len:
             raise ValueError(
                 f"prompt of {n} tokens exceeds engine prompt_len "
@@ -518,7 +545,12 @@ class EngineCore(_EngineBase):
             raise ValueError(
                 f"request id {request.id!r} already submitted; ids must be "
                 "unique (re-submitting the same Request object counts)")
+        if request.deadline_s is not None and request.deadline_s <= 0:
+            raise ValueError(
+                f"deadline_s must be positive, got {request.deadline_s}")
         request._t_submit = time.perf_counter()
+        request._deadline = (None if request.deadline_s is None
+                             else request._t_submit + request.deadline_s)
         request._seq = next(self._seq)
         request._t_first_admit = None    # first admission (queued_s)
         request._t_first = None          # first sampled token (first_token_s)
@@ -555,7 +587,8 @@ class EngineCore(_EngineBase):
 
     def result(self, request_id: str) -> Optional[RequestOutput]:
         """The finished request's RequestOutput — `.tokens` (stop token
-        included), `.finish_reason` ("stop" | "length") and `.timings`
+        included), `.finish_reason` ("stop" | "length" | "cancelled") and
+        `.timings`
         (see `RequestOutput`) — or None while it is still queued or running
         (use `poll` to distinguish).  Raises `events.UnknownRequestError`
         for an id this engine never saw."""
@@ -574,7 +607,9 @@ class EngineCore(_EngineBase):
         full stream from its own cursor); the concatenation of yielded
         tokens is bitwise `result(request_id).tokens`.  Preemption does not
         disturb a live stream: recompute re-derives exactly the retained
-        tokens, so nothing already yielded is ever revised.  Raises
+        tokens, so nothing already yielded is ever revised.  A cancelled
+        request's stream terminates after the tokens decoded so far (check
+        `result(rid).finish_reason` to distinguish).  Raises
         `events.UnknownRequestError` for an id this engine never saw."""
         if request_id not in self._known:
             raise events_lib.UnknownRequestError(request_id)
@@ -592,6 +627,83 @@ class EngineCore(_EngineBase):
             if out is not None:
                 return
             self.step()
+
+    def cancel(self, request_id: str, reason: str = "client") -> bool:
+        """Retire a queued or running request early (client disconnect,
+        expired deadline, or an explicit API call).
+
+        The request's slot is freed and every page it held returned to the
+        pools (visible in `pool_stats()` immediately); `result(request_id)`
+        carries the tokens decoded so far with
+        ``finish_reason="cancelled"``, and a typed `CancelledEvent` is
+        emitted — buffered if the engine is between steps, returned by the
+        next `step()`.  Returns True if the request was cancelled, False if
+        it had already finished (its result stands — cancellation of a done
+        request is a no-op, not an error).  Raises
+        `events.UnknownRequestError` for an id this engine never saw.
+
+        Safe to call from outside the step loop (an async server loop
+        reacting to a dropped socket): all state it touches is host-side,
+        and the freed slot/pages are simply absent from the next step's
+        admission plan."""
+        if request_id not in self._known:
+            raise events_lib.UnknownRequestError(request_id)
+        if request_id in self.results:
+            return False
+        for slot_id, s in enumerate(self.slots):
+            if s is not None and s.request.id == request_id:
+                self._retire(slot_id, "cancelled", cancel_reason=reason)
+                return True
+        # queued (possibly evicted mid-decode and waiting on recompute):
+        # never re-admitted, so retire it here with whatever it decoded
+        req = next(r for r in self.queue if r.id == request_id)
+        self.queue.remove(req)
+        now = time.perf_counter()
+        resume = getattr(req, "_resume_tokens", None)
+        tokens = list(resume) if resume is not None else []
+        preempt_s = req._preempt_s
+        if resume is not None:
+            preempt_s += now - req._t_preempt
+        dec_tok = max(len(tokens) - 1, 0)
+        self.results[req.id] = RequestOutput(
+            id=req.id,
+            tokens=np.asarray(tokens, np.int32),
+            finish_reason="cancelled",
+            timings={
+                "queued_s": (req._t_first_admit if req._t_first_admit
+                             is not None else now) - req._t_submit,
+                "prefill_s": req._prefill_s_acc,
+                "decode_s": req._decode_s_acc,
+                "tok_per_s": (dec_tok / req._decode_s_acc
+                              if dec_tok and req._decode_s_acc > 0 else 0.0),
+                "first_token_s": (req._t_first if req._t_first is not None
+                                  else now) - req._t_submit,
+                "preempted_s": preempt_s,
+                "n_preemptions": req._n_preempts,
+                "n_deferrals": req._n_deferrals,
+            })
+        self._token_log.pop(req.id, None)
+        if self._last_deferred == req.id:
+            self._last_deferred = None   # its blocked span ends with it
+        self._events.append(events_lib.CancelledEvent(
+            req.id, self._step_no, n_tokens=len(tokens), reason=reason))
+        return True
+
+    def _sweep_deadlines(self) -> None:
+        """Cancel every queued or running request whose `Request.deadline_s`
+        budget has expired (reason "deadline").  Runs at the top of each
+        `step()`, before admission, so an expired queued request never
+        wastes a prefill."""
+        now = time.perf_counter()
+        expired = [r.id for r in self.queue
+                   if getattr(r, "_deadline", None) is not None
+                   and now > r._deadline]
+        expired += [s.request.id for s in self.slots
+                    if s is not None
+                    and getattr(s.request, "_deadline", None) is not None
+                    and now > s.request._deadline]
+        for rid in expired:
+            self.cancel(rid, reason="deadline")
 
     def shutdown(self) -> None:
         """Stop accepting new work: later `submit()` calls raise
@@ -659,11 +771,17 @@ class EngineCore(_EngineBase):
             jnp.asarray(slot_id, jnp.int32))  # sync: ok(one scalar upload per retire/preempt event, not per step)
         self.slots[slot_id] = None
 
-    def _retire(self, slot_id: int, reason: str) -> None:
+    def _retire(self, slot_id: int, reason: str,
+                cancel_reason: Optional[str] = None) -> None:
         s = self.slots[slot_id]
         req = s.request
         now = time.perf_counter()
-        decode_s = max(now - s.t_admit - s.prefill_s, 1e-9) + req._decode_s_acc
+        decode_s = max(now - s.t_admit - s.prefill_s, 0.0) + req._decode_s_acc
+        # the first token is sampled from the PREFILL logits at admission —
+        # only the rest are decode-phase work.  A request that stops on its
+        # very first token did zero decoding: report 0.0, not
+        # 1 token / ~1e-9 s (the old clamp made serve.py print ~1e9 tok/s)
+        dec_tok = max(len(s.generated) - 1, 0)
         first_admit = (req._t_first_admit if req._t_first_admit is not None
                        else s.t_admit)
         self.results[req.id] = RequestOutput(
@@ -674,16 +792,23 @@ class EngineCore(_EngineBase):
                 "queued_s": first_admit - s.t_submit,
                 "prefill_s": s.prefill_s + req._prefill_s_acc,
                 "decode_s": decode_s,
-                "tok_per_s": len(s.generated) / decode_s,
+                "tok_per_s": (dec_tok / decode_s
+                              if dec_tok and decode_s > 0 else 0.0),
                 "first_token_s": (req._t_first if req._t_first is not None
                                   else now) - s.t_submit,
                 "preempted_s": req._preempt_s,
                 "n_preemptions": req._n_preempts,
                 "n_deferrals": req._n_deferrals,
             })
-        self._events.append(events_lib.FinishedEvent(
-            req.id, self._step_no, finish_reason=reason,
-            n_tokens=len(s.generated)))
+        if reason == "cancelled":
+            # typed terminal event IN PLACE of FinishedEvent, never both
+            self._events.append(events_lib.CancelledEvent(
+                req.id, self._step_no, n_tokens=len(s.generated),
+                reason=cancel_reason if cancel_reason is not None else "client"))
+        else:
+            self._events.append(events_lib.FinishedEvent(
+                req.id, self._step_no, finish_reason=reason,
+                n_tokens=len(s.generated)))
         # the result array now carries the tokens; keeping the log too would
         # leak one int list per request for the engine's lifetime (stream()
         # reads finished requests from results)
@@ -705,13 +830,28 @@ class EngineCore(_EngineBase):
         return False
 
     def _emit_token(self, request: Request, token: int, index: int) -> None:
-        """One fresh token: event, stream log, optional push callback."""
+        """One fresh token: event, stream log, optional push callback.
+
+        A raising callback (exactly what a socket write becomes when the
+        client hangs up) must not unwind `step()` mid-iteration — that
+        would abort between the token append and `_fold(due)` / `since_rc`
+        reset, corrupting the fold cadence the bitwise-conformance
+        guarantee rests on.  Contain it: detach the callback (a broken
+        sink never raises twice) and surface a `CallbackErrorEvent`; the
+        step stays transactional and tokens stay bitwise identical to a
+        callback-free run (tests/test_serving.py)."""
         ev = events_lib.TokenEvent(request.id, self._step_no,
                                    token=int(token), index=index)
         self._events.append(ev)
         self._token_log[request.id].append(int(token))
         if request.on_token is not None:
-            request.on_token(ev)
+            try:
+                request.on_token(ev)
+            except Exception as e:  # noqa: BLE001 — any sink failure contained
+                request.on_token = None
+                self._events.append(events_lib.CallbackErrorEvent(
+                    request.id, self._step_no,
+                    error=f"{type(e).__name__}: {e}"))
 
     def _pool_view(self) -> scheduler_lib.PoolView:
         return scheduler_lib.PoolView(
@@ -939,13 +1079,19 @@ class EngineCore(_EngineBase):
         host-side, between the jitted programs: a staging-window page is
         granted when a slot's append cursor crosses into it, hi/lo growth
         pages are granted immediately before a fold's write-back, and the
-        emptied window's pages are returned immediately after."""
-        self._events = []
+        emptied window's pages are returned immediately after.
+
+        Events are DRAINED at return, not reset at entry: a `cancel()`
+        issued between steps (an async server loop reacting to a
+        disconnect) buffers its `CancelledEvent` into the next step's
+        return value instead of being dropped."""
+        self._sweep_deadlines()
         self._admit()
         b = self.scfg.batch_size
         active_ids = [i for i in range(b) if self.slots[i] is not None]
         if not active_ids:
-            return self._events
+            events, self._events = self._events, []
+            return events
         interval = self.ccfg.recompress_interval
         if self._alloc is not None:
             for i in active_ids:
@@ -990,7 +1136,8 @@ class EngineCore(_EngineBase):
             for i in due:
                 self.slots[i].since_rc = 0
         self._step_no += 1
-        return self._events
+        events, self._events = self._events, []
+        return events
 
 
 class ContinuousEngine(EngineCore):

@@ -1,7 +1,7 @@
 """Typed event stream + typed API errors for the serving engine.
 
 `EngineCore.step()` returns the list of events that iteration produced, in
-order.  Three event kinds cover the request lifecycle after admission:
+order.  Five event kinds cover the request lifecycle after admission:
 
   * ``TokenEvent``     — one freshly decoded token (``index`` is its position
     in the request's output stream; the first token, sampled from the
@@ -12,6 +12,20 @@ order.  Three event kinds cover the request lifecycle after admission:
     to the free pools, its ``n_generated`` tokens retained host-side); the
     request is back in the queue and will be re-admitted by recompute.
   * ``FinishedEvent``  — the request retired; ``result(id)`` is available.
+  * ``CancelledEvent`` — the request was retired early by
+    ``EngineCore.cancel`` (a client disconnect, an expired
+    ``Request.deadline_s``, or an explicit API call): its slot is freed,
+    its pages returned, and ``result(id)`` carries the tokens decoded so
+    far with ``finish_reason="cancelled"``.  Terminal, in place of (never
+    in addition to) a `FinishedEvent`.
+  * ``CallbackErrorEvent`` — a `Request.on_token` callback raised.  The
+    engine contains the exception (``step()`` stays transactional — slot
+    counters, fold cadence, and tokens are untouched), detaches the
+    callback so a broken sink cannot raise twice, and surfaces the error
+    here instead of unwinding the step.
+
+Events raised between steps (``cancel()`` from an async server loop) are
+buffered and returned by the NEXT ``step()`` call, never dropped.
 
 Consumers: ``engine.stream(request_id)`` (a generator yielding tokens as
 they decode — it drives ``step()`` itself when its buffer runs dry),
@@ -69,3 +83,14 @@ class PreemptedEvent(Event):
 class FinishedEvent(Event):
     finish_reason: str  # "stop" | "length"
     n_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CancelledEvent(Event):
+    n_tokens: int       # tokens decoded (and already delivered) before cancel
+    reason: str         # "client" | "deadline" | caller-supplied
+
+
+@dataclasses.dataclass(frozen=True)
+class CallbackErrorEvent(Event):
+    error: str          # "<ExceptionType>: <message>" from the raised callback

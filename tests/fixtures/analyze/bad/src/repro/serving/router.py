@@ -1,0 +1,19 @@
+"""Fixture: router that drags device math into placement (purity violations)."""
+
+import jax
+import jax.numpy as jnp
+
+
+class EngineRouter:
+    def __init__(self, replicas):
+        self.replicas = list(replicas)
+
+    def load(self, idx):
+        eng = self.replicas[idx]
+        busy = sum(1 for s in eng.slots if s is not None)
+        # device reduction over a host scalar: the exact churn purity forbids
+        return float(jnp.asarray([busy + len(eng.queue)]).sum())
+
+    def pick(self):
+        loads = jnp.asarray([self.load(i) for i in range(len(self.replicas))])
+        return int(jax.device_get(loads.argmin()))

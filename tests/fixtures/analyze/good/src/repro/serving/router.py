@@ -1,0 +1,18 @@
+"""Fixture: host-pure replica router — plain-python placement bookkeeping."""
+
+
+class EngineRouter:
+    def __init__(self, replicas):
+        self.replicas = list(replicas)
+        self.placement = {}
+
+    def load(self, idx):
+        eng = self.replicas[idx]
+        busy = sum(1 for s in eng.slots if s is not None)
+        return (busy + len(eng.queue)) / max(len(eng.slots), 1)
+
+    def submit(self, request):
+        idx = min(range(len(self.replicas)), key=self.load)
+        rid = self.replicas[idx].submit(request)
+        self.placement[rid] = idx
+        return rid

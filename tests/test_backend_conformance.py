@@ -319,6 +319,62 @@ def test_streaming_concat_matches_result(engine_outputs):
             assert streams[name][rid] == out.tokens.tolist(), (name, rid)
 
 
+def test_cancellation_axis_survivors_bitwise_and_pages_returned(engine_outputs):
+    """The CANCELLATION axis of the conformance matrix: retiring a running
+    request early (`EngineCore.cancel` — the client-disconnect path of the
+    HTTP front) must be invisible to every other request.  A fourth request
+    is admitted mid-run and cancelled mid-decode; its pages return to the
+    pool immediately and the freed slot admits the next queued request.
+    Like the admit-watermark axis, the admission SCHEDULE legitimately
+    shifts — admission-time independence is what guarantees the survivors'
+    tokens stay bitwise the mixed reference anyway (only token/finish
+    identity is asserted, not cadence snapshots)."""
+    outs, _, _, _ = engine_outputs
+    ref = list(outs["mixed"].values())        # r0, r1, r2 in submission order
+    rng = np.random.default_rng(0)            # prompts[0..2] == the fixture's
+    cfg = configs.get_arch("yi-6b", smoke=True)
+    ccfg = _ccfg()
+    params = registry.materialize_params(cfg, 0)
+    prompts = [rng.integers(2, cfg.vocab, size=(48,)).astype(np.int32)
+               for _ in range(4)]
+    scfg = ServeConfig(batch_size=2, prompt_len=48, max_new_tokens=12,
+                       page_size=8, backend="paged",
+                       page_allocator="freelist", pool_fraction=1.0)
+    eng = ContinuousEngine(cfg, ccfg, scfg, params)
+    r0 = eng.submit(Request(tokens=prompts[0]))
+    r1 = eng.submit(Request(tokens=prompts[1], max_new_tokens=6))
+    for _ in range(4):
+        eng.step()
+    rc = eng.submit(Request(tokens=prompts[3]))   # the victim-to-be
+    r2 = eng.submit(Request(tokens=prompts[2]))   # queued behind it
+    while eng.poll(rc) == "queued":               # r1 retires, rc backfills
+        eng.step()
+    for _ in range(2):                            # rc decodes a little
+        eng.step()
+    used_before = {k: v["used"] for k, v in eng.pool_stats().items()
+                   if isinstance(v, dict)}
+    assert eng.cancel(rc)
+    used_after = {k: v["used"] for k, v in eng.pool_stats().items()
+                  if isinstance(v, dict)}
+    # the cancelled slot's pages are back BEFORE the next step runs
+    assert sum(used_after.values()) < sum(used_before.values()), (
+        used_before, used_after)
+    evs = eng.step()          # the buffered CancelledEvent surfaces here
+    from repro.serving import CancelledEvent
+    assert any(isinstance(e, CancelledEvent) and e.request_id == rc
+               for e in evs), evs
+    res = eng.run()
+    assert res[rc].finish_reason == "cancelled"
+    assert len(res[rc].tokens) >= 1               # partial output delivered
+    # every page returned once everything drained
+    final = eng.pool_stats()
+    assert all(v["used"] == 0 for v in final.values() if isinstance(v, dict))
+    # survivors: bitwise the mixed reference, cancellation invisible
+    for out_ref, rid in zip(ref, (r0, r1, r2)):
+        np.testing.assert_array_equal(out_ref.tokens, res[rid].tokens)
+        assert out_ref.finish_reason == res[rid].finish_reason
+
+
 def test_mla_decode_token_identical_across_backends(rng):
     """MLA's absorbed decode reads cache internals through backend.dense():
     the (rope-key, latent) streams — distinct k/v dims, one kv head — must

@@ -121,6 +121,63 @@ def test_paged_freelist_engine_zero_compiles_at_steady_state():
     assert eng.pool_stats()["deferrals"] > deferrals_before
 
 
+def test_http_server_loop_zero_compiles_at_steady_state():
+    """The acceptance criterion for the network front: the asyncio
+    HTTP/SSE server driving the engine must stay on warm programs too.
+    Warmup traffic arrives over a REAL socket (POST + SSE back), then an
+    identically-shaped second pass on the SAME engine — served through a
+    fresh `HttpFrontend` session, since programs cache per jit wrapper,
+    i.e. per engine — compiles exactly zero.  `stop(drain=False)` is the
+    piece that makes this provable: it detaches the server without
+    `shutdown()`-ing the engine between passes."""
+    import asyncio
+    import json
+
+    from repro.serving.http import HttpFrontend
+
+    cfg, eng = _engine()
+
+    async def _generate(port, payload):
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        body = json.dumps(payload).encode()
+        writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                      f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+        await writer.drain()
+        while (await reader.readline()) not in (b"\r\n", b""):
+            pass                               # response headers
+        tokens, final = [], None
+        while final is None:
+            line = (await reader.readline()).strip()
+            if line.startswith(b"data: "):
+                d = json.loads(line[6:])
+                if "token" in d:
+                    tokens.append(d["token"])
+                else:
+                    final = d
+        writer.close()
+        return tokens, final
+
+    async def _pass(prompts):
+        front = HttpFrontend(eng, port=0)
+        await front.start()
+        try:
+            results = await asyncio.gather(*[
+                _generate(front.port, {"tokens": p.tolist()}) for p in prompts])
+        finally:
+            await front.stop(drain=False)      # leave the engine warm + open
+        for tokens, final in results:
+            assert tokens == final["tokens"]   # SSE concat == result tokens
+        return results
+
+    with compile_guard.count_compiles() as warm:
+        asyncio.run(_pass(_prompts(cfg, seed=0, n=3)))
+    assert warm.count > 0, "warmup must compile (guard sanity check)"
+
+    with compile_guard.assert_no_compiles() as steady:
+        asyncio.run(_pass(_prompts(cfg, seed=1, n=3)))
+    assert steady.count == 0
+
+
 def test_guard_counts_fresh_compiles():
     """The guard itself: a brand-new program inside the region is counted
     and named; `assert_no_compiles` raises `RetraceError` on it."""

@@ -222,6 +222,47 @@ def test_stream_through_forced_preemption(preemption_scenario):
             sc["eng"].result(rid).tokens.tolist()
 
 
+def test_submit_copies_prompt_buffer_against_recompute_replay(rng):
+    """Satellite regression: `submit()` must COPY the caller's token
+    buffer.  Preempt+recompute replays the PROMPT long after submit
+    returned, so a caller recycling their buffer in the meantime would —
+    under aliasing — rewrite the replayed history and change the preempted
+    request's tokens.  Both longs' buffers are clobbered right after
+    submit; the outputs must still be bitwise the uncontended run's."""
+    cfg, ccfg, scfg, params = _setup(
+        backend="paged", page_size=8, page_allocator="freelist",
+        pool_fraction=1.0, scheduler="priority", preemption="recompute")
+    prompts = [rng.integers(2, cfg.vocab, size=(32,)).astype(np.int32)
+               for _ in range(4)]
+
+    ref = ContinuousEngine(cfg, ccfg, scfg, params)
+    ref_ids = [ref.submit(Request(tokens=prompts[i].copy(),
+                                  max_new_tokens=12)) for i in range(2)]
+    ref.run()
+    ref_tokens = [ref.result(r).tokens for r in ref_ids]
+
+    eng = ContinuousEngine(cfg, ccfg, scfg, params)
+    bufs = [prompts[0].copy(), prompts[1].copy()]
+    long_ids = [eng.submit(Request(tokens=b, max_new_tokens=12))
+                for b in bufs]
+    for b in bufs:
+        b[:] = 1                     # caller recycles the buffers at once
+    for _ in range(4):
+        eng.step()
+    # priority-2 shorts with both slots held: preempt -> recompute replay
+    for i in (2, 3):
+        eng.submit(Request(tokens=prompts[i], max_new_tokens=3, priority=2))
+    events = []
+    while eng.pending:
+        events += eng.step()
+    assert any(isinstance(e, PreemptedEvent) for e in events), \
+        "scenario must force a preemption for the replay path to run"
+    for rid, reft in zip(long_ids, ref_tokens):
+        out = eng.result(rid)
+        np.testing.assert_array_equal(out.tokens, reft)
+        assert out.finish_reason == "length"
+
+
 # ---------------------------------------------------------------------------
 # scheduler unit tests (no engine, no jit)
 # ---------------------------------------------------------------------------

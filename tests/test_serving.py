@@ -13,8 +13,9 @@ import pytest
 from repro import configs
 from repro.core.policy import CompressionConfig
 from repro.models import registry
-from repro.serving import (ContinuousEngine, Request, SamplingParams,
-                           ServeConfig, ServingEngine, pack_requests)
+from repro.serving import (CallbackErrorEvent, ContinuousEngine, Request,
+                           SamplingParams, ServeConfig, ServingEngine,
+                           pack_requests)
 from repro.serving.engine import probe_flag
 
 
@@ -225,6 +226,63 @@ def test_continuous_eos_frees_slot_and_respects_budgets(rng):
         assert res[r].timings["tok_per_s"] > 0
     assert not eng.pending
     assert all(s is None for s in eng.slots)  # every slot freed
+
+
+def test_on_token_exception_contained_and_bitwise(rng):
+    """Satellite regression: a raising `on_token` sink must not poison the
+    step.  The engine detaches the callback after its FIRST raise, emits
+    exactly one `CallbackErrorEvent`, and the run's tokens stay bitwise
+    identical to a callback-free run — for the raising request AND its
+    slot-mate (the step is transactional; a sink failure cannot leak into
+    scheduling or sampling)."""
+    cfg, ccfg, scfg, params = _continuous_setup()
+    prompts = [rng.integers(2, cfg.vocab, size=(48,)).astype(np.int32)
+               for _ in range(2)]
+
+    ref = ContinuousEngine(cfg, ccfg, scfg, params)
+    ref_ids = [ref.submit(Request(tokens=p)) for p in prompts]
+    ref.run()
+    ref_tokens = [ref.result(r).tokens for r in ref_ids]
+
+    calls = []
+
+    def bomb(ev):
+        calls.append(ev)
+        raise RuntimeError("sink exploded")
+
+    eng = ContinuousEngine(cfg, ccfg, scfg, params)
+    r0 = eng.submit(Request(tokens=prompts[0], on_token=bomb))
+    r1 = eng.submit(Request(tokens=prompts[1]))
+    events = []
+    while eng.pending:
+        events += eng.step()
+
+    errs = [e for e in events if isinstance(e, CallbackErrorEvent)]
+    assert len(errs) == 1 and errs[0].request_id == r0
+    assert "RuntimeError" in errs[0].error
+    assert len(calls) == 1            # detached after the first raise
+    for rid, reft in zip((r0, r1), ref_tokens):
+        out = eng.result(rid)
+        np.testing.assert_array_equal(out.tokens, reft)
+        assert out.finish_reason == "length"
+
+
+def test_tok_per_s_zero_when_first_token_is_stop(rng):
+    """Satellite regression: when the FIRST decoded token is a stop token
+    the request has zero decode-phase tokens (the first token is sampled
+    during prefill), so `tok_per_s` must report 0.0 — not a division
+    artifact inflated by a near-zero decode wall."""
+    cfg, ccfg, scfg, params = _continuous_setup()
+    prompt = rng.integers(2, cfg.vocab, size=(48,)).astype(np.int32)
+    probe = ContinuousEngine(cfg, ccfg, scfg, params)
+    pid = probe.submit(Request(tokens=prompt))
+    first = int(probe.run()[pid].tokens[0])
+
+    eng = ContinuousEngine(cfg, ccfg, scfg, params)
+    rid = eng.submit(Request(tokens=prompt, stop_tokens=(first,)))
+    out = eng.run()[rid]
+    assert out.finish_reason == "stop" and len(out.tokens) == 1
+    assert out.timings["tok_per_s"] == 0.0
 
 
 def test_continuous_per_slot_recompress_cadence(rng):

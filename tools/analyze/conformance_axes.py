@@ -21,6 +21,13 @@ This checker cross-references three surfaces:
 Every flag-fed field must appear in the fixture or carry a justified
 exemption below.  Exemptions are per-entry and reviewed like code — they
 are the checker's analogue of the suppression comment.
+
+A fourth surface when present: `repro.launch.serve_http` (the HTTP front)
+must populate its engine flags through `serve.add_engine_args` and build
+its config through `serve.build_serve_config` — never fork its own
+``ServeConfig(...)`` call.  The cross-reference above reads ONLY serve.py;
+a forked config call in serve_http would be a flag->field mapping this
+checker is blind to, so forking is itself the violation.
 """
 
 from __future__ import annotations
@@ -34,6 +41,7 @@ from tools.analyze import common
 CHECKER = "axis"
 
 SERVE = "src/repro/launch/serve.py"
+SERVE_HTTP = "src/repro/launch/serve_http.py"   # optional: checked if present
 FIXTURE = "tests/test_backend_conformance.py"
 
 # ServeConfig fields a serve flag feeds that are deliberately NOT a
@@ -93,6 +101,42 @@ def fixture_axes(fixture_path: Path) -> Set[str]:
     return axes
 
 
+def serve_http_sharing(root: Path) -> List[common.Violation]:
+    """The HTTP front must SHARE serve.py's engine-flag surface, not fork
+    it: this checker learns flag->field mappings from serve.py alone, so a
+    private ``ServeConfig(...)`` (or a skipped `add_engine_args`) in
+    serve_http.py would be an unchecked numerics knob.  No-op when the
+    module does not exist (fixture trees, pre-HTTP checkouts)."""
+    path = root / SERVE_HTTP
+    if not path.exists():
+        return []
+    tree = ast.parse(path.read_text(), filename=str(path))
+    calls = {common.dotted_name(n.func) or "" for n in ast.walk(tree)
+             if isinstance(n, ast.Call)}
+    violations: List[common.Violation] = []
+
+    def uses(helper: str) -> bool:
+        return any(c == helper or c.endswith(f".{helper}") for c in calls)
+
+    for helper in ("add_engine_args", "build_serve_config"):
+        if not uses(helper):
+            violations.append(common.Violation(
+                CHECKER, SERVE_HTTP, 1, "serve_http.main",
+                f"http-missing-{helper}",
+                f"serve_http.py never calls serve.{helper} — the HTTP "
+                "front must share the batch driver's engine-flag surface "
+                "so the conformance cross-check (which reads serve.py "
+                "only) covers both CLIs"))
+    if any(c == "ServeConfig" or c.endswith(".ServeConfig") for c in calls):
+        violations.append(common.Violation(
+            CHECKER, SERVE_HTTP, 1, "serve_http.main",
+            "http-forked-serveconfig",
+            "serve_http.py constructs ServeConfig directly — route it "
+            "through serve.build_serve_config so flag->field mappings "
+            "stay in the one file this checker reads"))
+    return violations
+
+
 def _live_parser_flags(root: Path) -> Optional[Set[str]]:
     """Capture `repro.launch.serve`'s real parser (check_docs idiom) and
     return its --flags; None if the import environment is unavailable."""
@@ -146,6 +190,7 @@ def check(root: Path, live: bool = True) -> List[common.Violation]:
 
     fields = serve_flag_fields(serve_path)
     axes = fixture_axes(fixture_path)
+    violations.extend(serve_http_sharing(root))
 
     if live:
         live_flags = _live_parser_flags(root)

@@ -36,6 +36,7 @@ CHECKER = "purity"
 DEFAULT_MODULES: Sequence[str] = (
     "src/repro/core/alloc.py",
     "src/repro/serving/scheduler.py",
+    "src/repro/serving/router.py",
 )
 
 _ALLOWED_JAX_ATTRS = {"tree_util"}

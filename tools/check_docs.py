@@ -3,10 +3,13 @@
 
 Validations (all against the LIVE code, so drift fails CI):
 
-  1. README's serving-CLI flag table vs the actual `repro.launch.serve`
-     argument parser — bidirectional: every table row must name a real
-     flag, every parser flag must be documented, and the table's defaults
-     must match the parser's.
+  1. README's serving-CLI flag tables vs the actual parsers — bidirectional:
+     every table row must name a real flag with the parser's default, and
+     every parser flag must be documented.  The FIRST table is
+     `repro.launch.serve`'s full surface; the SECOND documents
+     `repro.launch.serve_http`'s HTTP-only flags (its engine flags are
+     shared with serve via `serve.add_engine_args`, so coverage for them
+     is inherited from the first table).
   2. Fenced ```python blocks in README.md and docs/*.md must at least
      parse (compile(); nothing is executed).
   3. Backtick-quoted repository paths in the docs must exist (paths are
@@ -47,11 +50,12 @@ def err(msg: str) -> None:
 # 1. the README flag table vs the serve driver's parser
 # ---------------------------------------------------------------------------
 
-def capture_serve_parser() -> argparse.ArgumentParser:
-    """Grab the parser `repro.launch.serve.main` builds, without running
-    the driver: parse_args is intercepted before any model work starts."""
-    import repro.launch.serve as serve_mod
+def capture_parser(module: str) -> argparse.ArgumentParser:
+    """Grab the parser `<module>.main` builds, without running the driver:
+    parse_args is intercepted before any model work starts."""
+    import importlib
 
+    mod = importlib.import_module(module)
     captured: dict = {}
 
     class _Captured(Exception):
@@ -65,7 +69,7 @@ def capture_serve_parser() -> argparse.ArgumentParser:
 
     argparse.ArgumentParser.parse_args = grab
     try:
-        serve_mod.main([])
+        mod.main([])
     except _Captured:
         pass
     finally:
@@ -73,14 +77,23 @@ def capture_serve_parser() -> argparse.ArgumentParser:
     return captured["parser"]
 
 
-def parse_flag_table(md: str) -> dict:
-    """README flag table rows -> {flag: default-cell-text}."""
-    out = {}
+def parse_flag_tables(md: str) -> list:
+    """Every flag table in the doc, in order: a list of
+    {flag: default-cell-text}.  Tables are split on non-table lines
+    (header/separator rows keep a table open), so each markdown table is
+    one dict and section scoping falls out of document order."""
+    tables: list = []
+    cur: dict = {}
     for line in md.splitlines():
         m = re.match(r"\|\s*`(--[\w-]+)`\s*\|\s*(.*?)\s*\|", line)
         if m:
-            out[m.group(1)] = m.group(2).strip("`").strip()
-    return out
+            cur[m.group(1)] = m.group(2).strip("`").strip()
+        elif not line.lstrip().startswith("|") and cur:
+            tables.append(cur)
+            cur = {}
+    if cur:
+        tables.append(cur)
+    return tables
 
 
 def default_matches(action: argparse.Action, cell: str) -> bool:
@@ -91,18 +104,24 @@ def default_matches(action: argparse.Action, cell: str) -> bool:
     return cell == str(action.default)
 
 
-def check_flag_table() -> None:
-    readme = (ROOT / "README.md").read_text()
-    table = parse_flag_table(readme)
-    if not table:
-        err("README.md: serving flag table not found")
-        return
-    parser = capture_serve_parser()
+def _parser_actions(parser: argparse.ArgumentParser) -> dict:
     actions = {opt: a for a in parser._actions for opt in a.option_strings
                if opt.startswith("--")}
     actions.pop("--help", None)
+    return actions
 
-    for flag, cell in table.items():
+
+def check_flag_table() -> None:
+    readme = (ROOT / "README.md").read_text()
+    tables = parse_flag_tables(readme)
+    if not tables:
+        err("README.md: serving flag table not found")
+        return
+
+    # table 1: the batch driver's full surface, bidirectional
+    serve_table = tables[0]
+    actions = _parser_actions(capture_parser("repro.launch.serve"))
+    for flag, cell in serve_table.items():
         if flag not in actions:
             err(f"README table documents {flag}, which repro.launch.serve "
                 "does not accept")
@@ -112,9 +131,31 @@ def check_flag_table() -> None:
             err(f"README table default for {flag} is {cell!r}; the parser "
                 f"says {shown!r}")
     for flag in actions:
-        if flag not in table:
+        if flag not in serve_table:
             err(f"repro.launch.serve accepts {flag}, missing from the "
                 "README flag table")
+
+    # table 2: the HTTP front's OWN flags; its engine flags are the shared
+    # add_engine_args surface and inherit their rows from table 1
+    if len(tables) < 2:
+        err("README.md: HTTP serving flag table (repro.launch.serve_http) "
+            "not found")
+        return
+    http_table = tables[1]
+    http_actions = _parser_actions(capture_parser("repro.launch.serve_http"))
+    for flag, cell in http_table.items():
+        if flag not in http_actions:
+            err(f"README HTTP table documents {flag}, which "
+                "repro.launch.serve_http does not accept")
+        elif not default_matches(http_actions[flag], cell):
+            a = http_actions[flag]
+            shown = "(required)" if a.required else a.default
+            err(f"README HTTP table default for {flag} is {cell!r}; the "
+                f"parser says {shown!r}")
+    for flag in http_actions:
+        if flag not in http_table and flag not in serve_table:
+            err(f"repro.launch.serve_http accepts {flag}, missing from "
+                "both README flag tables")
 
 
 # ---------------------------------------------------------------------------
