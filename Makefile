@@ -3,8 +3,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-conformance test-kernels test-alloc \
-    test-scheduling test-http test-retrace test-ci lint docs-check dev \
-    serve bench
+    test-scheduling test-http test-prefix test-retrace test-ci lint \
+    docs-check dev serve bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -50,6 +50,21 @@ test-scheduling:
 # session affinity, and the serve/serve_http argparse guard rails
 test-http:
 	$(PYTHON) -m pytest -x -q tests/test_http.py
+
+# shared-prefix dedup: refcount/CoW allocator invariants, the bitwise
+# shared-system-prompt conformance scenario, and the zero-compile
+# alias/privatize steady-state proof
+test-prefix:
+	$(PYTHON) -m pytest -x -q \
+	    "tests/test_page_alloc.py::test_prefix_invariants_random_sequences" \
+	    "tests/test_page_alloc.py::test_prefix_invariants_deterministic_sweep" \
+	    "tests/test_page_alloc.py::test_alias_write_privatize_roundtrip" \
+	    "tests/test_page_alloc.py::test_sole_referent_alias_is_adopted_without_copy" \
+	    "tests/test_page_alloc.py::test_regrant_of_still_referenced_page_asserts" \
+	    "tests/test_page_alloc.py::test_register_refused_without_slack_is_not_corrupting" \
+	    "tests/test_backend_conformance.py::test_continuous_engine_token_identical_with_prefix_cache" \
+	    "tests/test_backend_conformance.py::test_prefix_cache_shared_prompt_dedup_bitwise" \
+	    "tests/test_retrace.py::test_prefix_cache_engine_zero_compiles_at_steady_state"
 
 # README/docs stay mechanically honest: flag tables vs the live argparse
 # surface, python snippets parse, referenced paths exist (tools/check_docs.py)

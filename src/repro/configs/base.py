@@ -184,7 +184,13 @@ class ShapeConfig:
     #                      pages from shared pools on demand (core/alloc.py)
     pool_fraction: float = 1.0  # "freelist" only: pool capacity as a
     #                      fraction of the static worst case
-    #                      (slots x ceil(capacity/page_size) per segment)
+    #                      (slots x ceil(capacity/page_size) per segment);
+    #                      > 1.0 provisions slack pages (prefix-cache
+    #                      registrations need headroom beyond reservations)
+    prefix_cache: bool = False  # "freelist" only: content-hash shared-prefix
+    #                      page dedup with copy-on-write tables — identical
+    #                      page-aligned prompts alias one set of immutable
+    #                      hi/lo pages and skip their prefill (core/alloc.py)
 
 
 SHAPES = {

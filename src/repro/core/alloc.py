@@ -18,6 +18,22 @@ that rigidity vLLM/PagedAttention-style:
     contract in `kvcache._recompress_all`), writes to them are harmlessly
     absorbed by the sink.
 
+Shared-prefix dedup (copy-on-write): every physical page carries a
+REFCOUNT, so one immutable page can back several slots' tables at once.
+`PrefixIndex` maps a page-granular content chain-hash of an admitted
+prompt to the hi/lo pages its prefill produced; a later identical prompt
+is admitted by ALIAS (`admit_alias`): its table rows point at the existing
+pages, refcounts bump, and its prefill is skipped entirely.  Aliased pages
+are immutable — ZipCache's recompression re-splits hi/lo per slot by
+saliency, so before any fold touches a slot the engine calls `privatize`,
+which gives the slot fresh pages (CoW; the engine copies the payload
+device-side before the fold program reads it).  Until that first fold the
+per-slot scale metadata of identical prefixes is bitwise identical under
+deterministic quantization, so payload pages dedup cleanly while metadata
+stays dense per slot.  `check_invariants` asserts the refcount PARTITION:
+every pool page is free xor its refcount equals the number of table rows
+plus index entries referencing it.
+
 Static-shape discipline: the allocator is HOST-side state.  It mutates page
 tables between jitted steps — pool arrays, table shapes and every decode
 program are compiled once and never retrace; only table VALUES change.
@@ -36,12 +52,17 @@ reservations already outstanding for running slots, minus a configurable
 watermark.  This makes mid-decode grants infallible by construction —
 `PagePoolExhausted` is a typed invariant trip, not an expected event —
 and out-of-pages pressure surfaces as clean admission deferral
-(backpressure) instead of corruption of a running slot.
+(backpressure) instead of corruption of a running slot.  A slot's pages
+count toward reservation COVERAGE only while it OWNS them: an aliased
+page came from another request's reservation (or the index), so a slot
+that may still privatize keeps its full worst case outstanding.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -65,6 +86,32 @@ class PoolCapacityError(ValueError):
 def pages_for(tokens: int, page_size: int) -> int:
     """Pages needed for a contiguous prefix of `tokens` tokens."""
     return -(-tokens // page_size) if tokens > 0 else 0
+
+
+def prefix_key(tokens, page_size: int, padded_len: int) -> str:
+    """Content chain-hash of a prompt, page block by page block.
+
+    The prompt is padded (on the left, like admission packing) to
+    `padded_len` — the page-aligned admission bucket — and hashed one
+    page-sized block at a time, each block's hash chained onto the
+    previous one.  Two prompts share a key iff their padded token arrays
+    are identical, in which case their prefills are bitwise identical too
+    (the model sees the very same input), so sharing their pages is sound.
+    stdlib + numpy only: the allocator stays host-pure (tools/analyze).
+    """
+    toks = np.asarray(tokens, np.int32).reshape(-1)
+    if toks.shape[0] > padded_len:
+        raise ValueError(
+            f"prompt of {toks.shape[0]} tokens exceeds its padded bucket "
+            f"{padded_len}")
+    padded = np.zeros(padded_len, np.int32)
+    if toks.shape[0]:
+        padded[padded_len - toks.shape[0]:] = toks
+    h = hashlib.sha256(f"prefix:{page_size}:{padded_len}".encode())
+    for start in range(0, padded_len, page_size):
+        h = hashlib.sha256(
+            h.digest() + padded[start:start + page_size].tobytes())
+    return h.hexdigest()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,6 +170,21 @@ def kv_elements(caches):
 
 
 @dataclasses.dataclass
+class PrefixEntry:
+    """One cached prefix: the immutable pages its prefill produced.
+
+    The index holds +1 refcount on every listed page, so they survive the
+    donor slot's retirement; `occ` is the prefill occupancy an aliased
+    admission inherits (the window is NOT listed — window pages are
+    mutable, so an alias gets fresh ones and the engine re-inserts the
+    window payload from its prefix snapshot)."""
+    key: str
+    pages: Dict[str, List[int]]      # segment -> immutable page ids (hi/lo)
+    occ: Occupancy
+    hits: int = 0
+
+
+@dataclasses.dataclass
 class _Segment:
     """Free-list state for one page pool (hi store, lo store, or window)."""
 
@@ -134,6 +196,14 @@ class _Segment:
     table: Optional[np.ndarray] = None   # (slots, npp) int32; NULL == pool_pages
     granted: Optional[np.ndarray] = None  # (slots,) granted page counts
     worst: Optional[np.ndarray] = None    # (slots,) reserved worst-case pages
+    # per-page reference counts: table rows + PrefixIndex entries.  0 means
+    # the page is (or is about to be) on the free list.
+    refcount: Optional[np.ndarray] = None   # (pool_pages,) int64
+    # owned[slot, j]: the slot's logical page j was drawn from ITS OWN
+    # reservation (counts toward coverage).  False for aliased pages — the
+    # slot may still have to draw a fresh page for it (CoW privatize), so
+    # its reservation stays outstanding.
+    owned: Optional[np.ndarray] = None      # (slots, npp) bool
     peak_used: int = 0
 
     @property
@@ -150,8 +220,11 @@ class _Segment:
 
     @property
     def outstanding(self) -> int:
-        """Pages reserved for running slots but not yet granted."""
-        return int(np.maximum(self.worst - self.granted, 0).sum())
+        """Pages reserved for running slots but not yet drawn from the free
+        list.  Only OWNED pages count as drawn: an aliased page cost the
+        free list nothing and may still force a draw when privatized."""
+        owned_counts = self.owned.sum(axis=1)
+        return int(np.maximum(self.worst - owned_counts, 0).sum())
 
     def headroom(self, watermark: int) -> int:
         return len(self.free) - self.outstanding - watermark
@@ -169,20 +242,55 @@ class _Segment:
                 f"{slot}, free list holds {len(self.free)} of {self.pool_pages}"
                 " — admission control should have prevented this")
         for j in range(cur, n_pages):
-            self.table[slot, j] = self.free.pop()
+            p = self.free.pop()
+            # stale-visibility guard: a page popped off the free list must
+            # be referenced by NOTHING — shrink/free null the table entry
+            # and drop the refcount before returning a page, so a page
+            # freed and re-granted within one step can never appear in two
+            # slots' device tables at the same sync
+            assert self.refcount[p] == 0, \
+                f"{self.name}: free-list page {p} still referenced " \
+                f"(refcount {int(self.refcount[p])}) — stale table entry"
+            self.table[slot, j] = p
+            self.refcount[p] = 1
+            self.owned[slot, j] = True
         self.granted[slot] = n_pages
         self.peak_used = max(self.peak_used, self.used)
         return True
 
+    def alias(self, slot: int, page_ids: List[int]) -> bool:
+        """Point the slot's table at EXISTING pages (shared-prefix hit):
+        refcounts bump, the free list is untouched, and the pages stay
+        un-owned — the slot must `privatize` before any program writes
+        through them.  Only valid into an empty row (admission)."""
+        cur = int(self.granted[slot])
+        assert cur == 0, \
+            f"{self.name}: alias into slot {slot} with {cur} pages granted"
+        for j, p in enumerate(page_ids):
+            assert self.refcount[p] >= 1, \
+                f"{self.name}: alias of unreferenced page {p}"
+            self.table[slot, j] = p
+            self.refcount[p] += 1
+            self.owned[slot, j] = False
+        self.granted[slot] = len(page_ids)
+        return bool(page_ids)
+
     def shrink(self, slot: int, n_pages: int) -> bool:
-        """Return the slot's logical pages [n_pages, granted) to the pool.
-        Returns True iff the table changed."""
+        """Return the slot's logical pages [n_pages, granted) to the pool
+        (refcounted: a page survives while other tables or the prefix
+        index still reference it).  Returns True iff the table changed."""
         cur = int(self.granted[slot])
         if n_pages >= cur:
             return False
         for j in range(n_pages, cur):
-            self.free.append(int(self.table[slot, j]))
+            p = int(self.table[slot, j])
+            assert self.refcount[p] >= 1, \
+                f"{self.name}: shrink of unreferenced page {p}"
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self.free.append(p)
             self.table[slot, j] = self.null
+            self.owned[slot, j] = False
         self.granted[slot] = n_pages
         return True
 
@@ -195,6 +303,9 @@ class FreeListAllocator:
     """
 
     SEGMENTS = ("hi", "lo", "win")
+    # index pages live in the two quantized stores only; the staging window
+    # is mutable from the first decode append, so aliases never share it
+    PREFIX_SEGMENTS = ("hi", "lo")
 
     def __init__(self, slots: int, page_size: int,
                  capacities: Tuple[int, int, int],
@@ -211,6 +322,8 @@ class FreeListAllocator:
             seg.table = np.full((slots, seg.npp), seg.null, np.int32)
             seg.granted = np.zeros(slots, np.int64)
             seg.worst = np.zeros(slots, np.int64)
+            seg.refcount = np.zeros(pool, np.int64)
+            seg.owned = np.zeros((slots, seg.npp), bool)
             self.segs[name] = seg
         self.occ: List[Optional[Occupancy]] = [None] * slots
         self.watermark = watermark
@@ -222,6 +335,14 @@ class FreeListAllocator:
         # counter makes that page churn visible in `stats()` next to the
         # admission deferrals.
         self.preemptions = 0
+        # shared-prefix page index: content chain-hash -> PrefixEntry, in
+        # LRU order (hits move to the end; reclaim evicts from the front)
+        self.prefix: "collections.OrderedDict[str, PrefixEntry]" = \
+            collections.OrderedDict()
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.prefix_evictions = 0
+        self.cow_copies = 0
         self.dirty = True
 
     # -- construction from a live cache tree --------------------------------
@@ -267,7 +388,14 @@ class FreeListAllocator:
         both, or admission-time grants overdraw it and a later fold can
         find the free list short mid-decode.  `prompt_tokens` defaults to
         `total_tokens` (the safe over-estimate for callers that don't know
-        the split)."""
+        the split).
+
+        The window term is the pages the fill cursor can actually touch:
+        the cursor advances one token per append and folds reset it, so it
+        never passes min(total_tokens, window capacity) — a request whose
+        whole lifetime is shorter than the window must not reserve the full
+        per-slot window page count (that over-reservation deferred short
+        requests on pools that could hold them)."""
         if prompt_tokens is None:
             prompt_tokens = total_tokens
         hi = min(total_tokens, self.s_hi)
@@ -276,7 +404,7 @@ class FreeListAllocator:
         return {
             "hi": pages_for(hi, self.page_size),
             "lo": pages_for(lo, self.page_size),
-            "win": self.segs["win"].npp,  # the window cycles through fully
+            "win": pages_for(min(total_tokens, self.window), self.page_size),
         }
 
     def _watermark_pages(self, seg: _Segment) -> int:
@@ -340,6 +468,43 @@ class FreeListAllocator:
         self.occ[slot] = occ
         self.dirty = True
 
+    def admit_alias(self, slot: int, key: str, total_tokens: int,
+                    prompt_tokens: Optional[int] = None,
+                    can_fold: bool = True) -> PrefixEntry:
+        """Admit a shared-prefix HIT: the slot's hi/lo table rows alias the
+        index entry's immutable pages (refcounts bump, prefill skipped);
+        only fresh WINDOW pages are drawn from the free list.
+
+        `can_fold=False` (the request's decode budget ends before its first
+        recompression) drops the hi/lo reservation to zero: the slot can
+        never write those stores, so the aliased pages are shared for its
+        whole lifetime and its only page cost is the window.  With
+        `can_fold=True` the full worst case is reserved — the first fold
+        privatizes the aliased pages (CoW) and grows the stores, all drawn
+        from this reservation."""
+        assert self.occ[slot] is None, f"slot {slot} already occupied"
+        entry = self.prefix[key]
+        worst = self.worst_pages(total_tokens, prompt_tokens)
+        if not can_fold:
+            worst = {**worst, "hi": 0, "lo": 0}
+        for name in self.SEGMENTS:
+            if self.segs[name].headroom(0) < worst[name]:
+                raise PagePoolExhausted(
+                    f"segment {name!r} cannot reserve {worst[name]} pages "
+                    f"for aliased slot {slot}: {self.stats()[name]}")
+        for name in self.SEGMENTS:
+            self.segs[name].worst[slot] = worst[name]
+        for name in self.PREFIX_SEGMENTS:
+            self.segs[name].alias(slot, entry.pages[name])
+        self.segs["win"].grant(
+            slot, pages_for(entry.occ.win, self.page_size))
+        self.occ[slot] = entry.occ
+        entry.hits += 1
+        self.prefix_hits += 1
+        self.prefix.move_to_end(key)
+        self.dirty = True
+        return entry
+
     def note_append(self, slot: int) -> None:
         """Account one decode append: grant the staging-window page under
         the write cursor if the slot does not hold it yet.  Dirties the
@@ -353,11 +518,72 @@ class FreeListAllocator:
                 self.dirty = True
         self.occ[slot] = dataclasses.replace(occ, win=occ.win + 1)
 
+    def needs_privatize(self, slot: int) -> bool:
+        """True if the slot's tables hold any page it does not own — the
+        engine must `privatize` (CoW) before a fold writes through them."""
+        for seg in self.segs.values():
+            g = int(seg.granted[slot])
+            if g and not seg.owned[slot, :g].all():
+                return True
+        return False
+
+    def privatize(self, slot: int) -> Dict[str, Tuple[List[int], List[int]]]:
+        """Copy-on-write: give the slot its OWN page for every aliased
+        table entry, before a fold (or any other write) touches them.
+
+        Pages still shared (refcount > 1) are swapped for fresh free-list
+        pages; the returned {segment: (src_ids, dst_ids)} tells the engine
+        which device-side page copies to issue BEFORE the next program
+        reads through the new table.  A page whose other referents have
+        all gone (refcount == 1) is adopted in place — no copy.  Draws are
+        covered by the slot's reservation (aliased pages were never counted
+        as drawn), so `PagePoolExhausted` here is an invariant trip."""
+        moves: Dict[str, Tuple[List[int], List[int]]] = {}
+        for name, seg in self.segs.items():
+            g = int(seg.granted[slot])
+            src: List[int] = []
+            dst: List[int] = []
+            for j in range(g):
+                if seg.owned[slot, j]:
+                    continue
+                p = int(seg.table[slot, j])
+                if seg.refcount[p] == 1:
+                    seg.owned[slot, j] = True   # sole referent: adopt in place
+                    continue
+                if not seg.free:
+                    raise PagePoolExhausted(
+                        f"segment {name!r}: no free page to privatize slot "
+                        f"{slot} page {p} — reservation accounting broken")
+                q = seg.free.pop()
+                assert seg.refcount[q] == 0, \
+                    f"{name}: free-list page {q} still referenced"
+                seg.refcount[p] -= 1
+                seg.refcount[q] = 1
+                seg.table[slot, j] = q
+                seg.owned[slot, j] = True
+                seg.peak_used = max(seg.peak_used, seg.used)
+                src.append(p)
+                dst.append(q)
+            if src:
+                moves[name] = (src, dst)
+                self.cow_copies += len(src)
+                self.dirty = True
+        return moves
+
     def fold_grant(self, slot: int) -> None:
         """BEFORE a recompression program: grant the hi/lo growth pages the
-        fold will scatter into (predicted via `fold_occupancy`)."""
+        fold will scatter into (predicted via `fold_occupancy`).  The slot
+        must already be privatized (`privatize`) — folds re-split hi/lo per
+        slot, so writing through an aliased page would corrupt its other
+        referents."""
         occ = self.occ[slot]
         assert occ is not None, f"fold of unoccupied slot {slot}"
+        for name in self.PREFIX_SEGMENTS:
+            seg = self.segs[name]
+            g = int(seg.granted[slot])
+            assert not g or seg.owned[slot, :g].all(), \
+                f"{name}: fold_grant on slot {slot} with aliased pages — " \
+                "privatize before folding"
         new = fold_occupancy(occ, self.s_hi, self.s_lo)
         grew = self.segs["hi"].grant(slot, pages_for(new.hi, self.page_size))
         grew |= self.segs["lo"].grant(slot, pages_for(new.lo, self.page_size))
@@ -373,11 +599,89 @@ class FreeListAllocator:
         self.occ[slot] = dataclasses.replace(occ, win=0)
 
     def free(self, slot: int) -> None:
-        """Retire a slot: return every granted page, drop its reservation."""
+        """Retire a slot: return every granted page, drop its reservation.
+        Aliased/shared pages only lose this slot's reference — they return
+        to the free list when their refcount reaches zero."""
         for seg in self.segs.values():
             self.dirty |= seg.shrink(slot, 0)
             seg.worst[slot] = 0
         self.occ[slot] = None
+
+    # -- shared-prefix index --------------------------------------------------
+
+    def prefix_peek(self, key: str) -> Optional[PrefixEntry]:
+        """Entry for `key` or None — no counters, no LRU movement (used by
+        admission PLANNING, which may probe the same request many times)."""
+        return self.prefix.get(key)
+
+    def prefix_register(self, key: str, slot: int) -> bool:
+        """Index the freshly admitted slot's hi/lo pages under `key`.
+
+        The index takes +1 refcount on each page and the donor's ownership
+        is RESCINDED (its pages are now shared, so its first fold must
+        privatize them like any alias) — which raises its outstanding
+        reservation by exactly its prefill page count.  Registration is
+        refused (False) when any free list cannot cover that raise, or the
+        key is already indexed: a cache entry must never endanger the
+        infallibility of running slots' grants."""
+        if key in self.prefix:
+            return False
+        delta: Dict[str, int] = {}
+        for name in self.PREFIX_SEGMENTS:
+            seg = self.segs[name]
+            g = int(seg.granted[slot])
+            delta[name] = int(seg.owned[slot, :g].sum())
+            if len(seg.free) < seg.outstanding + delta[name]:
+                return False
+        pages: Dict[str, List[int]] = {}
+        for name in self.PREFIX_SEGMENTS:
+            seg = self.segs[name]
+            g = int(seg.granted[slot])
+            ids = [int(p) for p in seg.table[slot, :g]]
+            for p in ids:
+                seg.refcount[p] += 1
+            seg.owned[slot, :g] = False
+            pages[name] = ids
+        occ = self.occ[slot]
+        self.prefix[key] = PrefixEntry(
+            key=key, pages=pages,
+            occ=dataclasses.replace(occ, win=occ.win))
+        self.prefix.move_to_end(key)
+        return True
+
+    def prefix_note_miss(self) -> None:
+        self.prefix_misses += 1
+
+    def _evict_entry(self, key: str) -> int:
+        """Drop one index entry; returns how many pages that freed (pages
+        still aliased by running slots stay allocated until those retire)."""
+        entry = self.prefix.pop(key)
+        freed = 0
+        for name in self.PREFIX_SEGMENTS:
+            seg = self.segs[name]
+            for p in entry.pages[name]:
+                assert seg.refcount[p] >= 1, \
+                    f"{name}: index page {p} unreferenced"
+                seg.refcount[p] -= 1
+                if seg.refcount[p] == 0:
+                    seg.free.append(p)
+                    freed += 1
+        self.prefix_evictions += 1
+        return freed
+
+    def prefix_reclaim(self, min_pages: int = 1) -> List[str]:
+        """Admission is blocked: evict least-recently-used index entries
+        until at least `min_pages` pages returned to the free lists (or the
+        index is empty).  Returns the evicted keys so the engine can drop
+        its matching prefix snapshots; tables are untouched (eviction never
+        dirties the device state)."""
+        evicted: List[str] = []
+        freed = 0
+        while self.prefix and freed < min_pages:
+            key = next(iter(self.prefix))     # LRU front
+            freed += self._evict_entry(key)
+            evicted.append(key)
+        return evicted
 
     # -- engine integration ---------------------------------------------------
 
@@ -393,14 +697,35 @@ class FreeListAllocator:
                       "outstanding": seg.outstanding}
         out["deferrals"] = self.deferrals
         out["preemptions"] = self.preemptions
+        # shared-prefix telemetry: `shared_pages` counts pages backing more
+        # than one referent right now; `saved_pages` is the pages dedup is
+        # currently NOT spending (sum of refcount-1 over the pools) — the
+        # "cache bytes per concurrent request" win, in pages
+        shared = saved = 0
+        for name in self.PREFIX_SEGMENTS:
+            rc = self.segs[name].refcount
+            shared += int((rc >= 2).sum())
+            saved += int(np.maximum(rc - 1, 0).sum())
+        out["prefix"] = {
+            "entries": len(self.prefix),
+            "hits": self.prefix_hits,
+            "misses": self.prefix_misses,
+            "evictions": self.prefix_evictions,
+            "cow_copies": self.cow_copies,
+            "shared_pages": shared,
+            "saved_pages": saved,
+        }
         return out
 
     def check_invariants(self) -> None:
-        """Grant/free conservation (used by the property tests):
-        every physical page is on the free list or in exactly one slot's
-        granted prefix; free lists always cover outstanding reservations."""
-        for seg in self.segs.values():
-            granted_ids: List[int] = []
+        """Refcount-partition + conservation (used by the property tests):
+        every physical page is on the free list (refcount 0, referenced by
+        nothing) XOR its refcount equals the number of table rows plus
+        index entries referencing it (>= 1); granted prefixes are
+        contiguous; owned pages are solely-referenced; free lists always
+        cover outstanding reservations."""
+        for name, seg in self.segs.items():
+            refs: Dict[int, int] = {}
             for s in range(self.slots):
                 row = seg.table[s]
                 g = int(seg.granted[s])
@@ -408,13 +733,30 @@ class FreeListAllocator:
                     f"{seg.name}: slot {s} table past its granted prefix"
                 assert (row[:g] != seg.null).all(), \
                     f"{seg.name}: NULL inside slot {s} granted prefix"
-                granted_ids.extend(int(p) for p in row[:g])
-            assert len(set(granted_ids)) == len(granted_ids), \
-                f"{seg.name}: page granted to two slots (double grant)"
-            assert len(set(granted_ids) & set(seg.free)) == 0, \
-                f"{seg.name}: granted page still on the free list"
-            assert len(granted_ids) + len(seg.free) == seg.pool_pages, \
-                f"{seg.name}: page leak ({len(granted_ids)} granted + " \
-                f"{len(seg.free)} free != {seg.pool_pages})"
+                assert not seg.owned[s, g:].any(), \
+                    f"{seg.name}: ownership past slot {s} granted prefix"
+                for j in range(g):
+                    p = int(row[j])
+                    refs[p] = refs.get(p, 0) + 1
+                    if seg.owned[s, j]:
+                        assert seg.refcount[p] == 1, \
+                            f"{seg.name}: slot {s} owns shared page {p} " \
+                            f"(refcount {int(seg.refcount[p])})"
+            for entry in self.prefix.values():
+                for p in entry.pages.get(name, ()):
+                    refs[p] = refs.get(p, 0) + 1
+            free_set = set(seg.free)
+            assert len(free_set) == len(seg.free), \
+                f"{seg.name}: duplicate page on the free list"
+            for p in range(seg.pool_pages):
+                rc = int(seg.refcount[p])
+                if p in free_set:
+                    assert rc == 0 and p not in refs, \
+                        f"{seg.name}: free page {p} still referenced " \
+                        f"(refcount {rc}, {refs.get(p, 0)} references)"
+                else:
+                    assert rc == refs.get(p, 0) and rc >= 1, \
+                        f"{seg.name}: page {p} refcount {rc} != " \
+                        f"{refs.get(p, 0)} references (partition violated)"
             assert len(seg.free) >= seg.outstanding, \
                 f"{seg.name}: free list cannot cover outstanding reservations"

@@ -183,10 +183,12 @@ def of(ccfg: Optional[CompressionConfig], kind: str = "mixed",
         return MixedKVBackend(ccfg)
     if kind == "paged":
         from repro.core import paged
-        if not (0.0 < pool_fraction <= 1.0):
+        if pool_fraction <= 0.0:
             raise ValueError(
-                f"pool_fraction must be in (0, 1], got {pool_fraction} "
-                "(1.0 = the static worst case slots x ceil(capacity/page))")
+                f"pool_fraction must be > 0, got {pool_fraction} "
+                "(1.0 = the static worst case slots x ceil(capacity/page); "
+                "> 1.0 provisions slack pages, e.g. so the shared-prefix "
+                "index can retain registered pages while all slots run)")
         return paged.PagedKVBackend(
             ccfg, page_size=page_size if page_size else paged.DEFAULT_PAGE_SIZE,
             use_kernel=paged_kernel, allocator=page_allocator,

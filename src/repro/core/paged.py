@@ -41,7 +41,7 @@ the page-size trade-off is internal fragmentation of at most
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -537,6 +537,42 @@ def free_slot(cache: PagedKVCache, slot, batch_axis: int = 0) -> PagedKVCache:
     them to the free list and NULLs the slot's table rows host-side — this
     jitted program only touches metadata either way."""
     return kvc.free_slot(cache, slot, batch_axis=batch_axis)
+
+
+def copy_pages(cache: PagedKVCache,
+               moves: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]]
+               ) -> PagedKVCache:
+    """Copy physical pages inside each pool: pages `src[i]` -> `dst[i]` per
+    segment ("hi"/"lo"/"win").  The copy-on-write half of shared-prefix
+    dedup (core/alloc.py `privatize`): the allocator repoints a slot's
+    table at fresh pages host-side, and this program materializes their
+    payload device-side before any fold reads through the new table.
+
+    `moves` carries fixed-length int32 id vectors — the engine pads unused
+    entries with the segment's SINK id, so sink->sink self-copies absorb
+    the padding and the program never retraces on the number of real moves.
+    Tables and metadata are untouched (pure pool payload permutation); a
+    stacked leading group axis (5-d pools) is broadcast over."""
+    def cp(pages, mv):
+        src, dst = mv
+        if pages.shape[-4] == 0:
+            return pages
+        if pages.ndim == 5:                    # (G, P, h, page, c)
+            return pages.at[:, dst].set(pages[:, src])
+        return pages.at[dst].set(pages[src])
+
+    hi = dataclasses.replace(
+        cache.hi,
+        k_pages=cp(cache.hi.k_pages, moves["hi"]),
+        v_pages=cp(cache.hi.v_pages, moves["hi"]))
+    lo = dataclasses.replace(
+        cache.lo,
+        k_pages=cp(cache.lo.k_pages, moves["lo"]),
+        v_pages=cp(cache.lo.v_pages, moves["lo"]))
+    return dataclasses.replace(
+        cache, hi=hi, lo=lo,
+        win_k_pages=cp(cache.win_k_pages, moves["win"]),
+        win_v_pages=cp(cache.win_v_pages, moves["win"]))
 
 
 def _write_back(cache: PagedKVCache, mx: kvc.MixedKVCache,

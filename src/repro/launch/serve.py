@@ -97,12 +97,22 @@ def add_engine_args(ap: argparse.ArgumentParser) -> None:
                          "a fraction of the static worst case "
                          "(slots x ceil(capacity/page) pages per segment); "
                          "< 1.0 trades concurrency under long-budget load "
-                         "for memory")
+                         "for memory; > 1.0 provisions slack pages so "
+                         "--prefix-cache registrations can retain pages "
+                         "while every slot is running")
     ap.add_argument("--admit-watermark", type=float, default=0.0,
                     help="--page-allocator freelist only: fraction of each "
                          "pool held back as admission headroom (a request "
                          "is admitted only if its worst case fits with this "
                          "reserve left over)")
+    ap.add_argument("--prefix-cache", default="off", choices=("off", "on"),
+                    help="--page-allocator freelist only: content-hash "
+                         "shared-prefix page dedup with copy-on-write "
+                         "tables — identical page-aligned prompts alias one "
+                         "set of immutable hi/lo pages and skip their "
+                         "prefill; a shared slot is privatized (CoW) before "
+                         "its first fold.  Greedy output stays bitwise "
+                         "identical to off")
     ap.add_argument("--scheduler", default="fifo",
                     choices=("fifo", "priority"),
                     help="--continuous only: admission policy. fifo = strict "
@@ -149,6 +159,9 @@ def validate_engine_args(args, ap: argparse.ArgumentParser,
     if args.admit_watermark != 0.0 and args.page_allocator != "freelist":
         ap.error("--admit-watermark requires --page-allocator freelist "
                  "(static/mixed layouts have no admission headroom to hold)")
+    if args.prefix_cache == "on" and args.page_allocator != "freelist":
+        ap.error("--prefix-cache on requires --page-allocator freelist "
+                 "(dedup aliases free-list pages behind refcounted tables)")
 
 
 def build_serve_config(args) -> ServeConfig:
@@ -163,7 +176,8 @@ def build_serve_config(args) -> ServeConfig:
                        pool_fraction=args.pool_fraction,
                        admit_watermark=args.admit_watermark,
                        scheduler=args.scheduler,
-                       preemption=args.preemption)
+                       preemption=args.preemption,
+                       prefix_cache=args.prefix_cache == "on")
 
 
 def build_compression_config(args) -> CompressionConfig:
@@ -223,10 +237,17 @@ def main(argv=None):
         ps = eng.pool_stats()
         if ps is not None:
             used = {k: f"{v['peak_used']}/{v['pool_pages']}"
-                    for k, v in ps.items() if isinstance(v, dict)}
+                    for k, v in ps.items()
+                    if isinstance(v, dict) and "peak_used" in v}
             print(f"[serve] page pools peak used {used}, "
                   f"{ps['deferrals']} admissions deferred, "
                   f"{ps['preemptions']} slots preempted")
+            px = ps["prefix"]
+            if px["hits"] or px["misses"]:
+                print(f"[serve] prefix cache: {px['hits']} hits / "
+                      f"{px['misses']} misses, {px['cow_copies']} CoW "
+                      f"copies, {px['prefill_tokens_skipped']} prefill "
+                      f"tokens skipped")
         return {rid: eng.result(rid) for rid in rids}
 
     engine = ServingEngine(cfg, ccfg, scfg, params, mesh=mesh)

@@ -278,6 +278,21 @@ def make_recompress_slot_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
     return recompress_slot, ctx
 
 
+def make_copy_pages_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                         ccfg: Optional[CompressionConfig] = None, ctx=None):
+    """copy(caches, moves) — duplicate physical pages pool-internally, per
+    the allocator's copy-on-write privatization plan ({segment: (src, dst)}
+    fixed-length int32 id vectors, sink-padded to keep the program's shapes
+    static).  Page ids are data operands, so one warm program serves every
+    privatization regardless of which or how many pages move."""
+    ctx = ctx or serve_ctx(cfg, shape, mesh, ccfg)
+
+    def copy(caches, moves):
+        return registry.copy_caches(caches, moves)
+
+    return copy, ctx
+
+
 def continuous_decode_lowering_inputs(cfg: ArchConfig, shape: ShapeConfig, mesh, ctx):
     """Abstract (params, caches, token, probes, active) + shardings for the
     continuous decode program.  mesh=None returns abstract inputs with no

@@ -116,6 +116,22 @@ def insert_caches(dst: Any, src: Any, slot) -> Any:
     return ins(dst, src, 1)
 
 
+def copy_caches(caches: Any, moves: Any) -> Any:
+    """Apply one set of physical page moves ({segment: (src_ids, dst_ids)})
+    to every paged element of the cache tree — the device half of
+    copy-on-write privatization (core/alloc.py `privatize`).  The page
+    POOLS are segment-shaped, identical across layers/groups, and every
+    element shares the one allocator table, so a single move set is valid
+    tree-wide; group-stacked leaves broadcast inside `paged.copy_pages`.
+    Non-paged elements are untouched (dedup is a paged-freelist feature)."""
+    from repro.core import paged as paged_lib
+
+    is_paged = lambda x: isinstance(x, paged_lib.PagedKVCache)
+    return jax.tree_util.tree_map(
+        lambda el: paged_lib.copy_pages(el, moves) if is_paged(el) else el,
+        caches, is_leaf=is_paged)
+
+
 def free_caches(caches: Any, slot) -> Any:
     """Retire batch row `slot` across the whole cache tree: invalidate each
     layer's positions/counters (cheap row writes — see kvcache.free_slot;

@@ -148,6 +148,15 @@ class ServeConfig:
     # same decode/fold programs — deterministic: the victim's remaining
     # tokens are unchanged vs an uncontended run (tests/test_scheduling.py)
     preemption: str = "off"
+    # "paged"+"freelist" only: content-hash shared-prefix page dedup with
+    # copy-on-write tables (core/alloc.py).  Admission hashes the request's
+    # page-aligned prompt bucket; a hit points the slot's hi/lo page-table
+    # rows at the existing immutable pages (refcounts bump) and skips the
+    # prefill entirely — the first fold privatizes the shared pages (CoW)
+    # because recompression re-splits hi/lo per slot.  Greedy output stays
+    # bitwise identical to prefix_cache=False: an aliased prefill IS the
+    # donor's prefill, bit for bit (tests/test_backend_conformance.py).
+    prefix_cache: bool = False
     # sampling is per-request (SamplingParams); the lockstep generate() path
     # is always greedy — it is the reference the continuous engine is
     # verified token-identical against
@@ -304,12 +313,35 @@ class _EngineBase:
                             cache_backend=scfg.backend, page_size=scfg.page_size,
                             paged_kernel=scfg.paged_kernel,
                             page_allocator=scfg.page_allocator,
-                            pool_fraction=scfg.pool_fraction)
+                            pool_fraction=scfg.pool_fraction,
+                            prefix_cache=scfg.prefix_cache)
+        self._shape = shape
+        self._mesh = mesh
         self.ctx = steps_lib.serve_ctx(cfg, shape, mesh, ccfg,
                                        decode_budget=scfg.max_new_tokens,
                                        q_block=min(512, scfg.prompt_len))
         self._prefill = jax.jit(
             lambda p, b: registry.prefill(p, b, cfg, self.ctx))
+        # ragged admission: per-bucket (page-aligned prompt length) prefill
+        # wrappers, built lazily on first use.  jax.jit caches programs per
+        # wrapper, so each bucket warms once and then serves from cache —
+        # the steady-state zero-compile guarantee holds per bucket
+        # (tests/test_retrace.py warms every bucket its scenario uses).
+        # Construction lives in this __init__-built closure: like the
+        # jitted handles above it is program BUILD, the cold side of the
+        # host/device boundary the hot-loop sync lint fences off.
+        self._prefill_buckets: Dict[int, Callable] = {}
+
+        def build_bucket_prefill(bucket_len: int):
+            pad_saved = scfg.prompt_len - bucket_len
+            bshape = dataclasses.replace(shape, seq_len=bucket_len)
+            bctx = steps_lib.serve_ctx(
+                cfg, bshape, mesh, ccfg,
+                decode_budget=scfg.max_new_tokens + pad_saved,
+                q_block=min(512, bucket_len))
+            return jax.jit(lambda p, b: registry.prefill(p, b, cfg, bctx))
+
+        self._build_bucket_prefill = build_bucket_prefill
         self._decode = jax.jit(
             lambda p, t, c, ip: registry.decode_step(p, t, c, cfg, self.ctx, ip))
         self._recompress = jax.jit(
@@ -330,6 +362,35 @@ class _EngineBase:
             self._recompress_slot = jax.jit(steps_lib.make_recompress_slot_step(
                 cfg, shape, mesh, ccfg, ctx=self.ctx)[0])
         self._sample = jax.jit(_sample_tokens)
+
+    # ------------------------------------------------------------------
+    def _bucket_len(self, n_tokens: int) -> int:
+        """Ragged-admission bucket of a true prompt length: the smallest
+        whole-page length that holds it, capped at the engine's prompt
+        window.  Page demand then tracks `ceil(true_prompt/page)` instead
+        of the full left-padded window, and identical prompts land in
+        identical buckets — which is what makes shared-prefix keys align
+        on page boundaries.  Buckets use `ServeConfig.page_size` for EVERY
+        backend (the mixed layout has no pages but must bucket identically,
+        or cross-backend conformance would compare different prefills)."""
+        ps = self.scfg.page_size
+        return min(alloc_lib.pages_for(max(n_tokens, 1), ps) * ps,
+                   self.scfg.prompt_len)
+
+    def _prefill_for(self, bucket_len: int):
+        """The prefill program for one admission bucket.  Full-window
+        admissions reuse the main wrapper; shorter buckets get their own
+        serving ctx with `seq_len = bucket_len` and the decode budget
+        EXTENDED by the saved prompt tokens, so `max_cache_len` — and with
+        it every cache/pool shape — is identical across buckets and the
+        slice inserts into the shared decode batch unchanged."""
+        if bucket_len == self.scfg.prompt_len:
+            return self._prefill
+        fn = self._prefill_buckets.get(bucket_len)
+        if fn is None:
+            fn = self._build_bucket_prefill(bucket_len)
+            self._prefill_buckets[bucket_len] = fn
+        return fn
 
     # ------------------------------------------------------------------
     def cache_bytes(self, caches) -> Dict[str, int]:
@@ -475,6 +536,23 @@ class EngineCore(_EngineBase):
                 self.caches, page_size=self.ctx.backend.page_size,
                 watermark=scfg.admit_watermark)
             self._sync_tables()
+        # Shared-prefix dedup (ServeConfig.prefix_cache, core/alloc.py):
+        # the allocator owns the page index; the engine keeps the matched
+        # device-side prefill snapshots ({key: (slice_caches, logits)}) a
+        # hit re-inserts instead of prefilling, plus the jitted page-copy
+        # program CoW privatization runs before a shared slot's first fold.
+        if scfg.prefix_cache and self._alloc is None:
+            raise ValueError(
+                "ServeConfig.prefix_cache requires backend='paged' with "
+                "page_allocator='freelist' (dedup aliases free-list pages)")
+        self._prefix_on = scfg.prefix_cache
+        self._prefix_snap: Dict[str, Tuple] = {}
+        self._prefix_tokens_skipped = 0
+        self._pending_reg: List[Tuple] = []
+        self._copy_pages = None
+        if self._alloc is not None:
+            self._copy_pages = jax.jit(steps_lib.make_copy_pages_step(
+                cfg, self._shape, mesh, ccfg, ctx=self.ctx)[0])
 
     # ------------------------------------------------------------------
     # lifecycle API
@@ -494,10 +572,12 @@ class EngineCore(_EngineBase):
                 else self.scfg.max_new_tokens)
 
     def _request_total_tokens(self, request: Request) -> int:
-        """Worst-case cached tokens of a request: the full (left-padded)
-        prompt window plus its decode budget — prefill caches all
-        `prompt_len` positions, so page demand varies only with the budget."""
-        return self.scfg.prompt_len + self._request_budget(request)
+        """Worst-case cached tokens of a request: its RAGGED admission
+        bucket (true prompt rounded up to whole pages, not the full
+        left-padded window) plus its decode budget — page demand tracks
+        what the prefill actually caches."""
+        return (self._bucket_len(int(request.tokens.shape[-1]))  # sync: ok(np shape tuple, host-side)
+                + self._request_budget(request))
 
     def submit(self, request: Request) -> str:
         """Validate + enqueue a request; returns its id.
@@ -529,13 +609,20 @@ class EngineCore(_EngineBase):
             raise ValueError(
                 f"max_new_tokens {request.max_new_tokens} outside the "
                 f"engine's [1, {self.scfg.max_new_tokens}] decode budget")
+        bucket = self._bucket_len(n)
         if self._alloc is not None and not self._alloc.fits_ever(
-                self._request_total_tokens(request), self.scfg.prompt_len):
+                self._request_total_tokens(request), bucket):
             raise alloc_lib.PoolCapacityError(
                 f"request needs "
-                f"{self._alloc.worst_pages(self._request_total_tokens(request), self.scfg.prompt_len)} "
+                f"{self._alloc.worst_pages(self._request_total_tokens(request), bucket)} "
                 f"pages worst-case, beyond the pool ({self._alloc.stats()}); "
                 "raise pool_fraction or lower the request budget")
+        # shared-prefix key: the content chain-hash of the request's padded
+        # admission bucket, stamped once here (hashing is cheap but not
+        # free, and planning probes the key many times per step)
+        request._prefix_key = (
+            alloc_lib.prefix_key(request.tokens, self.scfg.page_size, bucket)
+            if self._prefix_on else None)
         if request.id is None:
             rid = f"req-{next(self._ids)}"
             while rid in self._known:  # user ids may shadow auto ids
@@ -751,11 +838,18 @@ class EngineCore(_EngineBase):
 
     def pool_stats(self) -> Optional[Dict]:
         """Free-list pool telemetry (None for static/mixed layouts):
-        per-segment {pool_pages, used, free, peak_used, outstanding} plus
-        the cumulative admission-deferral and preemption counts (the
+        per-segment {pool_pages, used, free, peak_used, outstanding}, the
+        cumulative admission-deferral and preemption counts (the
         per-request view of the same costs lives in
-        `RequestOutput.timings`)."""
-        return None if self._alloc is None else self._alloc.stats()
+        `RequestOutput.timings`), and the shared-prefix block — index
+        entries, hit/miss/eviction counts, CoW copies, currently shared
+        pages, pages dedup is saving right now, and the prefill tokens
+        whose FLOPs hits skipped.  Served verbatim by `/v1/stats`."""
+        if self._alloc is None:
+            return None
+        stats = self._alloc.stats()
+        stats["prefix"]["prefill_tokens_skipped"] = self._prefix_tokens_skipped
+        return stats
 
     def free(self, slot_id: int) -> None:
         """Retire a slot: invalidate its batch row (cheap row writes; stale
@@ -853,10 +947,43 @@ class EngineCore(_EngineBase):
                     request.id, self._step_no,
                     error=f"{type(e).__name__}: {e}"))
 
+    def _alias_can_fold(self, req: Request) -> bool:
+        """Whether the request can EVER reach a window fold: it decodes at
+        most budget-1 steps (the first token comes from prefill logits), so
+        `since_rc` never reaches the recompress interval when
+        budget - 1 < interval — in that case an aliased admission can skip
+        the hi/lo reservation entirely (the stores are never written)."""
+        return (self._request_budget(req) - 1
+                >= self.ccfg.recompress_interval)
+
+    def _prefix_hit(self, req: Request) -> bool:
+        """A usable shared-prefix hit needs BOTH halves: the allocator's
+        page index entry (host bookkeeping) and the engine's device
+        snapshot (the slice a hit re-inserts).  Demand planning and
+        admission must agree on this predicate, or PoolView would reserve
+        for a different admission path than the one taken."""
+        key = getattr(req, "_prefix_key", None)
+        return (key is not None
+                and self._alloc.prefix_peek(key) is not None
+                and key in self._prefix_snap)
+
+    def _demand_pages(self, req: Request) -> Dict[str, int]:
+        """Worst-case per-segment page demand of ONE queued request, as the
+        admission planner should see it: ragged bucket + budget, with the
+        hi/lo reservation dropped for a shared-prefix hit that can never
+        fold (its aliased pages stay shared for its whole lifetime, so its
+        only cost is the window)."""
+        worst = self._alloc.worst_pages(
+            self._request_total_tokens(req),
+            self._bucket_len(int(req.tokens.shape[-1])))  # sync: ok(np shape tuple, host-side)
+        if self._prefix_hit(req) and not self._alias_can_fold(req):
+            worst = {**worst, "hi": 0, "lo": 0}
+        return worst
+
     def _pool_view(self) -> scheduler_lib.PoolView:
         return scheduler_lib.PoolView(
             self._alloc,
-            lambda r: (self._request_total_tokens(r), self.scfg.prompt_len))
+            self._demand_pages if self._alloc is not None else None)
 
     def _running_views(self) -> List[scheduler_lib.SlotView]:
         return [scheduler_lib.SlotView(i, s.request, len(s.generated),
@@ -898,12 +1025,21 @@ class EngineCore(_EngineBase):
                     self._preempt(victim)
                     n_evicted += 1
                     continue       # re-plan with the freed slot and pages
+            if plan.blocked is not None and self._prefix_on \
+                    and self._alloc.prefix:
+                # out-of-pages with prefix entries cached: evict LRU index
+                # entries (pages nobody aliases return to the free lists)
+                # and re-plan BEFORE counting a deferral — the cache must
+                # never block an admission the pool could otherwise cover.
+                # Terminates: the index strictly shrinks every pass.
+                for key in self._alloc.prefix_reclaim():
+                    self._prefix_snap.pop(key, None)
+                continue
             if plan.blocked is not None:
                 if self.scfg.backpressure == "error":
-                    t_max = self._request_total_tokens(plan.blocked)
                     raise alloc_lib.PagePoolExhausted(
                         f"request {plan.blocked.id!r} needs "
-                        f"{self._alloc.worst_pages(t_max, self.scfg.prompt_len)} "
+                        f"{self._demand_pages(plan.blocked)} "
                         f"pages worst-case; pools: {self._alloc.stats()}")
                 # count ADMISSIONS deferred, not scheduler steps: one tick
                 # per request per contiguous blocked span, however many
@@ -918,30 +1054,72 @@ class EngineCore(_EngineBase):
                     self._last_deferred = plan.blocked.id
             else:
                 self._last_deferred = None   # nothing blocked: span over
-            return
+            break
+        # Execute prefix-index registrations DEFERRED by _admit_one: a
+        # registration rescinds the donor's page ownership, which raises
+        # its outstanding reservation — doing that mid-plan could invalidate
+        # the headroom an already-planned same-step admission was checked
+        # against.  After the loop the plan is fully executed, so the
+        # allocator's own guard (free >= outstanding') is the only gate.
+        for key, slot_id, req, slice_caches, logits in self._pending_reg:
+            s = self.slots[slot_id]
+            if s is None or s.request is not req:
+                continue   # retired or preempted before registration
+            if self._alloc.prefix_register(key, slot_id):
+                self._prefix_snap[key] = (slice_caches, logits)
+        self._pending_reg = []
 
     def _admit_one(self, slot_id: int, req: Request) -> None:
-        """Prefill (batch=1), insert the compressed slice into the slot,
-        then either sample the first token (fresh request) or replay the
-        retained tokens (recompute re-admission of a preempted request)."""
+        """Prefill (batch=1) — or alias a cached shared prefix and skip the
+        prefill — insert the compressed slice into the slot, then either
+        sample the first token (fresh request) or replay the retained
+        tokens (recompute re-admission of a preempted request).
+
+        The HIT path re-inserts the stored prefill snapshot: metadata rows
+        and fresh window pages receive the donor's bytes, and the scatter
+        onto the ALIASED hi/lo pages writes the exact bytes they already
+        hold (the donor inserted from the same device buffers) — harmless
+        by idempotence, so one warm `_insert` program serves both paths."""
         t0 = time.perf_counter()
-        prompt = pack_requests([req.tokens], 1, self.scfg.prompt_len)
-        logits, slice_caches = self._prefill(
-            self.params,
-            {"tokens": jnp.asarray(prompt)})  # sync: ok(the prompt upload itself — once per admission, not per step)
-        if self._alloc is not None:
-            # one small host read (three pos rows) -> exact per-segment
-            # valid counts; grant the slot's prefill pages + reserve
-            # its worst case before the insert scatters payload
-            self._alloc.admit(slot_id,
-                              alloc_lib.slice_occupancy(slice_caches),
-                              self._request_total_tokens(req),
-                              self.scfg.prompt_len)
+        n = int(req.tokens.shape[-1])  # sync: ok(np shape tuple, host-side)
+        bucket = self._bucket_len(n)
+        resume = getattr(req, "_resume_tokens", None)
+        if self._prefix_on and self._prefix_hit(req):
+            # shared-prefix hit: point the slot's tables at the cached
+            # pages (refcounts bump) and skip the prefill FLOPs entirely
+            slice_caches, logits = self._prefix_snap[req._prefix_key]
+            self._alloc.admit_alias(slot_id, req._prefix_key,
+                                    self._request_total_tokens(req), bucket,
+                                    can_fold=self._alias_can_fold(req))
+            self._prefix_tokens_skipped += bucket
             self._sync_tables()
+        else:
+            prompt = pack_requests([req.tokens], 1, bucket)
+            logits, slice_caches = self._prefill_for(bucket)(
+                self.params,
+                {"tokens": jnp.asarray(prompt)})  # sync: ok(the prompt upload itself — once per admission, not per step)
+            if self._alloc is not None:
+                # one small host read (three pos rows) -> exact per-segment
+                # valid counts; grant the slot's prefill pages + reserve
+                # its worst case before the insert scatters payload
+                self._alloc.admit(slot_id,
+                                  alloc_lib.slice_occupancy(slice_caches),
+                                  self._request_total_tokens(req),
+                                  bucket)
+                self._sync_tables()
+                if self._prefix_on and req._prefix_key is not None:
+                    self._alloc.prefix_note_miss()
+                    if resume is None:
+                        # index this prefill once the whole plan executed
+                        # (_admit flushes); recompute re-admissions are NOT
+                        # donors — their replay may fold the slot before
+                        # the registration could happen
+                        self._pending_reg.append(
+                            (req._prefix_key, slot_id, req,
+                             slice_caches, logits))
         self.caches = self._insert(
             self.caches, slice_caches,
             jnp.asarray(slot_id, jnp.int32))  # sync: ok(one scalar upload per admission event)
-        resume = getattr(req, "_resume_tokens", None)
         if resume is None:
             temp = jnp.asarray([req.sampling.temperature], jnp.float32)  # sync: ok(admission-time one-shot sample input)
             seed = jnp.asarray([req.sampling.seed], jnp.int32)  # sync: ok(admission-time one-shot sample input)
@@ -1032,12 +1210,41 @@ class EngineCore(_EngineBase):
         self._events.append(events_lib.PreemptedEvent(
             req.id, self._step_no, n_generated=len(req._resume_tokens)))
 
+    def _pack_moves(self, moves: Dict[str, Tuple[List[int], List[int]]]):
+        """Fixed-shape device operands for the page-copy program: per
+        segment, (src, dst) id vectors padded to the per-slot page count
+        with the segment's SINK id (sink->sink self-copies absorb the
+        padding), so the number of real moves never retraces the program."""
+        out = {}
+        for name in alloc_lib.FreeListAllocator.SEGMENTS:
+            seg = self._alloc.segs[name]
+            src, dst = moves.get(name, ((), ()))
+            s = np.full(max(seg.npp, 1), seg.null, np.int32)
+            d = np.full(max(seg.npp, 1), seg.null, np.int32)
+            s[:len(src)] = src
+            d[:len(dst)] = dst
+            out[name] = (
+                jnp.asarray(s),  # sync: ok(two small id-vector uploads per privatized segment per fold event)
+                jnp.asarray(d))  # sync: ok(two small id-vector uploads per privatized segment per fold event)
+        return out
+
     def _fold(self, due_ids: Sequence[int]) -> None:
         """Fold the due slots' staging windows (with the allocator's
         grant-before/shrink-after page movements around the jitted
         program).  Shared by step() and recompute replay."""
         b = self.scfg.batch_size
         if self._alloc is not None:
+            # CoW-before-fold: recompression re-splits hi/lo per slot, so a
+            # slot still aliasing shared-prefix pages must be privatized
+            # first — the allocator repoints its table at fresh pages and
+            # the jitted copy program materializes their payload (page ids
+            # are data operands: one warm program, sink-padded id vectors)
+            for i in due_ids:
+                if self._alloc.needs_privatize(int(i)):
+                    moves = self._alloc.privatize(int(i))
+                    if moves:
+                        self.caches = self._copy_pages(
+                            self.caches, self._pack_moves(moves))
             # grant the hi/lo pages the fold will scatter into BEFORE
             # the program runs (writes through NULL entries would land
             # in the sink and lose tokens)

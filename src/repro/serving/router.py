@@ -34,8 +34,9 @@ device program, and importing it never drags the device runtime in.
 
 from __future__ import annotations
 
+import collections
 import itertools
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence, Set
 
 from repro.serving import events as events_lib
 
@@ -70,7 +71,12 @@ class EngineRouter:
     placement, so callers never need to know which replica ran what.
     """
 
-    def __init__(self, replicas: Sequence, names: Optional[Sequence[str]] = None):
+    # idle-session pins kept before LRU eviction: bounds `_affinity` under
+    # session churn (one-shot sessions used to pin forever — a leak)
+    MAX_IDLE_SESSIONS = 1024
+
+    def __init__(self, replicas: Sequence, names: Optional[Sequence[str]] = None,
+                 max_idle_sessions: Optional[int] = None):
         if not replicas:
             raise ValueError("EngineRouter needs at least one replica")
         self.replicas: List = list(replicas)
@@ -83,7 +89,19 @@ class EngineRouter:
             raise ValueError(f"replica names must be unique: {self.names}")
         self._ids = itertools.count()
         self._placement: Dict[str, int] = {}   # request id -> replica index
-        self._affinity: Dict[str, int] = {}    # session key -> replica index
+        # session key -> replica index, LRU-ordered by last submit.  A pin
+        # is LIVE while any of the session's requests is queued/running and
+        # must never be evicted then (a mid-flight re-pin would split the
+        # session across replicas); IDLE pins are kept — multi-turn traffic
+        # pauses between turns — but only up to `max_idle_sessions`, oldest
+        # evicted first (an evicted session simply re-pins least-loaded on
+        # its next submit).
+        self._affinity: "collections.OrderedDict[str, int]" = \
+            collections.OrderedDict()
+        self._session_live: Dict[str, Set[str]] = {}  # session -> live rids
+        self._req_session: Dict[str, str] = {}        # live rid -> session
+        self._max_idle = (self.MAX_IDLE_SESSIONS if max_idle_sessions is None
+                          else max_idle_sessions)
         self._draining: List[bool] = [False] * len(self.replicas)
 
     # ------------------------------------------------------------------
@@ -126,10 +144,12 @@ class EngineRouter:
         if session is not None and session in self._affinity \
                 and not self._draining[self._affinity[session]]:
             idx = self._affinity[session]
+            self._affinity.move_to_end(session)
         else:
             idx = self._pick()
             if session is not None:
                 self._affinity[session] = idx
+                self._affinity.move_to_end(session)
         if request.id is None:
             rid = f"{self.names[idx]}/req-{next(self._ids)}"
             while rid in self._placement:   # user ids may shadow auto ids
@@ -137,7 +157,50 @@ class EngineRouter:
             request.id = rid
         rid = self.replicas[idx].submit(request)
         self._placement[rid] = idx
+        if session is not None:
+            self._session_live.setdefault(session, set()).add(rid)
+            self._req_session[rid] = session
+        self._trim_idle_sessions()
         return rid
+
+    def _retire_rid(self, rid: str) -> None:
+        """A request finished/cancelled: drop it from its session's live
+        set (the session's pin becomes evictable once the set empties)."""
+        session = self._req_session.pop(rid, None)
+        if session is None:
+            return
+        live = self._session_live.get(session)
+        if live is not None:
+            live.discard(rid)
+            if not live:
+                del self._session_live[session]
+
+    def _session_idle(self, session: str) -> bool:
+        """Idle = no queued/running request.  The live sets are maintained
+        by `step()`/`cancel()`, but a replica driven directly (e.g. via
+        `engine.stream()` generators) retires requests without the router
+        seeing the event — so reconcile against `poll` before trusting a
+        'live' verdict."""
+        live = self._session_live.get(session)
+        if not live:
+            return True
+        for rid in list(live):
+            if self.poll(rid) == "done":
+                self._retire_rid(rid)
+        return session not in self._session_live
+
+    def _trim_idle_sessions(self) -> None:
+        """Evict oldest IDLE affinity pins beyond `max_idle_sessions` so
+        session churn cannot grow `_affinity` without bound."""
+        if len(self._affinity) <= self._max_idle:
+            return
+        excess = len(self._affinity) - self._max_idle
+        for session in list(self._affinity):
+            if excess <= 0:
+                break
+            if self._session_idle(session):
+                del self._affinity[session]
+                excess -= 1
 
     def _replica_of(self, request_id: str):
         if request_id not in self._placement:
@@ -145,7 +208,10 @@ class EngineRouter:
         return self.replicas[self._placement[request_id]]
 
     def cancel(self, request_id: str, reason: str = "client") -> bool:
-        return self._replica_of(request_id).cancel(request_id, reason=reason)
+        done = self._replica_of(request_id).cancel(request_id, reason=reason)
+        if done:
+            self._retire_rid(request_id)
+        return done
 
     def poll(self, request_id: str) -> str:
         return self._replica_of(request_id).poll(request_id)
@@ -171,6 +237,10 @@ class EngineRouter:
         for eng in self.replicas:
             if eng.pending:
                 events.extend(eng.step())
+        for ev in events:
+            if isinstance(ev, (events_lib.FinishedEvent,
+                               events_lib.CancelledEvent)):
+                self._retire_rid(ev.request_id)
         return events
 
     def run(self, max_steps: Optional[int] = None) -> Dict:

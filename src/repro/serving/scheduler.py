@@ -81,12 +81,15 @@ class PoolView:
 
     def __init__(self, alloc, demand_fn):
         self._alloc = alloc                      # FreeListAllocator | None
-        self._demand = demand_fn                 # Request -> (total, prompt)
+        # Request -> {segment: worst pages}.  The engine owns the demand
+        # model: it folds in ragged admission buckets and shared-prefix
+        # aliasing (a planned hit whose pages already exist reserves fewer
+        # pages than a cold miss), so the view just consumes the dict.
+        self._demand = demand_fn
         self._pending: Dict[str, int] = {}
 
     def _worst(self, request: Request) -> Dict[str, int]:
-        total, prompt = self._demand(request)
-        return self._alloc.worst_pages(total, prompt)
+        return self._demand(request)
 
     def fits(self, request: Request) -> bool:
         if self._alloc is None:

@@ -164,6 +164,18 @@ ENGINE_VARIANTS = {
     "admit-watermark": dict(backend="paged", paged_kernel=False,
                             page_allocator="freelist", pool_fraction=1.0,
                             admit_watermark=0.25),
+    # the PREFIX-CACHE axis: content-hash shared-prefix dedup over the
+    # free-list layout.  The scenario's prompts are all DISTINCT, so every
+    # admission is a miss — what the axis exercises is the miss-side
+    # machinery that must never change numerics: ragged page-bucketed
+    # admission, prefix registration rescinding the donor slot's page
+    # ownership, and copy-on-write privatization when a donor slot folds
+    # while its pages sit in the index.  pool_fraction 1.5 provisions the
+    # slack registration needs while both slots run; the HIT side (aliased
+    # pages, skipped prefill) is covered by the shared-prompt test below
+    "prefix-cache": dict(backend="paged", paged_kernel=False,
+                         page_allocator="freelist", pool_fraction=1.5,
+                         prefix_cache=True),
 }
 
 
@@ -352,10 +364,10 @@ def test_cancellation_axis_survivors_bitwise_and_pages_returned(engine_outputs):
     for _ in range(2):                            # rc decodes a little
         eng.step()
     used_before = {k: v["used"] for k, v in eng.pool_stats().items()
-                   if isinstance(v, dict)}
+                   if isinstance(v, dict) and "used" in v}
     assert eng.cancel(rc)
     used_after = {k: v["used"] for k, v in eng.pool_stats().items()
-                  if isinstance(v, dict)}
+                  if isinstance(v, dict) and "used" in v}
     # the cancelled slot's pages are back BEFORE the next step runs
     assert sum(used_after.values()) < sum(used_before.values()), (
         used_before, used_after)
@@ -368,11 +380,71 @@ def test_cancellation_axis_survivors_bitwise_and_pages_returned(engine_outputs):
     assert len(res[rc].tokens) >= 1               # partial output delivered
     # every page returned once everything drained
     final = eng.pool_stats()
-    assert all(v["used"] == 0 for v in final.values() if isinstance(v, dict))
+    assert all(v["used"] == 0 for v in final.values()
+               if isinstance(v, dict) and "used" in v)
     # survivors: bitwise the mixed reference, cancellation invisible
     for out_ref, rid in zip(ref, (r0, r1, r2)):
         np.testing.assert_array_equal(out_ref.tokens, res[rid].tokens)
         assert out_ref.finish_reason == res[rid].finish_reason
+
+
+def test_continuous_engine_token_identical_with_prefix_cache(engine_outputs):
+    """The prefix-cache axis over the standard (all-distinct-prompts)
+    scenario: every admission misses the index, yet registration and
+    CoW-before-fold run for real — a donor slot's pages are rescinded into
+    the index and privatized when its window folds.  None of that may move
+    a single greedy token vs mixed or vs the plain free-list layout."""
+    outs, fills, _, stats = engine_outputs
+    for other in ("mixed", "paged-freelist"):
+        np.testing.assert_array_equal(fills[other], fills["prefix-cache"])
+        for (ra, a), (rb, b) in zip(outs[other].items(),
+                                    outs["prefix-cache"].items()):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert a.finish_reason == b.finish_reason
+    pf = stats["prefix-cache"]["prefix"]
+    assert pf["hits"] == 0 and pf["misses"] >= 1, pf
+
+
+def test_prefix_cache_shared_prompt_dedup_bitwise():
+    """The HIT side of the prefix-cache axis: four requests sharing one
+    system prompt.  With dedup ON, later admissions alias the registered
+    hi/lo pages and skip their prefill entirely; output must stay bitwise
+    identical to dedup OFF, at least one hit and one CoW copy must fire
+    (else the test silently degenerates to the miss-only axis), and the
+    allocator's refcount partition must hold after every step."""
+    cfg = configs.get_arch("yi-6b", smoke=True)
+    ccfg = _ccfg()
+    params = registry.materialize_params(cfg, 0)
+    shared = np.arange(2, 26, dtype=np.int32)   # 24 tokens -> 3-page bucket
+
+    def run(prefix_on):
+        scfg = ServeConfig(batch_size=2, prompt_len=32, max_new_tokens=12,
+                           page_size=8, backend="paged",
+                           page_allocator="freelist", pool_fraction=1.5,
+                           prefix_cache=prefix_on)
+        eng = ContinuousEngine(cfg, ccfg, scfg, params)
+        reqs = [Request(tokens=shared.copy(), id=f"r{i}") for i in range(3)]
+        # a short-budget request that can never fold: its alias reserves
+        # zero hi/lo pages (the never-fold fast path)
+        reqs.append(Request(tokens=shared.copy(), id="r3", max_new_tokens=4))
+        for r in reqs:
+            eng.submit(r)
+        while eng.pending:
+            eng.step()
+            if eng._alloc is not None:
+                eng._alloc.check_invariants()
+        outs = [(tuple(eng.result(r.id).tokens.tolist()),
+                 eng.result(r.id).finish_reason) for r in reqs]
+        return outs, eng.pool_stats()
+
+    out_off, _ = run(False)
+    out_on, st_on = run(True)
+    assert out_on == out_off
+    pf = st_on["prefix"]
+    assert pf["hits"] >= 1, pf
+    assert pf["cow_copies"] >= 1, pf
+    # every hit skipped its whole page-aligned prompt bucket of prefill
+    assert pf["prefill_tokens_skipped"] == 24 * pf["hits"], pf
 
 
 def test_mla_decode_token_identical_across_backends(rng):

@@ -30,8 +30,8 @@ from repro import configs
 from repro.core.policy import CompressionConfig
 from repro.models import registry
 from repro.serving import (CancelledEvent, ContinuousEngine, EngineRouter,
-                           NoReplicaError, Request, ServeConfig, TokenEvent,
-                           UnknownRequestError)
+                           FinishedEvent, NoReplicaError, Request, ServeConfig,
+                           TokenEvent, UnknownRequestError)
 from repro.serving.http import Backoff, HttpFrontend
 
 
@@ -235,6 +235,71 @@ def test_router_cancel_routes_to_placement():
     assert b.cancelled == (rid, "deadline")
 
 
+def test_router_affinity_map_bounded_under_session_churn():
+    """Regression: one-shot sessions used to pin `_affinity` forever — the
+    map grew by one entry per session for the life of the router.  Idle
+    pins (no queued/running request) beyond `max_idle_sessions` must now
+    be LRU-evicted, while live pins are never evicted regardless of the
+    cap (a mid-flight re-pin would split a session across replicas)."""
+    class _PollingReplica(_FakeReplica):
+        def poll(self, rid):
+            return "done" if rid in self.results else "running"
+
+    a, b = _PollingReplica(), _PollingReplica()
+    router = EngineRouter([a, b], names=["a", "b"], max_idle_sessions=8)
+    for i in range(100):
+        rid = router.submit(_req(), session=f"churn-{i}")
+        # the request retires replica-side before the next session arrives
+        (a if rid in a.submitted else b).results[rid] = object()
+    assert len(router._affinity) <= 8 + 1, len(router._affinity)
+    # the side tables stay bounded too (stale entries only for the few
+    # surviving pins the trim never needed to reconcile)
+    assert len(router._session_live) <= 8 + 1
+    assert len(router._req_session) <= 8 + 1
+
+    # live sessions are NEVER evicted, even past the cap...
+    c, d = _PollingReplica(), _PollingReplica()
+    live = EngineRouter([c, d], max_idle_sessions=2)
+    rids = [live.submit(_req(), session=f"live-{i}") for i in range(5)]
+    assert all(f"live-{i}" in live._affinity for i in range(5))
+    # ...and an idle pin below the cap survives for the session's next turn
+    c.results[rids[0]] = d.results[rids[0]] = object()
+    pin = live._affinity["live-0"]
+    live.submit(_req(), session="live-0")
+    assert live._affinity["live-0"] == pin
+
+
+def test_router_retires_sessions_on_finish_and_cancel_events():
+    """The event-driven retirement path: FinishedEvent/CancelledEvent seen
+    in `router.step()` (and a successful `cancel()`) drop the request from
+    its session's live set without any poll reconciliation."""
+    class _EventReplica(_FakeReplica):
+        def __init__(self):
+            super().__init__()
+            self.to_finish = []
+
+        @property
+        def pending(self):
+            return bool(self.to_finish)
+
+        def step(self):
+            evs = [FinishedEvent(request_id=r, step=0, finish_reason="stop",
+                                 n_tokens=1) for r in self.to_finish]
+            self.to_finish = []
+            return evs
+
+    eng = _EventReplica()
+    router = EngineRouter([eng])
+    r1 = router.submit(_req(), session="s")
+    r2 = router.submit(_req(), session="s")
+    assert router._session_live["s"] == {r1, r2}
+    eng.to_finish = [r1]
+    router.step()
+    assert router._session_live["s"] == {r2}
+    assert router.cancel(r2)
+    assert "s" not in router._session_live and not router._req_session
+
+
 def test_router_validates_construction():
     with pytest.raises(ValueError):
         EngineRouter([])
@@ -391,7 +456,8 @@ def test_http_disconnect_cancels_and_returns_pages(engine):
     assert out.finish_reason == "cancelled"
     assert 1 <= len(out.tokens) < 48                # partial, not the budget
     stats = eng.pool_stats()
-    assert all(v["used"] == 0 for v in stats.values() if isinstance(v, dict))
+    assert all(v["used"] == 0 for v in stats.values()
+               if isinstance(v, dict) and "used" in v)
 
 
 def test_http_deadline_cancels(engine):

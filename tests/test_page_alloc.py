@@ -168,6 +168,241 @@ def test_grant_beyond_free_list_is_typed():
 
 
 # ---------------------------------------------------------------------------
+# (a') shared-prefix dedup: refcount / CoW invariants under random sequences
+# ---------------------------------------------------------------------------
+
+_PREFIX_OCC = alloc_lib.Occupancy(hi=3, lo=5, win=0)   # ratio split of 8 tokens
+_PREFIX_PROMPT = 8
+
+
+def _drive_prefix(alloc: alloc_lib.FreeListAllocator, ops):
+    """Replay admit/register/alias/append/fold/free/reclaim sequences the
+    way the engine would: aliases only on indexed keys with headroom,
+    privatize before every fold, never fold a can_fold=False alias.
+    check_invariants after every op; returns op counters so callers can
+    reject vacuous runs."""
+    slots = alloc.slots
+    fold_ok = [True] * slots
+    counts = {"admit": 0, "alias": 0, "register": 0, "fold": 0, "cow": 0,
+              "reclaim": 0}
+    budgets = (16, 40, 64)
+    for op, arg in ops:
+        slot = arg % slots
+        if op == "admit":
+            if alloc.occ[slot] is not None:
+                continue
+            key, t_max = f"k{arg % 3}", budgets[arg % 3]
+            if alloc.prefix_peek(key) is not None:
+                can_fold = arg % 2 == 0
+                worst = alloc.worst_pages(t_max, _PREFIX_PROMPT)
+                if not can_fold:
+                    worst = {**worst, "hi": 0, "lo": 0}
+                if all(alloc.segs[n].headroom(0) >= worst[n]
+                       for n in alloc.SEGMENTS):
+                    alloc.admit_alias(slot, key, t_max, _PREFIX_PROMPT,
+                                      can_fold=can_fold)
+                    fold_ok[slot] = can_fold
+                    counts["alias"] += 1
+            elif alloc.can_admit(t_max, _PREFIX_PROMPT):
+                alloc.admit(slot, _PREFIX_OCC, t_max, _PREFIX_PROMPT)
+                fold_ok[slot] = True
+                counts["admit"] += 1
+                # the engine registers fresh admissions at the end of the
+                # same _admit pass (win still 0)
+                if arg % 4 != 3:
+                    counts["register"] += alloc.prefix_register(key, slot)
+        elif alloc.occ[slot] is None:
+            continue
+        elif op == "append":
+            if alloc.occ[slot].win < alloc.window:
+                alloc.note_append(slot)
+        elif op == "fold":
+            if not fold_ok[slot]:
+                continue            # never-fold alias: zero hi/lo reserved
+            if alloc.needs_privatize(slot):
+                moves = alloc.privatize(slot)
+                counts["cow"] += sum(len(s) for s, _ in moves.values())
+            alloc.fold_grant(slot)
+            alloc.fold_shrink(slot)
+            counts["fold"] += 1
+        elif op == "free":
+            alloc.free(slot)
+        elif op == "reclaim":
+            counts["reclaim"] += len(alloc.prefix_reclaim())
+        alloc.check_invariants()
+    return counts
+
+
+def _prefix_op_sequence(seed: int, n: int):
+    rng = np.random.default_rng(seed)
+    kinds = ("admit", "admit", "append", "append", "fold", "free", "reclaim")
+    return [(kinds[int(rng.integers(len(kinds)))], int(rng.integers(64)))
+            for _ in range(n)]
+
+
+def _prefix_alloc(slots, page, fraction):
+    caps = (24, 40, 8)
+    pools = tuple(
+        max(int(np.ceil(slots * alloc_lib.pages_for(c, page) * fraction)),
+            alloc_lib.pages_for(c, page))
+        for c in caps)
+    return alloc_lib.FreeListAllocator(slots, page, caps, pools)
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       slots=st.integers(min_value=1, max_value=4),
+       page=st.sampled_from([4, 8]),
+       fraction=st.floats(min_value=0.5, max_value=1.6))
+@settings(max_examples=50, deadline=None)
+def test_prefix_invariants_random_sequences(seed, slots, page, fraction):
+    """The refcount partition (every page free XOR refcount == table+index
+    references), reservation coverage THROUGH ownership rescission, and no
+    PagePoolExhausted ever — under random interleavings of registration,
+    aliasing, CoW privatization, folds, eviction and slot churn.
+    Fractions above 1.0 exercise the registration slack path."""
+    alloc = _prefix_alloc(slots, page, fraction)
+    _drive_prefix(alloc, _prefix_op_sequence(seed, 120))
+    alloc.check_invariants()
+    # drain: free every slot, evict the whole index — conservation closes
+    for s in range(slots):
+        if alloc.occ[s] is not None:
+            alloc.free(s)
+    alloc.prefix_reclaim(min_pages=10**9)
+    alloc.check_invariants()
+    for name, seg in alloc.segs.items():
+        assert len(seg.free) == seg.pool_pages, name
+        assert not seg.refcount.any(), name
+
+
+def test_prefix_invariants_deterministic_sweep():
+    """Stub-proof fixed-seed sweep of the dedup property test; asserts the
+    interesting transitions (registration, alias, CoW) all actually fired
+    somewhere in the sweep."""
+    totals = {"alias": 0, "register": 0, "cow": 0}
+    for seed in range(30):
+        slots = 2 + seed % 3
+        page = (4, 8)[seed % 2]
+        fraction = (0.7, 1.0, 1.5)[seed % 3]
+        alloc = _prefix_alloc(slots, page, fraction)
+        counts = _drive_prefix(alloc, _prefix_op_sequence(seed, 150))
+        alloc.check_invariants()
+        for k in totals:
+            totals[k] += counts[k]
+        for s in range(slots):
+            if alloc.occ[s] is not None:
+                alloc.free(s)
+        alloc.prefix_reclaim(min_pages=10**9)
+        for seg in alloc.segs.values():
+            assert len(seg.free) == seg.pool_pages
+            assert not seg.refcount.any()
+    assert all(v > 0 for v in totals.values()), totals
+
+
+def test_alias_write_privatize_roundtrip():
+    """The full CoW story, step by step: register a donor, alias a second
+    slot, privatize the alias before its fold (pages copied, refcounts
+    down), privatize the donor (its ownership was rescinded at
+    registration), fold both, retire everything — the index entry keeps
+    its pages alive until eviction returns them."""
+    alloc = _prefix_alloc(2, 8, 1.5)
+    alloc.admit(0, _PREFIX_OCC, 40, _PREFIX_PROMPT)
+    assert alloc.prefix_register("sys", 0)
+    entry = alloc.prefix_peek("sys")
+    # donor no longer owns its prefix pages; index holds one ref each
+    assert alloc.needs_privatize(0)
+    hi = alloc.segs["hi"]
+    donor_pages = [int(p) for p in hi.table[0, :hi.granted[0]]]
+    assert all(hi.refcount[p] == 2 for p in donor_pages)
+
+    alloc.admit_alias(1, "sys", 40, _PREFIX_PROMPT, can_fold=True)
+    assert entry.hits == 1
+    assert all(hi.refcount[p] == 3 for p in donor_pages)
+    assert alloc.stats()["prefix"]["shared_pages"] >= 1
+    alloc.check_invariants()
+
+    # fold_grant refuses to write through aliased pages...
+    with pytest.raises(AssertionError, match="privatize"):
+        alloc.fold_grant(1)
+    # ...privatizing swaps in owned copies and the fold proceeds
+    moves = alloc.privatize(1)
+    assert moves and all(s != d for name in moves
+                         for s, d in zip(*moves[name]))
+    assert all(hi.refcount[p] == 2 for p in donor_pages)
+    assert not alloc.needs_privatize(1)
+    alloc.fold_grant(1)
+    alloc.fold_shrink(1)
+    alloc.check_invariants()
+
+    alloc.privatize(0)
+    alloc.fold_grant(0)
+    alloc.fold_shrink(0)
+    assert all(hi.refcount[p] == 1 for p in donor_pages)  # index only
+    alloc.check_invariants()
+
+    alloc.free(0)
+    alloc.free(1)
+    # the index entry still pins its pages...
+    assert all(hi.refcount[p] == 1 for p in donor_pages)
+    alloc.check_invariants()
+    # ...until eviction closes conservation
+    assert alloc.prefix_reclaim(min_pages=10**9) == ["sys"]
+    for seg in alloc.segs.values():
+        assert len(seg.free) == seg.pool_pages
+        assert not seg.refcount.any()
+
+
+def test_sole_referent_alias_is_adopted_without_copy():
+    """After the index entry is evicted, an alias whose pages nobody else
+    references privatizes by ADOPTION: ownership flips in place, no device
+    copy is issued."""
+    alloc = _prefix_alloc(2, 8, 1.5)
+    alloc.admit(0, _PREFIX_OCC, 16, _PREFIX_PROMPT)
+    assert alloc.prefix_register("sys", 0)
+    alloc.free(0)                          # donor gone: index is sole holder
+    alloc.admit_alias(1, "sys", 40, _PREFIX_PROMPT, can_fold=True)
+    assert alloc.prefix_reclaim(min_pages=10**9) == ["sys"]
+    alloc.check_invariants()
+    assert alloc.needs_privatize(1)        # not owned...
+    assert alloc.privatize(1) == {}        # ...but refcount 1: no copies
+    assert not alloc.needs_privatize(1)
+    assert alloc.cow_copies == 0
+    alloc.fold_grant(1)
+    alloc.fold_shrink(1)
+    alloc.check_invariants()
+
+
+def test_regrant_of_still_referenced_page_asserts():
+    """The stale-page-id guard: a page that reaches the free list while a
+    table or the index still references it must trip the grant-time assert
+    (the same-step free/re-grant corruption), not silently land in two
+    slots' tables at the next sync."""
+    alloc = _prefix_alloc(2, 8, 1.0)
+    alloc.admit(0, _PREFIX_OCC, 16, _PREFIX_PROMPT)
+    hi = alloc.segs["hi"]
+    stale = int(hi.table[0, 0])
+    hi.free.append(stale)                  # simulate the stale-free bug
+    with pytest.raises(AssertionError, match="refcount"):
+        hi.grant(1, 1)                     # LIFO: pops the corrupted entry
+
+
+def test_register_refused_without_slack_is_not_corrupting():
+    """At pool_fraction 1.0 with every slot running there is no headroom to
+    cover a donor's rescinded ownership: registration must refuse (False)
+    and leave allocator state untouched — grants stay infallible."""
+    alloc = _prefix_alloc(2, 8, 1.0)
+    alloc.admit(0, _PREFIX_OCC, 64, _PREFIX_PROMPT)
+    alloc.admit(1, _PREFIX_OCC, 64, _PREFIX_PROMPT)
+    hi = alloc.segs["hi"]
+    before = (hi.table.copy(), hi.refcount.copy(), hi.owned.copy())
+    assert not alloc.prefix_register("sys", 0)
+    assert not alloc.prefix and not alloc.needs_privatize(0)
+    after = (hi.table, hi.refcount, hi.owned)
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a, b)
+    alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
 # (b) the host-side occupancy mirror vs the real recompression
 # ---------------------------------------------------------------------------
 

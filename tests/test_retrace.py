@@ -121,6 +121,49 @@ def test_paged_freelist_engine_zero_compiles_at_steady_state():
     assert eng.pool_stats()["deferrals"] > deferrals_before
 
 
+def _drive_prefix_scenario(eng, shared, fresh):
+    """Shared-prefix traffic: three requests on one system prompt (two
+    full-budget — they fold, so their aliased pages privatize via the CoW
+    copy program — plus one short never-fold alias) and one distinct
+    prompt (the miss/register path).  Prompts are 24 tokens against
+    prompt_len 32, so admission runs the 24-token-bucket prefill program,
+    not the full-length one."""
+    for i in range(2):
+        eng.submit(Request(tokens=shared.copy()))
+    eng.submit(Request(tokens=shared.copy(), max_new_tokens=4))
+    eng.submit(Request(tokens=fresh))
+    eng.run()
+
+
+def test_prefix_cache_engine_zero_compiles_at_steady_state():
+    """Alias admission, CoW privatization (the page-copy program takes
+    sink-padded page-id VECTORS as data, so one warm program serves every
+    privatization), ragged-bucket prefill, registration and index-hit
+    insertion must all run on warm programs: the second pass hits the
+    warmup pass's index entry — skipping prefill outright — and still
+    compiles exactly zero."""
+    cfg, eng = _engine(backend="paged", page_size=8,
+                       page_allocator="freelist", pool_fraction=1.5,
+                       prefix_cache=True)
+    shared = np.arange(2, 26, dtype=np.int32)
+
+    with compile_guard.count_compiles() as warm:
+        _drive_prefix_scenario(eng, shared, _prompts(cfg, seed=0, n=1)[0])
+    assert warm.count > 0, "warmup must compile (guard sanity check)"
+    pf = eng.pool_stats()["prefix"]
+    assert pf["hits"] >= 1 and pf["cow_copies"] >= 1, pf
+
+    # same shared prompt again: every aliased admission now HITS the warm
+    # index (no prefill at all), privatizes, folds — zero new programs
+    with compile_guard.assert_no_compiles() as steady:
+        _drive_prefix_scenario(eng, shared, _prompts(cfg, seed=1, n=1)[0])
+    assert steady.count == 0
+    pf2 = eng.pool_stats()["prefix"]
+    assert pf2["hits"] > pf["hits"], (pf, pf2)
+    assert pf2["cow_copies"] > pf["cow_copies"], (pf, pf2)
+    eng._alloc.check_invariants()
+
+
 def test_http_server_loop_zero_compiles_at_steady_state():
     """The acceptance criterion for the network front: the asyncio
     HTTP/SSE server driving the engine must stay on warm programs too.

@@ -89,14 +89,27 @@ def serve_flag_fields(serve_path: Path) -> Dict[str, str]:
 
 
 def fixture_axes(fixture_path: Path) -> Set[str]:
-    """ServeConfig fields the conformance module exercises: keywords of
-    every `dict(...)` call (the ENGINE_VARIANTS rows) plus keywords of
-    every `ServeConfig(...)` call."""
+    """ServeConfig fields the conformance module exercises: keywords of the
+    `dict(...)` rows ASSIGNED TO ENGINE_VARIANTS plus keywords of every
+    `ServeConfig(...)` call.  Only the ENGINE_VARIANTS assignment counts —
+    a stray `dict(...)` helper elsewhere in the module must not be able to
+    satisfy coverage for a flag the variant matrix never runs."""
     tree = ast.parse(fixture_path.read_text(), filename=str(fixture_path))
     axes: Set[str] = set()
+    variant_dicts: List[ast.Call] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "ENGINE_VARIANTS"
+                for t in node.targets):
+            variant_dicts.extend(
+                n for n in ast.walk(node.value)
+                if isinstance(n, ast.Call)
+                and common.dotted_name(n.func) == "dict")
+    for node in variant_dicts:
+        axes.update(kw.arg for kw in node.keywords if kw.arg)
     for node in ast.walk(tree):
         if isinstance(node, ast.Call) \
-                and common.dotted_name(node.func) in ("dict", "ServeConfig"):
+                and common.dotted_name(node.func) == "ServeConfig":
             axes.update(kw.arg for kw in node.keywords if kw.arg)
     return axes
 
