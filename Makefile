@@ -3,8 +3,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-conformance test-kernels test-alloc \
-    test-scheduling test-http test-prefix test-retrace test-ci lint \
-    docs-check dev serve bench
+    test-scheduling test-http test-prefix test-precision test-retrace \
+    test-ci lint docs-check dev serve bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -65,6 +65,16 @@ test-prefix:
 	    "tests/test_backend_conformance.py::test_continuous_engine_token_identical_with_prefix_cache" \
 	    "tests/test_backend_conformance.py::test_prefix_cache_shared_prompt_dedup_bitwise" \
 	    "tests/test_retrace.py::test_prefix_cache_engine_zero_compiles_at_steady_state"
+
+# adaptive precision: map parsing/algebra + kernel-vs-oracle under
+# heterogeneous maps, the effective-bits property suite, the precision-map
+# conformance axis + downshift pressure scenario, the downshift-storm
+# allocator regression, and both zero-compile steady-state proofs
+test-precision:
+	$(PYTHON) -m pytest -x -q tests/test_precision.py
+	$(PYTHON) -m pytest -x -q -k "eff or precision or downshift or raw16" \
+	    tests/test_quant.py tests/test_backend_conformance.py \
+	    tests/test_page_alloc.py tests/test_retrace.py
 
 # README/docs stay mechanically honest: flag tables vs the live argparse
 # surface, python snippets parse, referenced paths exist (tools/check_docs.py)

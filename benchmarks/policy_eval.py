@@ -14,15 +14,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import precision as precision_lib
 from repro.core import saliency as sal
 from repro.core.policy import CompressionConfig
 from repro.models import blocks, registry
 
 
 def eval_ce_compressed(cfg, params, batches, ccfg: CompressionConfig,
-                       recompress: bool = True) -> float:
-    """Mean teacher-forced CE over the decoded half under `ccfg`."""
-    ces = []
+                       recompress: bool = True,
+                       precision_spec: str | None = None,
+                       rung: int | None = None) -> float:
+    """Mean teacher-forced CE over the decoded half under `ccfg`.
+
+    precision_spec: optional `--precision-map` spec — resolved against the
+    model shape and threaded through `RunCtx.precision`, exactly the
+    serving path.  rung: optional downshift-ladder rung; recompressions
+    then run the rung-folded program (lo-store effective bits lowered by
+    `rung`, floor 1 — the steady state of a pressured engine)."""
+    ce, _ = _teacher_forced(cfg, params, batches, ccfg, recompress,
+                            precision_spec, rung)
+    return ce
+
+
+def _teacher_forced(cfg, params, batches, ccfg: CompressionConfig,
+                    recompress: bool = True,
+                    precision_spec: str | None = None,
+                    rung: int | None = None,
+                    collect_lps: bool = False):
+    """Core loop behind `eval_ce_compressed`; with `collect_lps` also
+    returns the full per-step log-softmax rows (list of (steps, b, vocab)
+    arrays, one per batch) so callers can measure divergence from a
+    reference policy instead of CE against noisy data."""
+    table = None
+    if precision_spec:
+        pm = precision_lib.parse_precision_map(precision_spec)
+        if pm is not None:
+            table = pm.resolve(cfg.n_layers, cfg.n_kv_heads)
+    ces, all_lps = [], []
     for batch in batches:
         toks = jnp.asarray(batch["tokens"])
         b, l = toks.shape
@@ -34,19 +62,26 @@ def eval_ce_compressed(cfg, params, batches, ccfg: CompressionConfig,
             ratio = 1.0 if strat == "all" else ccfg.probe_ratio
             probe = sal.select_probes(qlen, strat, ratio, ccfg.seed)
         ctx = blocks.RunCtx(ccfg=ccfg, probe=probe, max_cache_len=l + 8,
-                            q_block=min(64, l0))
+                            q_block=min(64, l0), precision=table)
 
         prefill = jax.jit(lambda p, t: registry.prefill(p, {"tokens": t}, cfg, ctx))
         decode = jax.jit(lambda p, t, c, ip: registry.decode_step(p, t, c, cfg, ctx, ip))
-        recomp = jax.jit(lambda c: registry.recompress(c, cfg, ctx))
+        if rung is None:
+            recomp = jax.jit(lambda c: registry.recompress(c, cfg, ctx))
+        else:
+            r = jnp.asarray(int(rung), jnp.int32)
+            recomp = jax.jit(lambda c: registry.recompress(c, cfg, ctx, rung=r))
 
         logits, caches = prefill(params, toks[:, :l0])
         ce_sum, n = 0.0, 0
         rng = np.random.default_rng(0)
         since = 0
+        lps = []
         for t in range(l0, l):
             tgt = toks[:, t]
             lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            if collect_lps:
+                lps.append(np.asarray(lp))
             ce_sum += float(-jnp.mean(jnp.take_along_axis(lp, tgt[:, None], 1)))
             n += 1
             if t + 1 < l:
@@ -57,7 +92,103 @@ def eval_ce_compressed(cfg, params, batches, ccfg: CompressionConfig,
                     caches = recomp(caches)
                     since = 0
         ces.append(ce_sum / n)
-    return float(np.mean(ces))
+        if collect_lps:
+            all_lps.append(np.stack(lps))
+    return float(np.mean(ces)), (all_lps if collect_lps else None)
+
+
+def kl_vs_reference(ref_lps, lps) -> float:
+    """Mean KL(ref || policy) over decoded positions, from the log-softmax
+    rows `_teacher_forced(collect_lps=True)` returns.  Teacher forcing
+    feeds the TRUE tokens under every policy, so positions align exactly
+    and the divergence isolates what compression did to the output
+    distribution — unlike CE against data, whose noise floor swamps
+    sub-0.01 effects at this model scale."""
+    return float(np.mean([np.sum(np.exp(r) * (r - p), axis=-1).mean()
+                          for r, p in zip(ref_lps, lps)]))
+
+
+def effective_mean_bits(ccfg: CompressionConfig, cfg,
+                        precision_spec: str | None = None,
+                        rung: int = 0) -> float:
+    """Mean effective bits per cached token under a map and/or ladder rung:
+    the saliency-weighted mix of hi/lo effective bits
+    (`precision.effective_bits`).  Container bytes are map-independent —
+    this is the entropy-budget axis of the accuracy-vs-bits Pareto."""
+    table = None
+    if precision_spec:
+        pm = precision_lib.parse_precision_map(precision_spec)
+        if pm is not None:
+            table = pm.resolve(cfg.n_layers, cfg.n_kv_heads)
+    eb = precision_lib.effective_bits(table, ccfg.high_bits, ccfg.low_bits)
+    lo = max(1.0, eb["lo_bits"] - rung)
+    r = ccfg.saliency_ratio
+    return r * eb["hi_bits"] + (1 - r) * lo
+
+
+def adaptive_precision_pareto(cfg, params, batches,
+                              saliency_ratio: float = 0.4):
+    """Adaptive precision vs fixed uniform ceilings on IDENTICAL ZipCache
+    containers (8/8): {name: {"bits", "kl", "ce"}}.
+
+    Quality axis is KL from the FP16 reference (`kl_vs_reference`) — CE
+    against data is flat to ~0.005 at this model scale, so it cannot rank
+    policies; divergence from the uncompressed model's own distribution
+    is monotone in bits and isolates compression damage.
+
+    The fixed baselines spend their budget uniformly (one ceiling
+    everywhere).  The adaptive points spend it non-uniformly: the
+    downshift ladder's rungs keep salient (hi-store) tokens at full
+    container precision and lower only the lo store — the operating
+    points a pressured engine actually visits — and the per-layer map
+    protects the early layer while ceiling the rest.  A fixed-precision
+    system under the same pressure can only move whole slots to a lower
+    uniform ceiling, so its population average traces the straight line
+    between fixed points; the ladder claim in `bench_table3` is that the
+    rung curve sits BELOW that mixture line.  `ladder-rung5` floors the
+    lo store at 3 bits and lands ABOVE it — the emergency end of the
+    ladder trades quality for pages, and the bench reports it as such."""
+    base = dataclasses.replace(CompressionConfig.zipcache(saliency_ratio),
+                               high_bits=8, low_bits=8,
+                               fp_window=8, recompress_interval=16)
+    ref = dataclasses.replace(CompressionConfig.fp16(),
+                              fp_window=8, recompress_interval=16)
+    _, ref_lps = _teacher_forced(cfg, params, batches, ref, collect_lps=True)
+    runs = {
+        "fixed-7/7": dict(precision_spec="default=k7v7"),
+        "fixed-6/6": dict(precision_spec="default=k6v6"),
+        "fixed-5/5": dict(precision_spec="default=k5v5"),
+        "fixed-4/4": dict(precision_spec="default=k4v4"),
+        "ladder-rung2": dict(rung=2),
+        "ladder-rung3": dict(rung=3),
+        "ladder-rung4": dict(rung=4),
+        "ladder-rung5": dict(rung=5),
+        "map-adaptive": dict(precision_spec="layer:0=k6v6;layer:1-=k4v4"),
+    }
+    out = {}
+    for name, kw in runs.items():
+        ce, lps = _teacher_forced(cfg, params, batches, base,
+                                  collect_lps=True, **kw)
+        bits = effective_mean_bits(base, cfg, kw.get("precision_spec"),
+                                   kw.get("rung") or 0)
+        out[name] = {"bits": bits, "kl": kl_vs_reference(ref_lps, lps),
+                     "ce": ce}
+    return out
+
+
+def fixed_frontier_kl(pareto: dict, bits: float) -> float:
+    """KL of the fixed-uniform frontier at `bits`: linear interpolation
+    between the bracketing `fixed-*` points — the population average of a
+    fixed-precision system that answers pressure by moving some slots to
+    the next uniform ceiling down."""
+    pts = sorted((p["bits"], p["kl"]) for n, p in pareto.items()
+                 if n.startswith("fixed-"))
+    for (b0, k0), (b1, k1) in zip(pts, pts[1:]):
+        if b0 <= bits <= b1:
+            w = 0.0 if b1 == b0 else (bits - b0) / (b1 - b0)
+            return k0 + w * (k1 - k0)
+    raise ValueError(f"bits {bits} outside the fixed frontier "
+                     f"[{pts[0][0]}, {pts[-1][0]}]")
 
 
 def paper_policies(saliency_ratio: float = 0.4):

@@ -191,6 +191,12 @@ class ShapeConfig:
     #                      page dedup with copy-on-write tables — identical
     #                      page-aligned prompts alias one set of immutable
     #                      hi/lo pages and skip their prefill (core/alloc.py)
+    precision_map: str = ""  # per-layer/head (nbits_key, nbits_value)
+    #                      ceilings on the quantizers' effective bits
+    #                      (core/precision.py grammar: compact rules like
+    #                      "default=k8v8;layer:2-:head:0-1=k2v2" or the
+    #                      KVTuner JSON shape); "" disables maps — the
+    #                      bitwise-default static-qmax path
 
 
 SHAPES = {

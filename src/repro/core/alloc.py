@@ -335,6 +335,16 @@ class FreeListAllocator:
         # counter makes that page churn visible in `stats()` next to the
         # admission deferrals.
         self.preemptions = 0
+        # downshift ladder (pressure-driven precision backpressure): each
+        # downshift early-folds a victim's staging window at a lowered
+        # lo-store effective bit-width instead of deferring/evicting —
+        # `downshift_pages_freed` counts the window pages that fold
+        # returned, `downshift_refusals` the victims skipped because their
+        # tables alias prefix-cache pages (refcount > 1: immutable shared
+        # pages keep their rung until CoW privatization)
+        self.downshifts = 0
+        self.downshift_pages_freed = 0
+        self.downshift_refusals = 0
         # shared-prefix page index: content chain-hash -> PrefixEntry, in
         # LRU order (hits move to the end; reclaim evicts from the front)
         self.prefix: "collections.OrderedDict[str, PrefixEntry]" = \
@@ -518,6 +528,31 @@ class FreeListAllocator:
                 self.dirty = True
         self.occ[slot] = dataclasses.replace(occ, win=occ.win + 1)
 
+    def pool_pressure(self) -> float:
+        """Min free FRACTION across the segments (0.0 = some pool is dry,
+        1.0 = all pools idle) — the downshift ladder's trigger signal:
+        the engine downshifts a victim when this drops to or below its
+        `ladder_watermark`.  Empty pools (capacity-0 segments) are skipped."""
+        fracs = [len(seg.free) / seg.pool_pages
+                 for seg in self.segs.values() if seg.pool_pages > 0]
+        return min(fracs) if fracs else 1.0
+
+    def note_downshift(self, slot: int, pages_freed: int) -> None:
+        """Account one ladder downshift of `slot`: its staging window was
+        early-folded at a lowered lo-store effective bit-width and
+        `pages_freed` window pages came back to the pool.  Pure bookkeeping
+        — the page returns themselves go through `fold_shrink` as on any
+        fold, so every grant/free invariant is already enforced there."""
+        assert self.occ[slot] is not None, f"downshift of unoccupied slot {slot}"
+        self.downshifts += 1
+        self.downshift_pages_freed += int(pages_freed)
+
+    def note_downshift_refusal(self) -> None:
+        """Account a skipped victim: its tables alias shared prefix pages
+        (refcount > 1), and immutable shared pages must keep their rung
+        until CoW privatization gives the slot its own copies."""
+        self.downshift_refusals += 1
+
     def needs_privatize(self, slot: int) -> bool:
         """True if the slot's tables hold any page it does not own — the
         engine must `privatize` (CoW) before a fold writes through them."""
@@ -590,13 +625,17 @@ class FreeListAllocator:
         self.occ[slot] = dataclasses.replace(new, win=occ.win)
         self.dirty |= grew
 
-    def fold_shrink(self, slot: int) -> None:
+    def fold_shrink(self, slot: int) -> int:
         """AFTER the recompression program: the staging window emptied —
-        return all of the slot's window pages to the free list."""
+        return all of the slot's window pages to the free list.  Returns
+        how many pages came back (the downshift ladder's "pages freed"
+        accounting reads this; an ordinary fold ignores it)."""
         occ = self.occ[slot]
         assert occ is not None
+        returned = int(self.segs["win"].granted[slot])
         self.dirty |= self.segs["win"].shrink(slot, 0)
         self.occ[slot] = dataclasses.replace(occ, win=0)
+        return returned
 
     def free(self, slot: int) -> None:
         """Retire a slot: return every granted page, drop its reservation.
@@ -697,6 +736,11 @@ class FreeListAllocator:
                       "outstanding": seg.outstanding}
         out["deferrals"] = self.deferrals
         out["preemptions"] = self.preemptions
+        out["downshift"] = {
+            "downshifts": self.downshifts,
+            "pages_freed": self.downshift_pages_freed,
+            "refusals": self.downshift_refusals,
+        }
         # shared-prefix telemetry: `shared_pages` counts pages backing more
         # than one referent right now; `saved_pages` is the pages dedup is
         # currently NOT spending (sum of refcount-1 over the pools) — the

@@ -43,8 +43,13 @@ class CacheBackend(Protocol):
         ...
 
     def compress_prefill(self, k, v, token_saliency, max_len: int,
-                         probe_nnz=None, dtype=jnp.bfloat16) -> Any:
-        """Compress full-sequence prefill K/V into a fresh cache (Alg. 2)."""
+                         probe_nnz=None, dtype=jnp.bfloat16, eff=None) -> Any:
+        """Compress full-sequence prefill K/V into a fresh cache (Alg. 2).
+
+        eff: optional `precision.LayerEff` — the calling layer's effective
+        bits under a per-layer/head precision map; None = container widths
+        (bitwise legacy path).  Computed by the model code (which knows the
+        layer index); backends only pass it through to the quantizers."""
         ...
 
     def append(self, cache, k_t, v_t, active=None) -> Any:
@@ -66,9 +71,12 @@ class CacheBackend(Protocol):
         """Fold a probe row's attention mass into saliency state (Eq. 8)."""
         ...
 
-    def recompress(self, cache, rows=None) -> Any:
+    def recompress(self, cache, rows=None, eff=None) -> Any:
         """Fold the staging window back into the stores (Alg. 3); `rows`
-        restricts to a subset of slots (per-request cadence)."""
+        restricts to a subset of slots (per-request cadence).  `eff`: see
+        `compress_prefill` — here it may also carry a per-slot downshift
+        rung folded in (`precision.rung_eff`), riding as a data operand so
+        one warm program serves every rung."""
         ...
 
     def insert(self, cache, slice_cache, slot) -> Any:
@@ -108,9 +116,9 @@ class MixedKVBackend:
         return kvc.init_cache(self.ccfg, b, h_kv, d, max_len, dtype, d_v=d_v)
 
     def compress_prefill(self, k, v, token_saliency, max_len,
-                         probe_nnz=None, dtype=jnp.bfloat16):
+                         probe_nnz=None, dtype=jnp.bfloat16, eff=None):
         return kvc.compress_prefill(self.ccfg, k, v, token_saliency, max_len,
-                                    probe_nnz=probe_nnz, dtype=dtype)
+                                    probe_nnz=probe_nnz, dtype=dtype, eff=eff)
 
     def append(self, cache, k_t, v_t, active=None):
         return kvc.append_token(cache, k_t, v_t, active=active)
@@ -123,8 +131,8 @@ class MixedKVBackend:
     def update_probe(self, cache, slot_weights, is_probe):
         return kvc.update_probe_state(cache, slot_weights, is_probe)
 
-    def recompress(self, cache, rows=None):
-        return kvc.recompress(self.ccfg, cache, rows=rows)
+    def recompress(self, cache, rows=None, eff=None):
+        return kvc.recompress(self.ccfg, cache, rows=rows, eff=eff)
 
     def insert(self, cache, slice_cache, slot):
         return kvc.insert_slot(cache, slice_cache, slot)

@@ -88,8 +88,16 @@ def _quantize_kv(
     v: jnp.ndarray,
     bits: int,
     cfg: CompressionConfig,
+    eff_k=None,
+    eff_v=None,
 ) -> Tuple[quant.QuantizedTensor, quant.QuantizedTensor]:
-    """Quantize gathered K/V token blocks per the policy's schemes."""
+    """Quantize gathered K/V token blocks per the policy's schemes.
+
+    eff_k/eff_v: optional effective-bit arrays (core/precision.py), already
+    broadcast-ready against (b, h, n, d) — (h, 1, 1) per-head, (b, h, 1, 1)
+    with a downshift rung.  None = the container width, bitwise the legacy
+    path.  Raw (>= 16 bit) stores are identity storage and ignore the map.
+    """
     if k.shape[-2] == 0:
         return _empty_quant(k, bits), _empty_quant(v, bits)
     if bits >= 16:
@@ -98,8 +106,8 @@ def _quantize_kv(
     gv = min(cfg.group_size, v.shape[-1])
     kw_k = {"group_size": gk} if cfg.key_scheme == "groupwise" else {}
     kw_v = {"group_size": gv} if cfg.value_scheme == "groupwise" else {}
-    qk = quant.quantize(k, bits, cfg.key_scheme, **kw_k)
-    qv = quant.quantize(v, bits, cfg.value_scheme, **kw_v)
+    qk = quant.quantize(k, bits, cfg.key_scheme, eff=eff_k, **kw_k)
+    qv = quant.quantize(v, bits, cfg.value_scheme, eff=eff_v, **kw_v)
     return qk, qv
 
 
@@ -111,8 +119,10 @@ def build_store(
     nnz: jnp.ndarray,
     bits: int,
     cfg: CompressionConfig,
+    eff_k=None,
+    eff_v=None,
 ) -> TokenStore:
-    qk, qv = _quantize_kv(k, v, bits, cfg)
+    qk, qv = _quantize_kv(k, v, bits, cfg, eff_k=eff_k, eff_v=eff_v)
     return TokenStore(qk, qv, pos.astype(jnp.int32), acc.astype(jnp.float32), nnz.astype(jnp.float32))
 
 
@@ -260,13 +270,21 @@ def compress_prefill(
     max_len: int,
     probe_nnz: Optional[jnp.ndarray] = None,
     dtype=jnp.bfloat16,
+    eff=None,
 ) -> MixedKVCache:
     """Compress prefill K/V (b, h_kv, l, d) into a MixedKVCache sized max_len.
 
     token_saliency: (b, l) pooled saliency (None for saliency-free policies).
     probe_nnz: (b, l) probe counts backing `token_saliency` (carried so
     streaming recompression keeps a consistent Eq. 8 denominator).
+    eff: optional `precision.LayerEff` — this layer's effective bits for the
+    hi/lo stores under a precision map; None = container widths (bitwise
+    legacy).  Raw (fp16 / kivi window / h2o-kept) segments ignore it.
     """
+    eff_hi_k = eff.hi_k if eff is not None else None
+    eff_hi_v = eff.hi_v if eff is not None else None
+    eff_lo_k = eff.lo_k if eff is not None else None
+    eff_lo_v = eff.lo_v if eff is not None else None
     b, h_kv, l, d = k.shape
     s_hi, s_lo, w = capacities(cfg, max_len)
     cache = init_cache(cfg, b, h_kv, d, max_len, dtype, d_v=v.shape[-1])
@@ -292,7 +310,8 @@ def compress_prefill(
             body = slice(0, n_body)
             k_pad, v_pad, pos_pad, acc_pad, nnz_pad = _pad_tokens(
                 k[:, :, body], v[:, :, body], positions[:, body], acc[:, body], nnz[:, body], s_lo)
-            lo = build_store(k_pad, v_pad, pos_pad, acc_pad, nnz_pad, cfg.low_bits, cfg)
+            lo = build_store(k_pad, v_pad, pos_pad, acc_pad, nnz_pad, cfg.low_bits, cfg,
+                             eff_k=eff_lo_k, eff_v=eff_lo_v)
             n_win = l - n_body
             k_w = jnp.zeros((b, h_kv, w, d), dtype).at[:, :, :n_win].set(k[:, :, n_body:].astype(dtype))
             v_w = jnp.zeros((b, h_kv, w, v.shape[-1]), dtype).at[:, :, :n_win].set(v[:, :, n_body:].astype(dtype))
@@ -302,7 +321,8 @@ def compress_prefill(
                 length=jnp.full((b,), l, jnp.int32),
                 win_fill=jnp.full((b,), n_win, jnp.int32))
         k_pad, v_pad, pos_pad, acc_pad, nnz_pad = _pad_tokens(k, v, positions, acc, nnz, s_lo)
-        lo = build_store(k_pad, v_pad, pos_pad, acc_pad, nnz_pad, cfg.low_bits, cfg)
+        lo = build_store(k_pad, v_pad, pos_pad, acc_pad, nnz_pad, cfg.low_bits, cfg,
+                         eff_k=eff_lo_k, eff_v=eff_lo_v)
         return dataclasses.replace(cache, lo=lo, length=jnp.full((b,), l, jnp.int32))
 
     # saliency-based: zipcache / mikv / h2o
@@ -315,7 +335,8 @@ def compress_prefill(
     k_hi, v_hi, pos_hi, acc_hi, nnz_hi = _pad_tokens(
         k_hi, v_hi, _gather_slots(positions, salient_idx),
         _gather_slots(acc, salient_idx), _gather_slots(nnz, salient_idx), s_hi)
-    hi = build_store(k_hi, v_hi, pos_hi, acc_hi, nnz_hi, cfg.high_bits, cfg)
+    hi = build_store(k_hi, v_hi, pos_hi, acc_hi, nnz_hi, cfg.high_bits, cfg,
+                     eff_k=eff_hi_k, eff_v=eff_hi_v)
 
     if cfg.low_bits > 0:
         k_lo = _gather_tokens(k, regular_idx)
@@ -323,7 +344,8 @@ def compress_prefill(
         k_lo, v_lo, pos_lo, acc_lo, nnz_lo = _pad_tokens(
             k_lo, v_lo, _gather_slots(positions, regular_idx),
             _gather_slots(acc, regular_idx), _gather_slots(nnz, regular_idx), s_lo)
-        lo = build_store(k_lo, v_lo, pos_lo, acc_lo, nnz_lo, cfg.low_bits, cfg)
+        lo = build_store(k_lo, v_lo, pos_lo, acc_lo, nnz_lo, cfg.low_bits, cfg,
+                        eff_k=eff_lo_k, eff_v=eff_lo_v)
     else:
         lo = cache.lo  # h2o: regular tokens evicted
     return dataclasses.replace(cache, hi=hi, lo=lo, length=jnp.full((b,), l, jnp.int32))
@@ -686,7 +708,7 @@ def free_slot(cache: MixedKVCache, slot, batch_axis: int = 0) -> MixedKVCache:
 # ---------------------------------------------------------------------------
 
 def recompress(cfg: CompressionConfig, cache: MixedKVCache,
-               rows: Optional[jnp.ndarray] = None) -> MixedKVCache:
+               rows: Optional[jnp.ndarray] = None, eff=None) -> MixedKVCache:
     """Fold the staging window back into the quantized stores.
 
     Dequantizes all segments, re-ranks every token by its CURRENT estimated
@@ -698,8 +720,13 @@ def recompress(cfg: CompressionConfig, cache: MixedKVCache,
     own token counter, paper Alg. 3 per request).  Every per-token operation
     here (top_k, gather, per-row quantization scales) is row-independent, so
     masking after the fact is exact.
+
+    eff: optional `precision.LayerEff` — effective bits for the rebuilt
+    hi/lo stores (precision map, possibly with a per-slot downshift rung
+    folded in via `precision.rung_eff`).  The rung rides in as a DATA
+    operand, so one warm recompress program serves every rung.
     """
-    new = _recompress_all(cfg, cache)
+    new = _recompress_all(cfg, cache, eff=eff)
     if rows is None:
         return new
     return tree_select_rows(rows, new, cache)
@@ -735,7 +762,11 @@ def _valid_first(idx: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
     return (jnp.sort(key, axis=-1) % s_total).astype(jnp.int32)
 
 
-def _recompress_all(cfg: CompressionConfig, cache: MixedKVCache) -> MixedKVCache:
+def _recompress_all(cfg: CompressionConfig, cache: MixedKVCache, eff=None) -> MixedKVCache:
+    eff_hi_k = eff.hi_k if eff is not None else None
+    eff_hi_v = eff.hi_v if eff is not None else None
+    eff_lo_k = eff.lo_k if eff is not None else None
+    eff_lo_v = eff.lo_v if eff is not None else None
     k, v, valid, pos = cache_keys_values(cache)
     # Zero the payload of INVALID slots before any re-quantization: channel
     # scales are computed over the whole token axis, so without this the
@@ -785,7 +816,8 @@ def _recompress_all(cfg: CompressionConfig, cache: MixedKVCache) -> MixedKVCache
         lo = build_store(
             _gather_tokens(k, order), _gather_tokens(v, order),
             jnp.where(_gather_slots(vf, order) > 0, _gather_slots(pos, order), -1),
-            _gather_slots(acc, order), _gather_slots(nnz, order), cfg.low_bits, cfg)
+            _gather_slots(acc, order), _gather_slots(nnz, order), cfg.low_bits, cfg,
+            eff_k=eff_lo_k, eff_v=eff_lo_v)
         return _emptied_window(dataclasses.replace(cache, lo=lo))
 
     # zipcache / mikv: re-split by saliency. hi gets the top s_hi VALID slots.
@@ -793,13 +825,14 @@ def _recompress_all(cfg: CompressionConfig, cache: MixedKVCache) -> MixedKVCache
     hi_idx = _valid_first(idx[:, :s_hi], valid)
     lo_idx = _valid_first(idx[:, s_hi:s_hi + s_lo], valid)
     # invalid slots sort to the bottom; keep their pos at -1 after gather
-    def _mk(idx_, bits):
+    def _mk(idx_, bits, eff_k=None, eff_v=None):
         p = _gather_slots(pos, idx_)
         return build_store(
             _gather_tokens(k, idx_), _gather_tokens(v, idx_), p,
-            _gather_slots(acc, idx_), _gather_slots(nnz, idx_), bits, cfg)
-    hi = _mk(hi_idx, cfg.high_bits)
-    lo = _mk(lo_idx, cfg.low_bits)
+            _gather_slots(acc, idx_), _gather_slots(nnz, idx_), bits, cfg,
+            eff_k=eff_k, eff_v=eff_v)
+    hi = _mk(hi_idx, cfg.high_bits, eff_hi_k, eff_hi_v)
+    lo = _mk(lo_idx, cfg.low_bits, eff_lo_k, eff_lo_v)
     return _emptied_window(dataclasses.replace(cache, hi=hi, lo=lo))
 
 

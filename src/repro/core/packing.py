@@ -24,6 +24,17 @@ def pack_factor(bits: int) -> int:
     return 8 // bits
 
 
+def max_code(bits: int) -> int:
+    """Largest code a ``bits``-wide field can hold (the container qmax).
+
+    Effective-bit quantization (precision maps / the downshift ladder)
+    clips to ``2**eff - 1 <= max_code(container_bits)``, so packed fields
+    never overflow regardless of the map — asserted by the property suite
+    in tests/test_quant.py.
+    """
+    return (1 << bits) - 1
+
+
 def packed_dim(dim: int, bits: int) -> int:
     pf = pack_factor(bits)
     if dim % pf:

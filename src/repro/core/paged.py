@@ -604,12 +604,15 @@ def _write_back(cache: PagedKVCache, mx: kvc.MixedKVCache,
 
 
 def recompress(cfg: CompressionConfig, cache: PagedKVCache,
-               rows: Optional[jnp.ndarray] = None) -> PagedKVCache:
+               rows: Optional[jnp.ndarray] = None, eff=None) -> PagedKVCache:
     """Fold staging pages back into the stores (paper Alg. 3): the dense
     recompression math on the gathered view, scattered back page-wise.
     `rows` restricts the write-back to a subset of slots (mask semantics
-    identical to the mixed backend; for per-slot cost see recompress_slot)."""
-    mx = kvc.recompress(cfg, cache.dense_view(), rows=None)
+    identical to the mixed backend; for per-slot cost see recompress_slot).
+    `eff` (precision map / downshift rung) passes straight through to the
+    dense recompression — codes stay packed at the container width, so the
+    page layout is map-independent."""
+    mx = kvc.recompress(cfg, cache.dense_view(), rows=None, eff=eff)
     return _write_back(cache, mx, rows=rows)
 
 
@@ -645,13 +648,15 @@ def _slice_slot_view(cache: PagedKVCache, slot) -> kvc.MixedKVCache:
 
 
 def recompress_slot(cfg: CompressionConfig, cache: PagedKVCache,
-                    slot) -> PagedKVCache:
+                    slot, eff=None) -> PagedKVCache:
     """Fold ONE slot's staging pages: gather the slot to a batch=1 dense
     view, recompress at 1/batch the full-program FLOPs, scatter the result
     back onto the slot's pages + metadata row.  Bitwise the same result as
     `recompress(rows=onehot(slot))` — every recompression op is
-    row-independent — at per-request instead of full-batch cost."""
-    mx1 = kvc.recompress(cfg, _slice_slot_view(cache, slot), rows=None)
+    row-independent — at per-request instead of full-batch cost.  `eff`
+    must be per-head/scalar shaped (the view is batch=1): slot folds fold
+    a SCALAR rung in, not the (b,) batch rung."""
+    mx1 = kvc.recompress(cfg, _slice_slot_view(cache, slot), rows=None, eff=eff)
 
     def seg(store: PagedStore, ts: kvc.TokenStore) -> PagedStore:
         def scat(pages, codes):
@@ -745,14 +750,14 @@ class PagedKVBackend:
         return from_mixed_freelist(mx, self.page_size, pools)
 
     def compress_prefill(self, k, v, token_saliency, max_len,
-                         probe_nnz=None, dtype=jnp.bfloat16):
+                         probe_nnz=None, dtype=jnp.bfloat16, eff=None):
         """Compress prefill K/V into a fresh cache.  Always the STATIC
         layout, whatever `allocator` says: prefill slices are ephemeral
         (inserted into the long-lived decode cache at admission, then
         dropped), so elasticity buys nothing and the strided tables keep
         the op allocator-free."""
         mx = kvc.compress_prefill(self.ccfg, k, v, token_saliency, max_len,
-                                  probe_nnz=probe_nnz, dtype=dtype)
+                                  probe_nnz=probe_nnz, dtype=dtype, eff=eff)
         return from_mixed(mx, self.page_size)
 
     def append(self, cache, k_t, v_t, active=None):
@@ -801,13 +806,13 @@ class PagedKVBackend:
         # paged layout (same field names, payload untouched)
         return kvc.update_probe_state(cache, slot_weights, is_probe)
 
-    def recompress(self, cache, rows=None):
-        return recompress(self.ccfg, cache, rows=rows)
+    def recompress(self, cache, rows=None, eff=None):
+        return recompress(self.ccfg, cache, rows=rows, eff=eff)
 
-    def recompress_slot(self, cache, slot):
+    def recompress_slot(self, cache, slot, eff=None):
         """Beyond the protocol: per-slot recompression at 1/batch FLOPs (the
         engine prefers this when the backend offers it)."""
-        return recompress_slot(self.ccfg, cache, slot)
+        return recompress_slot(self.ccfg, cache, slot, eff=eff)
 
     def insert(self, cache, slice_cache, slot):
         return insert_slot(cache, slice_cache, slot)

@@ -12,6 +12,17 @@ leading axes are batch-like.  Codes are bit-packed (see packing.py) so the
 stored representation is the real compressed artifact, and every scheme
 reports its true quantization-parameter overhead so the paper's compression
 ratio algebra (Appendix A) is reproduced exactly.
+
+Effective bits (``eff``): every scheme accepts an optional per-head (or
+per-slot-per-head) EFFECTIVE bit-width array that lowers qmax to
+``2**eff - 1`` without changing the packed container width ``bits``.  The
+scale/zero absorb the coarser grid, so dequantization, packing, cache
+shapes, and the attention kernels are untouched — this is how the
+per-layer/head precision map (core/precision.py) and the downshift ladder
+spend fewer bits inside a fixed container.  ``eff=None`` is the exact
+legacy static-qmax path (bitwise identical).  ``eff`` must be
+broadcast-ready against the (..., T, C)-reduced stats: (h, 1, 1) for a
+per-head map over (b, h, T, C) inputs, (b, h, 1, 1) with a per-slot rung.
 """
 
 from __future__ import annotations
@@ -90,9 +101,17 @@ class QuantizedTensor:
         return int(n)
 
 
-def _minmax_params(x: jnp.ndarray, bits: int, axis, keepdims=True):
+def _qmax(bits: int, eff=None):
+    """Static integer qmax (eff None — the bitwise legacy path) or the
+    traced effective qmax ``2**eff - 1`` (exact in f32 for integer eff)."""
+    if eff is None:
+        return 2**bits - 1
+    return jnp.exp2(jnp.asarray(eff, dtype=jnp.float32)) - 1.0
+
+
+def _minmax_params(x: jnp.ndarray, bits: int, axis, keepdims=True, eff=None):
     """Uniform asymmetric min/max quantization parameters (paper Eq. 5)."""
-    qmax = 2**bits - 1
+    qmax = _qmax(bits, eff)
     xmin = jnp.min(x, axis=axis, keepdims=keepdims)
     xmax = jnp.max(x, axis=axis, keepdims=keepdims)
     scale = jnp.maximum((xmax - xmin) / qmax, _EPS).astype(jnp.float32)
@@ -100,31 +119,30 @@ def _minmax_params(x: jnp.ndarray, bits: int, axis, keepdims=True):
     return scale, zero
 
 
-def _encode(x: jnp.ndarray, scale, zero, bits: int) -> jnp.ndarray:
-    qmax = 2**bits - 1
-    q = jnp.clip(jnp.round(x / scale + zero), 0, qmax)
+def _encode(x: jnp.ndarray, scale, zero, bits: int, eff=None) -> jnp.ndarray:
+    q = jnp.clip(jnp.round(x / scale + zero), 0, _qmax(bits, eff))
     return packing.pack(q.astype(jnp.uint8), bits)
 
 
-def quantize_tokenwise(x: jnp.ndarray, bits: int) -> QuantizedTensor:
+def quantize_tokenwise(x: jnp.ndarray, bits: int, eff=None) -> QuantizedTensor:
     """Per-token (last-axis-reduced) uniform quantization. x: (..., T, C)."""
-    scale, zero = _minmax_params(x.astype(jnp.float32), bits, axis=-1)
-    codes = _encode(x.astype(jnp.float32), scale, zero, bits)
+    scale, zero = _minmax_params(x.astype(jnp.float32), bits, axis=-1, eff=eff)
+    codes = _encode(x.astype(jnp.float32), scale, zero, bits, eff=eff)
     return QuantizedTensor(codes, scale.astype(x.dtype), zero.astype(x.dtype), None, bits, x.shape)
 
 
-def quantize_channelwise(x: jnp.ndarray, bits: int) -> QuantizedTensor:
+def quantize_channelwise(x: jnp.ndarray, bits: int, eff=None) -> QuantizedTensor:
     """Per-channel uniform quantization (reduce over tokens). x: (..., T, C).
 
     Paper §4.1: used for the KEY cache (token representations are similar,
     outliers live in channels).  Parameters: 2*C per leading batch slice.
     """
-    scale, zero = _minmax_params(x.astype(jnp.float32), bits, axis=-2)
-    codes = _encode(x.astype(jnp.float32), scale, zero, bits)
+    scale, zero = _minmax_params(x.astype(jnp.float32), bits, axis=-2, eff=eff)
+    codes = _encode(x.astype(jnp.float32), scale, zero, bits, eff=eff)
     return QuantizedTensor(codes, scale.astype(x.dtype), zero.astype(x.dtype), None, bits, x.shape)
 
 
-def quantize_groupwise(x: jnp.ndarray, bits: int, group_size: int = 32) -> QuantizedTensor:
+def quantize_groupwise(x: jnp.ndarray, bits: int, group_size: int = 32, eff=None) -> QuantizedTensor:
     """KIVI-style fine-grained groupwise quantization along channels.
 
     Each contiguous group of ``group_size`` channels within each token is
@@ -133,10 +151,11 @@ def quantize_groupwise(x: jnp.ndarray, bits: int, group_size: int = 32) -> Quant
     *lead, t, c = x.shape
     if c % group_size:
         raise ValueError(f"channels {c} not divisible by group size {group_size}")
+    if eff is not None:
+        eff = jnp.asarray(eff)[..., None]  # grouped stats carry an extra axis
     xg = x.astype(jnp.float32).reshape(*lead, t, c // group_size, group_size)
-    scale, zero = _minmax_params(xg, bits, axis=-1)
-    qmax = 2**bits - 1
-    q = jnp.clip(jnp.round(xg / scale + zero), 0, qmax)
+    scale, zero = _minmax_params(xg, bits, axis=-1, eff=eff)
+    q = jnp.clip(jnp.round(xg / scale + zero), 0, _qmax(bits, eff))
     q = q.reshape(*lead, t, c)
     codes = packing.pack(q.astype(jnp.uint8), bits)
     # params stored GROUPED: (..., t, c/g) — the true 2*T*C/n overhead.
@@ -157,7 +176,7 @@ def channel_norm_scale(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.sqrt(jnp.maximum(amax, _EPS))
 
 
-def quantize_cst(x: jnp.ndarray, bits: int, channel_scale: Optional[jnp.ndarray] = None) -> QuantizedTensor:
+def quantize_cst(x: jnp.ndarray, bits: int, channel_scale: Optional[jnp.ndarray] = None, eff=None) -> QuantizedTensor:
     """Channel-separable tokenwise quantization (paper Alg. 1).
 
     1. normalize each channel by c_i = sqrt(max|X_i|)
@@ -170,8 +189,8 @@ def quantize_cst(x: jnp.ndarray, bits: int, channel_scale: Optional[jnp.ndarray]
     xf = x.astype(jnp.float32)
     c = channel_norm_scale(xf) if channel_scale is None else channel_scale.astype(jnp.float32)
     xn = xf / c
-    scale, zero = _minmax_params(xn, bits, axis=-1)
-    codes = _encode(xn, scale, zero, bits)
+    scale, zero = _minmax_params(xn, bits, axis=-1, eff=eff)
+    codes = _encode(xn, scale, zero, bits, eff=eff)
     return QuantizedTensor(
         codes, scale.astype(x.dtype), zero.astype(x.dtype), c.astype(x.dtype), bits, x.shape
     )

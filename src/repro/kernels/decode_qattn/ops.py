@@ -4,6 +4,12 @@ path), handle the bf16 window in jnp, and merge segments flash-decoding style.
 `decode_attend_mixed` is a drop-in replacement for core.kvcache.attend_decode
 whenever both stores carry channelwise-K / CST-V quantization (the ZipCache
 configuration) — validated against it in tests.
+
+Per-layer/head precision maps (core/precision.py) never reach this kernel:
+effective bits only narrow the code range inside the container width the
+quantizer params absorb, so `k_bits`/`v_bits` stay the static container
+widths and one warm program serves every map (tests/test_precision.py runs
+the kernel-vs-oracle check under heterogeneous maps).
 """
 
 from __future__ import annotations

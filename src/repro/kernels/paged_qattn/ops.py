@@ -17,6 +17,16 @@ Caveats vs the dense path (both harmless to the engine):
   * out/slot_weights agree with the gather path to float tolerance, not
     bitwise (flash accumulation reassociates the softmax), which keeps
     greedy argmax token-identical (tests/test_paged_qattn.py).
+
+Precision maps and the downshift ladder (core/precision.py) are INVISIBLE
+here by design: per-layer/head effective bits narrow the code RANGE the
+quantizers emit while the scale/zero params absorb the narrower qmax, and
+codes stay packed in the same container width (TokenStore bits — what the
+static `k_bits`/`v_bits` kernel parameters and every block shape are derived
+from).  A store folded at any rung therefore dequantizes through the exact
+same kernel program: no retrace, no new specialization, and the kernel-vs-
+oracle equality under heterogeneous maps is covered by
+tests/test_precision.py.
 """
 
 from __future__ import annotations

@@ -120,13 +120,36 @@ def add_engine_args(ap: argparse.ArgumentParser) -> None:
                          "reference); priority = highest Request.priority "
                          "first, FIFO within a class")
     ap.add_argument("--preemption", default="off",
-                    choices=("off", "recompute"),
+                    choices=("off", "recompute", "downshift"),
                     help="--scheduler priority only: recompute lets the "
                          "scheduler evict a running lower-priority slot "
                          "(pages returned, tokens retained host-side) and "
                          "re-admit it later by replaying those tokens — "
                          "deterministic, the victim's final tokens are "
-                         "unchanged; off never evicts")
+                         "unchanged; downshift (freelist only) keeps the "
+                         "victim decoding but early-folds its staging "
+                         "window one precision rung lower, so only its "
+                         "window pages return — cheap preemption that "
+                         "trades the victim's precision for the urgent "
+                         "request's pages; off never evicts")
+    ap.add_argument("--precision-map", default="",
+                    help="per-layer/head (key,value) effective-bit ceilings "
+                         "for the quantizers (core/precision.py): compact "
+                         "rules like 'default=k8v8;layer:2-:head:0-1=k2v2' "
+                         "or a KVTuner-shaped JSON object.  Containers keep "
+                         "the policy's high/low bit widths — the map narrows "
+                         "the code range per layer/head (scale/zero absorb "
+                         "it), so cache shapes and kernels are unchanged.  "
+                         "Empty = off (bitwise-identical default path)")
+    ap.add_argument("--ladder-watermark", type=float, default=0.0,
+                    help="--page-allocator freelist only: arm the pressure-"
+                         "driven downshift ladder — when the min free "
+                         "fraction across the page pools drops to or below "
+                         "this value, the oldest eligible slot's staging "
+                         "window is early-folded at a lowered lo-store "
+                         "effective bit-width (rung +1, floor 1 bit) and "
+                         "its window pages return to the pool.  Salient "
+                         "(hi-store) tokens keep their bits.  0.0 = off")
 
 
 def validate_engine_args(args, ap: argparse.ArgumentParser,
@@ -139,10 +162,24 @@ def validate_engine_args(args, ap: argparse.ArgumentParser,
     if args.scheduler != "fifo" and not continuous:
         ap.error("--scheduler requires --continuous (the lockstep engine "
                  "has no admission queue to schedule)")
-    if args.preemption == "recompute" and args.scheduler != "priority":
+    if args.preemption != "off" and args.scheduler != "priority":
         # FIFO never names a victim; arming preemption under it would be a
         # silent no-op — reject instead of misleading
-        ap.error("--preemption recompute requires --scheduler priority")
+        ap.error(f"--preemption {args.preemption} requires --scheduler "
+                 "priority")
+    if args.preemption == "downshift" and args.page_allocator != "freelist":
+        # a downshift's whole yield is the window pages its early fold
+        # returns — without the free-list pools there is nothing to return
+        ap.error("--preemption downshift requires --page-allocator freelist")
+    if args.ladder_watermark != 0.0 and args.page_allocator != "freelist":
+        ap.error("--ladder-watermark requires --page-allocator freelist "
+                 "(pressure is free-list pool pressure)")
+    if args.precision_map:
+        from repro.core import precision as precision_lib
+        try:
+            precision_lib.parse_precision_map(args.precision_map)
+        except ValueError as e:
+            ap.error(f"--precision-map: {e}")
     if args.page_allocator == "freelist" and args.backend != "paged":
         ap.error("--page-allocator freelist requires --backend paged")
     if args.page_allocator == "freelist" and not continuous:
@@ -177,7 +214,9 @@ def build_serve_config(args) -> ServeConfig:
                        admit_watermark=args.admit_watermark,
                        scheduler=args.scheduler,
                        preemption=args.preemption,
-                       prefix_cache=args.prefix_cache == "on")
+                       prefix_cache=args.prefix_cache == "on",
+                       precision_map=args.precision_map,
+                       ladder_watermark=args.ladder_watermark)
 
 
 def build_compression_config(args) -> CompressionConfig:
@@ -242,6 +281,11 @@ def main(argv=None):
             print(f"[serve] page pools peak used {used}, "
                   f"{ps['deferrals']} admissions deferred, "
                   f"{ps['preemptions']} slots preempted")
+            ds = ps["downshift"]
+            if ds["downshifts"] or ds["refusals"]:
+                print(f"[serve] downshift ladder: {ds['downshifts']} "
+                      f"downshifts freed {ds['pages_freed']} window pages, "
+                      f"{ds['refusals']} aliased-slot refusals")
             px = ps["prefix"]
             if px["hits"] or px["misses"]:
                 print(f"[serve] prefix cache: {px['hits']} hits / "

@@ -24,12 +24,12 @@ from repro.optim import adamw
 
 def _run_ctx(cfg: ArchConfig, mesh, ccfg=None, probe=None, max_cache_len=0,
              q_block=512, decode_impl="ref", compact_softmax=False,
-             backend=None) -> blocks.RunCtx:
+             backend=None, precision=None) -> blocks.RunCtx:
     data_axes = mesh_lib.data_axes_of(mesh) if mesh is not None else ("data",)
     return blocks.RunCtx(mesh=mesh, data_axes=data_axes, ccfg=ccfg, probe=probe,
                          max_cache_len=max_cache_len, q_block=q_block,
                          decode_impl=decode_impl, compact_softmax=compact_softmax,
-                         backend=backend)
+                         backend=backend, precision=precision)
 
 
 def pick_grad_accum(cfg: ArchConfig, shape: ShapeConfig, mesh) -> int:
@@ -168,9 +168,15 @@ def serve_ctx(cfg: ArchConfig, shape: ShapeConfig, mesh,
         paged_kernel=getattr(shape, "paged_kernel", False),
         page_allocator=getattr(shape, "page_allocator", "static"),
         pool_fraction=getattr(shape, "pool_fraction", 1.0))
+    # the resolved per-layer/head bit-ceiling table rides on the RunCtx (the
+    # backend never sees layer indices); "" / None = maps off, bitwise default
+    from repro.core import precision as precision_lib
+    pmap = precision_lib.parse_precision_map(
+        getattr(shape, "precision_map", ""))
+    table = pmap.resolve(cfg.n_layers, cfg.n_kv_heads) if pmap else None
     return _run_ctx(cfg, mesh, ccfg=ccfg, probe=probe,
                     max_cache_len=max_cache_len, q_block=q_block,
-                    decode_impl=decode_impl, backend=backend)
+                    decode_impl=decode_impl, backend=backend, precision=table)
 
 
 def make_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
@@ -246,15 +252,26 @@ def make_insert_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
 
 
 def make_recompress_rows_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
-                              ccfg: Optional[CompressionConfig] = None, ctx=None):
+                              ccfg: Optional[CompressionConfig] = None, ctx=None,
+                              ladder: bool = False):
     """recompress(caches, rows (b,) bool) — fold staging windows for the
     masked slots only (per-request cadence, paper Alg. 3).
 
     Cost note: the jitted program recomputes the full-batch recompression and
     row-selects the result (static shapes), so under maximally staggered
     admission it can run up to `slots`× per interval vs once for lockstep —
-    callers batch co-due rows into one call (the engine does) to bound this."""
+    callers batch co-due rows into one call (the engine does) to bound this.
+
+    ladder=True arms the downshift ladder: the returned fn takes a third
+    (b,) int32 `rung` DATA operand lowering each folded slot's lo-store
+    effective bits (one warm program serves every rung).  Off keeps the
+    two-argument signature — and with it the bitwise-default trace."""
     ctx = ctx or serve_ctx(cfg, shape, mesh, ccfg)
+
+    if ladder:
+        def recompress_rows_rung(caches, rows, rung):
+            return registry.recompress(caches, cfg, ctx, rows=rows, rung=rung)
+        return recompress_rows_rung, ctx
 
     def recompress_rows(caches, rows):
         return registry.recompress(caches, cfg, ctx, rows=rows)
@@ -263,14 +280,24 @@ def make_recompress_rows_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
 
 
 def make_recompress_slot_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
-                              ccfg: Optional[CompressionConfig] = None, ctx=None):
+                              ccfg: Optional[CompressionConfig] = None, ctx=None,
+                              ladder: bool = False):
     """recompress_slot(caches, slot) — fold exactly ONE slot's staging window.
 
     Only for backends that implement per-slot recompression (the paged
     layout): the jitted program gathers the slot to a batch=1 view, so each
     call costs ~1/slots of the rows-masked program — staggered admission pays
-    per-request instead of `slots`x full-batch FLOPs (ROADMAP §Serving)."""
+    per-request instead of `slots`x full-batch FLOPs (ROADMAP §Serving).
+
+    ladder=True adds a SCALAR int32 `rung` data operand (the slot view is
+    batch=1) — same one-warm-program-per-signature guarantee as the rows
+    variant."""
     ctx = ctx or serve_ctx(cfg, shape, mesh, ccfg)
+
+    if ladder:
+        def recompress_slot_rung(caches, slot, rung):
+            return registry.recompress(caches, cfg, ctx, slot=slot, rung=rung)
+        return recompress_slot_rung, ctx
 
     def recompress_slot(caches, slot):
         return registry.recompress(caches, cfg, ctx, slot=slot)

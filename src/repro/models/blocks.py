@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import backend as backend_lib
 from repro.core import kvcache as kvc
+from repro.core import precision as precision_lib
 from repro.core import saliency as sal
 from repro.core.policy import CompressionConfig
 from repro.models import attention as attn
@@ -72,13 +73,21 @@ class RunCtx:
     `backend` is the CacheBackend the model layers use for every cache
     operation (defaults to the mixed-precision ZipCache backend for `ccfg`);
     alternative cache layouts plug in here without touching model code.
+
+    `precision` is an optional resolved per-layer/head bit-ceiling table —
+    int32 (n_layers, n_kv_heads, 2) from `PrecisionMap.resolve` — that
+    model code turns into per-layer effective bits (`precision.layer_eff`)
+    at every quantization site; None disables maps (the bitwise-default
+    path).  It lives here, not on the backend, because only the model code
+    knows the layer index at each compress/recompress call.
     """
 
     def __init__(self, mesh=None, data_axes=("data",), ccfg: Optional[CompressionConfig] = None,
                  probe: Optional[sal.ProbeSpec] = None, max_cache_len: int = 0,
                  q_block: int = 512, use_kernels: bool = False,
                  decode_impl: str = "ref", compact_softmax: bool = False,
-                 backend: Optional[backend_lib.CacheBackend] = None):
+                 backend: Optional[backend_lib.CacheBackend] = None,
+                 precision=None):
         self.mesh = mesh
         self.data_axes = tuple(data_axes)
         self.ccfg = ccfg
@@ -89,6 +98,22 @@ class RunCtx:
         self.decode_impl = decode_impl
         self.compact_softmax = compact_softmax
         self.backend = backend if backend is not None else backend_lib.of(ccfg)
+        self.precision = precision
+
+    def layer_eff(self, layer, n_heads: int):
+        """This layer's `precision.LayerEff` (or None without a map).
+
+        layer: absolute layer index — a static int for unrolled prefix
+        layers, a traced int32 scan operand inside scan groups (the table
+        gather stays shape-static either way, so one warm program serves
+        every group).  n_heads: the CACHE's head count — the resolved table
+        is min-pooled onto it (MLA's shared latent takes the strictest
+        per-head ceiling)."""
+        if self.precision is None or self.ccfg is None:
+            return None
+        table = precision_lib.pooled_table(self.precision, n_heads)
+        return precision_lib.layer_eff(table, layer, self.ccfg.high_bits,
+                                       self.ccfg.low_bits)
 
     def shard(self, x, parts):
         if self.mesh is None:
@@ -109,9 +134,10 @@ class RunCtx:
 
 def apply_layer_full(
     params: dict, x: jnp.ndarray, cfg: ArchConfig, mixer: str, ffn: str, ctx: RunCtx,
-    build_cache: bool,
+    build_cache: bool, layer=0,
 ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
-    """One layer, full sequence. Returns (x, cache_element|None, aux_loss)."""
+    """One layer, full sequence. Returns (x, cache_element|None, aux_loss).
+    `layer`: absolute layer index (static or traced) for the precision map."""
     aux_loss = jnp.zeros((), jnp.float32)
     h = common.rms_norm(x, params["ln1"], cfg.norm_eps)
     cache_el = None
@@ -123,7 +149,8 @@ def apply_layer_full(
         if build_cache:
             cache_el = ctx.backend.compress_prefill(
                 aux.k, aux.v, aux.saliency, ctx.max_cache_len,
-                probe_nnz=aux.probe_nnz, dtype=x.dtype)
+                probe_nnz=aux.probe_nnz, dtype=x.dtype,
+                eff=ctx.layer_eff(layer, aux.k.shape[1]))
     else:
         y, state = ssm_mod.ssm_forward(params["ssm"], h, cfg)
         if build_cache:
@@ -140,12 +167,16 @@ def apply_layer_full(
     return x, cache_el, aux_loss
 
 
-def apply_group_full(params: dict, x, cfg: ArchConfig, ctx: RunCtx, build_cache: bool):
+def apply_group_full(params: dict, x, cfg: ArchConfig, ctx: RunCtx, build_cache: bool,
+                     group=0):
+    """`group`: scan-group index (static or a traced scan operand) — the
+    absolute layer of sub-layer j is first_dense + group * scan_group + j."""
     caches: Dict[str, Any] = {}
     aux_total = jnp.zeros((), jnp.float32)
     for j, (mixer, ffn) in enumerate(cfg.layer_kinds()):
         x, cache_el, aux = apply_layer_full(
-            params[f"sub{j}"], x, cfg, mixer, ffn, ctx, build_cache)
+            params[f"sub{j}"], x, cfg, mixer, ffn, ctx, build_cache,
+            layer=cfg.first_dense_layers + group * cfg.scan_group + j)
         aux_total = aux_total + aux
         if build_cache and cache_el is not None:
             caches[f"sub{j}"] = cache_el

@@ -118,19 +118,27 @@ def forward(
     prefix_caches = []
     for i, (m, f) in enumerate(_prefix_kinds(cfg)):
         x, cache_el, aux = blocks.apply_layer_full(
-            params["prefix"][f"layer{i}"], x, cfg, m, f, ctx, build_cache)
+            params["prefix"][f"layer{i}"], x, cfg, m, f, ctx, build_cache,
+            layer=i)
         aux_total += aux
         prefix_caches.append(cache_el)
 
-    def group_fn(carry, gparams):
+    # the group index rides as a scan OPERAND so the precision map can
+    # gather per-layer bits inside one warm scanned program (a Python loop
+    # over groups would unroll; a static index per group would retrace)
+    def group_fn(carry, scanned):
+        gparams, g = scanned
         x, aux_acc = carry
-        x, caches, aux = blocks.apply_group_full(gparams, x, cfg, ctx, build_cache)
+        x, caches, aux = blocks.apply_group_full(gparams, x, cfg, ctx,
+                                                 build_cache, group=g)
         return (x, aux_acc + aux), caches
 
     body = group_fn
     if remat:
         body = jax.checkpoint(group_fn, policy=jax.checkpoint_policies.nothing_saveable)
-    (x, aux_total), group_caches = jax.lax.scan(body, (x, aux_total), params["groups"])
+    (x, aux_total), group_caches = jax.lax.scan(
+        body, (x, aux_total),
+        (params["groups"], jnp.arange(cfg.n_scan_groups, dtype=jnp.int32)))
 
     logits = unembed(params, cfg, x[:, -1:] if last_only else x)
     caches = None
@@ -216,31 +224,55 @@ def decode_step(
 
 
 def recompress_caches(caches: Any, cfg: ArchConfig, ctx: blocks.RunCtx,
-                      rows: Optional[jnp.ndarray] = None, slot=None) -> Any:
+                      rows: Optional[jnp.ndarray] = None, slot=None,
+                      rung=None) -> Any:
     """Streaming recompression across all layers (paper Alg. 3, every 100 tok).
 
     rows: optional (b,) bool — recompress only those batch slots (continuous
     batching runs each request's cadence on its own token counter).
     slot: optional traced scalar — fold exactly one slot via the backend's
     per-slot program (layouts that support it, e.g. paged, do so at ~1/batch
-    the FLOPs; mutually exclusive with rows)."""
+    the FLOPs; mutually exclusive with rows).
+    rung: optional traced int32 downshift rung(s) — (b,) with `rows`, a
+    scalar with `slot`.  Lowers the lo-store effective bits of the folded
+    slots to max(1, base - rung) (core/precision.py); a DATA operand, so
+    the ladder reuses ONE warm recompress program for every rung."""
     from repro.core import backend as backend_lib
+    from repro.core import precision as precision_lib
 
     assert rows is None or slot is None, "pass rows OR slot, not both"
+    kinds = cfg.layer_kinds()
 
-    def maybe_recompress(el):
-        if backend_lib.is_kv_cache(el):
-            if slot is not None:
-                return ctx.backend.recompress_slot(el, slot)
-            return ctx.backend.recompress(el, rows=rows)
-        return el
+    def maybe_recompress(el, layer, mixer):
+        if not backend_lib.is_kv_cache(el):
+            return el
+        eff = None
+        if ctx.ccfg is not None and (ctx.precision is not None
+                                     or rung is not None):
+            eff = ctx.layer_eff(layer, 1 if mixer == "mla" else cfg.n_kv_heads)
+            if rung is not None:
+                eff = precision_lib.rung_eff(eff, rung, ctx.ccfg.high_bits,
+                                             ctx.ccfg.low_bits)
+        if slot is not None:
+            return ctx.backend.recompress_slot(el, slot, eff=eff)
+        return ctx.backend.recompress(el, rows=rows, eff=eff)
 
-    new_prefix = [maybe_recompress(el) for el in caches["prefix"]]
+    new_prefix = [maybe_recompress(el, i, m)
+                  for i, (el, (m, _)) in enumerate(zip(caches["prefix"],
+                                                       _prefix_kinds(cfg)))]
 
-    def group_fn(_, gcaches):
-        return (), {k: maybe_recompress(v) for k, v in gcaches.items()}
+    def group_fn(_, scanned):
+        g, gcaches = scanned
+        out = {}
+        for key, v in gcaches.items():
+            j = int(key[3:])
+            layer = cfg.first_dense_layers + g * cfg.scan_group + j
+            out[key] = maybe_recompress(v, layer, kinds[j][0])
+        return (), out
 
-    _, new_groups = jax.lax.scan(group_fn, (), caches["groups"])
+    _, new_groups = jax.lax.scan(
+        group_fn, (),
+        (jnp.arange(cfg.n_scan_groups, dtype=jnp.int32), caches["groups"]))
     return {"prefix": new_prefix, "groups": new_groups}
 
 

@@ -62,20 +62,25 @@ def decode_step(params, token: jnp.ndarray, caches: Any, cfg: ArchConfig,
 
 
 def recompress(caches: Any, cfg: ArchConfig, ctx: blocks.RunCtx,
-               rows: Optional[jnp.ndarray] = None, slot=None):
+               rows: Optional[jnp.ndarray] = None, slot=None, rung=None):
     """rows: optional (b,) bool — restrict recompression to those slots
     (per-request cadence, paper Alg. 3 under continuous batching).
     slot: optional traced scalar — recompress exactly ONE slot via the
     backend's per-slot program (paged layout: ~1/batch the FLOPs of the
-    rows-masked program; requires ctx.backend.recompress_slot)."""
+    rows-masked program; requires ctx.backend.recompress_slot).
+    rung: optional traced int32 downshift rung(s) — (b,) with rows, scalar
+    with slot — lowering the folded slots' lo-store effective bits (the
+    pressure ladder; decoder-only caches only)."""
     if cfg.encdec:
         assert slot is None, "per-slot recompress: decoder-only caches only"
+        assert rung is None, "downshift ladder: decoder-only caches only"
         def fn(_, sc):
             return (), encdec.DecLayerCaches(
                 ctx.backend.recompress(sc.self_cache, rows=rows), sc.cross_cache)
         _, new = jax.lax.scan(fn, (), caches)
         return new
-    return lm.recompress_caches(caches, cfg, ctx, rows=rows, slot=slot)
+    return lm.recompress_caches(caches, cfg, ctx, rows=rows, slot=slot,
+                                rung=rung)
 
 
 def insert_caches(dst: Any, src: Any, slot) -> Any:

@@ -147,6 +147,11 @@ class ServeConfig:
     # by re-prefilling the prompt and replaying those tokens through the
     # same decode/fold programs — deterministic: the victim's remaining
     # tokens are unchanged vs an uncontended run (tests/test_scheduling.py)
+    # "downshift" (paged+freelist): cheap preemption — the victim KEEPS its
+    # slot and keeps decoding; its staging window is early-folded one
+    # ladder rung lower (lo-store effective bits -1, floor 1) so only its
+    # window pages come back.  Unblocks page pressure without recompute's
+    # re-prefill cost; trades the victim's precision instead of its latency
     preemption: str = "off"
     # "paged"+"freelist" only: content-hash shared-prefix page dedup with
     # copy-on-write tables (core/alloc.py).  Admission hashes the request's
@@ -157,6 +162,24 @@ class ServeConfig:
     # bitwise identical to prefix_cache=False: an aliased prefill IS the
     # donor's prefill, bit for bit (tests/test_backend_conformance.py).
     prefix_cache: bool = False
+    # Per-layer/head precision map (core/precision.py): ceilings on the
+    # quantizers' effective bit-widths, compact rules
+    # ("default=k8v8;layer:2-:head:0-1=k2v2") or the KVTuner JSON shape.
+    # Storage containers keep the global high_bits/low_bits widths — the
+    # map narrows the code RANGE per layer/head (scale/zero absorb it), so
+    # every cache/pool/kernel shape is map-independent.  "" disables maps:
+    # the bitwise-default static-qmax path.
+    precision_map: str = ""
+    # Downshift ladder ("paged"+"freelist" only): when the min free
+    # fraction across the page pools drops to or below this watermark, the
+    # engine early-folds the oldest eligible slot's staging window at a
+    # lowered lo-store effective bit-width (ladder rung +1, floor 1 bit) —
+    # the window's pages return to the pool and later folds of that slot
+    # stay at the lowered rung.  Salient (hi-store) tokens keep their bits:
+    # the ladder degrades exactly the tokens ZipCache already deems
+    # regular.  0.0 disarms the pressure trigger (preemption="downshift"
+    # arms the ladder programs independently).
+    ladder_watermark: float = 0.0
     # sampling is per-request (SamplingParams); the lockstep generate() path
     # is always greedy — it is the reference the continuous engine is
     # verified token-identical against
@@ -314,7 +337,8 @@ class _EngineBase:
                             paged_kernel=scfg.paged_kernel,
                             page_allocator=scfg.page_allocator,
                             pool_fraction=scfg.pool_fraction,
-                            prefix_cache=scfg.prefix_cache)
+                            prefix_cache=scfg.prefix_cache,
+                            precision_map=scfg.precision_map)
         self._shape = shape
         self._mesh = mesh
         self.ctx = steps_lib.serve_ctx(cfg, shape, mesh, ccfg,
@@ -361,6 +385,25 @@ class _EngineBase:
         if hasattr(self.ctx.backend, "recompress_slot"):
             self._recompress_slot = jax.jit(steps_lib.make_recompress_slot_step(
                 cfg, shape, mesh, ccfg, ctx=self.ctx)[0])
+        # Downshift-ladder fold programs: same recompression, plus a rung
+        # DATA operand ((b,) for rows, scalar for the slot view) lowering
+        # the folded slots' lo-store effective bits — one warm program per
+        # SIGNATURE serves every rung and every pressure event (the
+        # zero-retrace guarantee, tests/test_retrace.py).  Built only when
+        # the ladder can fire so an unarmed engine keeps the exact
+        # two-argument traces of the bitwise-default path.
+        self._ladder = (scfg.ladder_watermark > 0
+                        or scfg.preemption == "downshift")
+        self._recompress_rows_rung = None
+        self._recompress_slot_rung = None
+        if self._ladder:
+            self._recompress_rows_rung = jax.jit(
+                steps_lib.make_recompress_rows_step(
+                    cfg, shape, mesh, ccfg, ctx=self.ctx, ladder=True)[0])
+            if self._recompress_slot is not None:
+                self._recompress_slot_rung = jax.jit(
+                    steps_lib.make_recompress_slot_step(
+                        cfg, shape, mesh, ccfg, ctx=self.ctx, ladder=True)[0])
         self._sample = jax.jit(_sample_tokens)
 
     # ------------------------------------------------------------------
@@ -525,10 +568,10 @@ class EngineCore(_EngineBase):
             raise ValueError(
                 f"ServeConfig.backpressure must be 'defer' or 'error', got "
                 f"{scfg.backpressure!r}")
-        if scfg.preemption not in ("off", "recompute"):
+        if scfg.preemption not in ("off", "recompute", "downshift"):
             raise ValueError(
-                f"ServeConfig.preemption must be 'off' or 'recompute', got "
-                f"{scfg.preemption!r}")
+                f"ServeConfig.preemption must be 'off', 'recompute' or "
+                f"'downshift', got {scfg.preemption!r}")
         self._alloc: Optional[alloc_lib.FreeListAllocator] = None
         self._last_deferred: Optional[str] = None
         if getattr(self.ctx.backend, "allocator", "static") == "freelist":
@@ -545,6 +588,20 @@ class EngineCore(_EngineBase):
             raise ValueError(
                 "ServeConfig.prefix_cache requires backend='paged' with "
                 "page_allocator='freelist' (dedup aliases free-list pages)")
+        # Downshift ladder (ServeConfig.ladder_watermark / "downshift"
+        # preemption): pressure is PAGE-POOL pressure, and the win a
+        # downshift buys is the window pages a fold returns — both only
+        # exist under the free-list allocator.
+        if self._ladder and self._alloc is None:
+            raise ValueError(
+                "the downshift ladder (ladder_watermark > 0 or "
+                "preemption='downshift') requires backend='paged' with "
+                "page_allocator='freelist'")
+        # per-slot ladder rung: how many effective bits below the base map
+        # this slot's lo store is folded at.  Reset when the slot frees.
+        # The deepest rung floors the lo store at 1 effective bit.
+        self._rungs = np.zeros(scfg.batch_size, np.int32)
+        self._max_rung = max(ccfg.low_bits - 1, 0)
         self._prefix_on = scfg.prefix_cache
         self._prefix_snap: Dict[str, Tuple] = {}
         self._prefix_tokens_skipped = 0
@@ -841,7 +898,9 @@ class EngineCore(_EngineBase):
         per-segment {pool_pages, used, free, peak_used, outstanding}, the
         cumulative admission-deferral and preemption counts (the
         per-request view of the same costs lives in
-        `RequestOutput.timings`), and the shared-prefix block — index
+        `RequestOutput.timings`), the downshift-ladder block (downshifts
+        performed, window pages they freed, aliased-slot refusals), and
+        the shared-prefix block — index
         entries, hit/miss/eviction counts, CoW copies, currently shared
         pages, pages dedup is saving right now, and the prefill tokens
         whose FLOPs hits skipped.  Served verbatim by `/v1/stats`."""
@@ -864,6 +923,7 @@ class EngineCore(_EngineBase):
             self.caches,
             jnp.asarray(slot_id, jnp.int32))  # sync: ok(one scalar upload per retire/preempt event, not per step)
         self.slots[slot_id] = None
+        self._rungs[slot_id] = 0   # the ladder rung dies with the slot
 
     def _retire(self, slot_id: int, reason: str,
                 cancel_reason: Optional[str] = None) -> None:
@@ -1017,14 +1077,24 @@ class EngineCore(_EngineBase):
             for slot_id, req in plan.admissions:
                 self.queue.remove(req)
                 self._admit_one(slot_id, req)
-            if (self.scfg.preemption == "recompute" and self.queue
-                    and n_evicted < self.scfg.batch_size):
+            if (self.scfg.preemption in ("recompute", "downshift")
+                    and self.queue and n_evicted < self.scfg.batch_size):
                 victim = self.scheduler.select_victim(
                     list(self.queue), self._running_views(), self._pool_view())
                 if victim is not None:
-                    self._preempt(victim)
-                    n_evicted += 1
-                    continue       # re-plan with the freed slot and pages
+                    if self.scfg.preemption == "recompute":
+                        self._preempt(victim)
+                        n_evicted += 1
+                        continue   # re-plan with the freed slot and pages
+                    # "downshift": cheap preemption — the victim keeps its
+                    # slot and keeps decoding; only its early-folded window
+                    # pages return, so this unblocks PAGE pressure, not
+                    # slot pressure.  An ineligible victim falls through to
+                    # the normal defer/error path: downshifting cannot make
+                    # progress this step.
+                    if self._downshift(victim):
+                        n_evicted += 1
+                        continue   # re-plan with the freed window pages
             if plan.blocked is not None and self._prefix_on \
                     and self._alloc.prefix:
                 # out-of-pages with prefix entries cached: evict LRU index
@@ -1210,6 +1280,57 @@ class EngineCore(_EngineBase):
         self._events.append(events_lib.PreemptedEvent(
             req.id, self._step_no, n_generated=len(req._resume_tokens)))
 
+    def _downshift(self, slot_id: int) -> bool:
+        """One ladder downshift of a running slot: bump its rung and
+        early-fold its staging window at the lowered lo-store effective
+        bit-width, returning the window's pages to the pool.  The slot
+        keeps decoding — precision, not residency, absorbs the pressure.
+
+        Returns False without side effects when the slot is ineligible
+        (empty, already at the deepest rung, or an empty window: nothing
+        to fold means no pages to free), and False after counting a
+        REFUSAL when the slot still aliases shared-prefix pages: those
+        pages are immutable while refcount > 1, and privatizing them first
+        would ALLOCATE pages — the opposite of relief.  The alias keeps
+        its rung until CoW privatization at its own fold cadence."""
+        s = self.slots[slot_id]
+        if (s is None
+                or int(self._rungs[slot_id]) >= self._max_rung  # sync: ok(_rungs is a host-side numpy array)
+                or s.since_rc == 0):
+            return False
+        if self._alloc.needs_privatize(slot_id):
+            self._alloc.note_downshift_refusal()
+            return False
+        self._rungs[slot_id] += 1
+        freed = self._fold([slot_id])
+        s.since_rc = 0
+        self._alloc.note_downshift(slot_id, freed)
+        self._events.append(events_lib.DownshiftEvent(
+            s.request.id, self._step_no,
+            rung=int(self._rungs[slot_id]),  # sync: ok(_rungs is host numpy)
+            pages_freed=freed))
+        return True
+
+    def _ladder_step(self) -> None:
+        """The pressure trigger (ServeConfig.ladder_watermark): when the
+        min free fraction across the page pools sits at or below the
+        watermark, downshift the OLDEST eligible slot (arrival order — it
+        has decoded longest, so its remaining tokens have the least left
+        to lose).  At most one downshift per step: each rung frees pages,
+        so re-checking pressure next step bounds the precision loss to
+        what the pool actually needs."""
+        if not self._ladder or self.scfg.ladder_watermark <= 0 \
+                or self._alloc is None:
+            return
+        if self._alloc.pool_pressure() > self.scfg.ladder_watermark:
+            return
+        order = sorted((i for i in range(self.scfg.batch_size)
+                        if self.slots[i] is not None),
+                       key=lambda i: self.slots[i].request._seq)
+        for i in order:
+            if self._downshift(i):
+                return
+
     def _pack_moves(self, moves: Dict[str, Tuple[List[int], List[int]]]):
         """Fixed-shape device operands for the page-copy program: per
         segment, (src, dst) id vectors padded to the per-slot page count
@@ -1228,10 +1349,17 @@ class EngineCore(_EngineBase):
                 jnp.asarray(d))  # sync: ok(two small id-vector uploads per privatized segment per fold event)
         return out
 
-    def _fold(self, due_ids: Sequence[int]) -> None:
+    def _fold(self, due_ids: Sequence[int]) -> int:
         """Fold the due slots' staging windows (with the allocator's
         grant-before/shrink-after page movements around the jitted
-        program).  Shared by step() and recompute replay."""
+        program).  Shared by step(), recompute replay, and the downshift
+        ladder.  Returns how many window pages the shrink returned (the
+        ladder's "pages freed"; ordinary folds ignore it).
+
+        With the ladder armed the rung-aware programs run for EVERY fold —
+        the per-slot rungs ride as data, and rung 0 reproduces the base
+        map's bits — so one warm program per signature covers pressured
+        and unpressured folds alike (tests/test_retrace.py)."""
         b = self.scfg.batch_size
         if self._alloc is not None:
             # CoW-before-fold: recompression re-splits hi/lo per slot, so a
@@ -1259,21 +1387,33 @@ class EngineCore(_EngineBase):
         # batch into the single rows-masked call as before.
         if self._recompress_slot is not None and len(due_ids) * 2 <= b:
             for i in due_ids:
-                self.caches = self._recompress_slot(
-                    self.caches,
-                    jnp.asarray(int(i), jnp.int32))  # sync: ok(one scalar upload per due slot per fold event, cadence 1/interval steps)
+                slot = jnp.asarray(int(i), jnp.int32)  # sync: ok(one scalar upload per due slot per fold event, cadence 1/interval steps)
+                if self._ladder:
+                    self.caches = self._recompress_slot_rung(
+                        self.caches, slot,
+                        jnp.asarray(int(self._rungs[i]), jnp.int32))  # sync: ok(one scalar rung upload per due slot per fold event)
+                else:
+                    self.caches = self._recompress_slot(self.caches, slot)
         else:
             due = np.zeros(b, bool)
             due[np.asarray(due_ids, int)] = True
-            self.caches = self._recompress_rows(
-                self.caches,
-                jnp.asarray(due))  # sync: ok(one mask upload per fold event, cadence 1/interval steps)
+            if self._ladder:
+                self.caches = self._recompress_rows_rung(
+                    self.caches,
+                    jnp.asarray(due),  # sync: ok(one mask upload per fold event, cadence 1/interval steps)
+                    jnp.asarray(self._rungs))  # sync: ok(one (b,) rung upload per fold event)
+            else:
+                self.caches = self._recompress_rows(
+                    self.caches,
+                    jnp.asarray(due))  # sync: ok(one mask upload per fold event, cadence 1/interval steps)
+        freed = 0
         if self._alloc is not None:
             # the staging windows emptied: return their pages (the
             # recompression-shrink half of the elasticity story)
             for i in due_ids:
-                self._alloc.fold_shrink(int(i))
+                freed += self._alloc.fold_shrink(int(i))
             self._sync_tables()
+        return freed
 
     def step(self) -> List[events_lib.Event]:
         """One scheduler iteration: run the injected scheduler's admission
@@ -1293,7 +1433,8 @@ class EngineCore(_EngineBase):
         disconnect) buffers its `CancelledEvent` into the next step's
         return value instead of being dropped."""
         self._sweep_deadlines()
-        self._admit()
+        self._ladder_step()   # relieve pool pressure BEFORE planning
+        self._admit()         # admission, so freed pages count this step
         b = self.scfg.batch_size
         active_ids = [i for i in range(b) if self.slots[i] is not None]
         if not active_ids:

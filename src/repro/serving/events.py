@@ -1,7 +1,7 @@
 """Typed event stream + typed API errors for the serving engine.
 
 `EngineCore.step()` returns the list of events that iteration produced, in
-order.  Five event kinds cover the request lifecycle after admission:
+order.  Six event kinds cover the request lifecycle after admission:
 
   * ``TokenEvent``     — one freshly decoded token (``index`` is its position
     in the request's output stream; the first token, sampled from the
@@ -18,6 +18,12 @@ order.  Five event kinds cover the request lifecycle after admission:
     its pages returned, and ``result(id)`` carries the tokens decoded so
     far with ``finish_reason="cancelled"``.  Terminal, in place of (never
     in addition to) a `FinishedEvent`.
+  * ``DownshiftEvent``  — the pressure ladder early-folded the request's
+    staging window at a lowered lo-store effective bit-width (``rung`` is
+    the slot's new ladder rung; ``pages_freed`` the window pages that came
+    back to the pool).  The request keeps decoding — a downshift trades
+    precision for memory instead of evicting (``preemption="downshift"``)
+    or deferring admissions (``ServeConfig.ladder_watermark``).
   * ``CallbackErrorEvent`` — a `Request.on_token` callback raised.  The
     engine contains the exception (``step()`` stays transactional — slot
     counters, fold cadence, and tokens are untouched), detaches the
@@ -89,6 +95,12 @@ class FinishedEvent(Event):
 class CancelledEvent(Event):
     n_tokens: int       # tokens decoded (and already delivered) before cancel
     reason: str         # "client" | "deadline" | caller-supplied
+
+
+@dataclasses.dataclass(frozen=True)
+class DownshiftEvent(Event):
+    rung: int           # the slot's ladder rung AFTER this downshift
+    pages_freed: int    # window pages the early fold returned to the pool
 
 
 @dataclasses.dataclass(frozen=True)

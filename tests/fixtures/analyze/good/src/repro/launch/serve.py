@@ -7,5 +7,13 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="mixed")
     ap.add_argument("--seed", type=int, default=0)
+    # the globally-exempt scenario-shape fields stay FED here: the
+    # stale-exemption ratchet flags any EXEMPT_FIELDS entry whose field
+    # no serve flag feeds, and the good tree must be clean
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=32)
     args = ap.parse_args(argv)
-    return ServeConfig(backend=args.backend, seed=args.seed)
+    return ServeConfig(backend=args.backend, seed=args.seed,
+                       batch_size=args.batch, prompt_len=args.prompt_len,
+                       max_new_tokens=args.max_new)

@@ -135,6 +135,10 @@ def test_insert_free_reinsert_matches_fresh_prefill(kind, rng):
 # (c) continuous engine: token-identical across backends (acceptance)
 # ---------------------------------------------------------------------------
 
+# the precision-map axis' fixed non-uniform map (compact grammar,
+# core/precision.py): parsed once per engine via ShapeConfig.precision_map
+PRECISION_MAP = "default=k8v8;layer:1-=k3v3"
+
 ENGINE_VARIANTS = {
     "mixed": dict(backend="mixed", paged_kernel=False),
     "paged": dict(backend="paged", paged_kernel=False),
@@ -176,6 +180,33 @@ ENGINE_VARIANTS = {
     "prefix-cache": dict(backend="paged", paged_kernel=False,
                          page_allocator="freelist", pool_fraction=1.5,
                          prefix_cache=True),
+    # the PRECISION-MAP axis: a fixed, deliberately non-uniform per-layer
+    # map (layer 0 keeps the container widths; every later layer is
+    # ceilinged at 3-bit K / 3-bit V inside the same containers).  A map
+    # CHANGES the numerics by design, so the pmap-* rows are compared
+    # against EACH OTHER — the map must be applied identically by every
+    # cache layout and decode path — never against the unmapped rows.
+    # The downshift ladder stays disarmed in all four.
+    "pmap-mixed": dict(backend="mixed", paged_kernel=False,
+                       precision_map=PRECISION_MAP),
+    "pmap-paged": dict(backend="paged", paged_kernel=False,
+                       precision_map=PRECISION_MAP),
+    "pmap-paged-kernel": dict(backend="paged", paged_kernel=True,
+                              precision_map=PRECISION_MAP),
+    "pmap-freelist": dict(backend="paged", paged_kernel=False,
+                          page_allocator="freelist", pool_fraction=1.0,
+                          precision_map=PRECISION_MAP),
+    "pmap-prefix": dict(backend="paged", paged_kernel=False,
+                        page_allocator="freelist", pool_fraction=1.5,
+                        prefix_cache=True, precision_map=PRECISION_MAP),
+    # the DOWNSHIFT-PREEMPTION axis: the ladder armed as the priority
+    # scheduler's preemption policy, over a pool that never blocks in this
+    # scenario — like priority-sched it must never fire here, and the
+    # armed engine (every fold runs through the rung-taking warm programs
+    # at rung 0) must degenerate BITWISE to the default path
+    "downshift-preempt": dict(backend="paged", paged_kernel=False,
+                              page_allocator="freelist", pool_fraction=1.0,
+                              scheduler="priority", preemption="downshift"),
 }
 
 
@@ -445,6 +476,106 @@ def test_prefix_cache_shared_prompt_dedup_bitwise():
     assert pf["cow_copies"] >= 1, pf
     # every hit skipped its whole page-aligned prompt bucket of prefill
     assert pf["prefill_tokens_skipped"] == 24 * pf["hits"], pf
+
+
+def test_continuous_engine_token_identical_with_precision_map(engine_outputs):
+    """The precision-map axis: a fixed non-uniform per-layer map must be
+    applied IDENTICALLY by every cache layout and decode path — mixed,
+    paged gather, paged Pallas kernel, free-list pages — through mid-run
+    admission and per-slot recompressions.  The map is honored at prefill,
+    append-fold, and recompress time in each, so greedy tokens, finish
+    reasons, and cadence state all agree bitwise across the pmap-* rows.
+    And the map must actually BITE: the ceilinged run may not reproduce
+    the unmapped tokens, else the axis silently tests nothing."""
+    outs, fills, _, _ = engine_outputs
+    for other in ("pmap-paged", "pmap-paged-kernel", "pmap-freelist",
+                  "pmap-prefix"):
+        np.testing.assert_array_equal(fills["pmap-mixed"], fills[other])
+        for (ra, a), (rb, b) in zip(outs["pmap-mixed"].items(),
+                                    outs[other].items()):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert a.finish_reason == b.finish_reason
+    mapped = [o.tokens.tolist() for o in outs["pmap-mixed"].values()]
+    unmapped = [o.tokens.tolist() for o in outs["mixed"].values()]
+    assert mapped != unmapped, "3-bit ceiling did not change any token"
+
+
+def test_continuous_engine_token_identical_with_downshift_preempt(engine_outputs):
+    """The downshift-preemption axis, unpressured: with the pool never
+    blocking, the ladder never fires — but the ARMED engine folds every
+    window through the rung-taking warm programs (rung 0), which must be
+    bitwise the unarmed path (``2**0`` scaling is exact)."""
+    outs, fills, _, stats = engine_outputs
+    for other in ("mixed", "priority-sched"):
+        np.testing.assert_array_equal(fills[other], fills["downshift-preempt"])
+        for (ra, a), (rb, b) in zip(outs[other].items(),
+                                    outs["downshift-preempt"].items()):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert a.finish_reason == b.finish_reason
+    ds = stats["downshift-preempt"]["downshift"]
+    assert ds == {"downshifts": 0, "pages_freed": 0, "refusals": 0}, ds
+
+
+def test_downshift_ladder_pressure_scenario():
+    """The PRESSURE side of the ladder axis: the same scenario under a
+    free-list pool with a high watermark.  Three runs:
+
+      * base — ladder disarmed (the conformance reference);
+      * armed-unpressured — watermark > 0 over a 1.5x pool that never
+        drains low: the trigger must never fire and the output must stay
+        bitwise the base (arming alone may not change numerics);
+      * pressured — an exactly-sized pool with watermark 0.6: the trigger
+        MUST fire, each downshift early-folds its victim's window at a
+        lowered lo-rung and the fold's returned window pages are counted.
+        Tokens legitimately change (that is the point of degrading); what
+        must hold is completion, accounting, and the refcount partition.
+    """
+    cfg = configs.get_arch("yi-6b", smoke=True)
+    ccfg = _ccfg()
+    params = registry.materialize_params(cfg, 0)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab, size=(48,)).astype(np.int32)
+               for _ in range(3)]
+
+    def run(pool_fraction, ladder_watermark=0.0):
+        # explicit keywords (not **kw): the conformance-axes checker reads
+        # ServeConfig call keywords to prove ladder_watermark is covered
+        scfg = ServeConfig(batch_size=2, prompt_len=48, max_new_tokens=12,
+                           page_size=8, backend="paged",
+                           page_allocator="freelist",
+                           pool_fraction=pool_fraction,
+                           ladder_watermark=ladder_watermark)
+        eng = ContinuousEngine(cfg, ccfg, scfg, params)
+        rids = [eng.submit(Request(tokens=prompts[0])),
+                eng.submit(Request(tokens=prompts[1], max_new_tokens=6))]
+        for _ in range(4):
+            eng.step()
+        rids.append(eng.submit(Request(tokens=prompts[2])))
+        while eng.pending:
+            eng.step()
+            eng._alloc.check_invariants()
+        outs = [(tuple(eng.result(r).tokens.tolist()),
+                 eng.result(r).finish_reason) for r in rids]
+        return outs, eng.pool_stats()
+
+    out_base, st_base = run(pool_fraction=1.0)
+    assert st_base["downshift"]["downshifts"] == 0
+
+    out_armed, st_armed = run(pool_fraction=1.5, ladder_watermark=0.01)
+    assert out_armed == out_base
+    assert st_armed["downshift"] == {"downshifts": 0, "pages_freed": 0,
+                                     "refusals": 0}, st_armed["downshift"]
+
+    out_pressed, st_pressed = run(pool_fraction=1.0, ladder_watermark=0.6)
+    ds = st_pressed["downshift"]
+    assert ds["downshifts"] >= 1, ds
+    assert ds["pages_freed"] >= 1, ds
+    # degraded, not broken: every request still runs to its budget
+    assert all(reason == "length" and len(toks) >= 1
+               for toks, reason in out_pressed), out_pressed
+    # every page home again once everything drained
+    assert all(v["used"] == 0 for v in st_pressed.values()
+               if isinstance(v, dict) and "used" in v)
 
 
 def test_mla_decode_token_identical_across_backends(rng):

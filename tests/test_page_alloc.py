@@ -402,6 +402,65 @@ def test_register_refused_without_slack_is_not_corrupting():
     alloc.check_invariants()
 
 
+def test_downshift_storm_preserves_refcount_partition():
+    """Downshift-ladder regression against the dedup machinery: a storm of
+    downshifts (the engine protocol — early fold_grant/fold_shrink plus
+    note_downshift accounting) interleaved with appends over a pool that
+    also holds a registered prefix and a live alias.  The aliased
+    referents (donor AND alias — both hold refcount>1 pages) must be
+    REFUSED every round: requantizing through shared tables would corrupt
+    the other referent, and privatizing first would ALLOCATE pages under
+    the very pressure the ladder is trying to relieve.  The refcount
+    partition (every page free XOR refcount == references) must hold
+    after every single op, and `fold_shrink`'s return value — the
+    ladder's "pages freed" — must equal the page-rounded window
+    occupancy it shrank."""
+    page = 8
+    alloc = _prefix_alloc(3, page, 1.5)
+    alloc.admit(0, _PREFIX_OCC, 40, _PREFIX_PROMPT)       # donor
+    assert alloc.prefix_register("sys", 0)
+    alloc.admit_alias(1, "sys", 40, _PREFIX_PROMPT, can_fold=True)
+    alloc.admit(2, _PREFIX_OCC, 40, _PREFIX_PROMPT)       # the only victim
+    alloc.check_invariants()
+
+    downshifts = refusals = freed_total = 0
+    for cycle in range(12):
+        for slot in range(3):
+            o = alloc.occ[slot]
+            if o.win < alloc.window and o.hi + o.lo + o.win < 40:
+                alloc.note_append(slot)
+                alloc.check_invariants()
+        victim = cycle % 3
+        if alloc.needs_privatize(victim):
+            alloc.note_downshift_refusal()
+            refusals += 1
+            assert victim in (0, 1), "unaliased slot refused"
+        elif alloc.occ[victim].win > 0:
+            win_before = alloc.occ[victim].win
+            alloc.fold_grant(victim)
+            freed = alloc.fold_shrink(victim)
+            assert freed == alloc_lib.pages_for(win_before, page)
+            alloc.note_downshift(victim, freed)
+            downshifts += 1
+            freed_total += freed
+        alloc.check_invariants()
+
+    ds = alloc.stats()["downshift"]
+    assert ds["downshifts"] == downshifts >= 1, ds
+    assert ds["pages_freed"] == freed_total >= 1, ds
+    assert ds["refusals"] == refusals >= 1, ds
+
+    # drain: slot churn + index eviction close conservation exactly
+    for s in range(3):
+        alloc.free(s)
+    alloc.prefix_reclaim(min_pages=10**9)
+    alloc.check_invariants()
+    for name, seg in alloc.segs.items():
+        assert len(seg.free) == seg.pool_pages, name
+        assert not seg.refcount.any(), name
+    assert alloc.pool_pressure() == 1.0          # idle pools: no pressure
+
+
 # ---------------------------------------------------------------------------
 # (b) the host-side occupancy mirror vs the real recompression
 # ---------------------------------------------------------------------------

@@ -1,0 +1,293 @@
+"""Precision maps + downshift rung algebra (core/precision.py) and their
+threading through the cache/kernel stack.
+
+Covers the three layers of the contract separately so a failure localizes:
+
+  * parsing/resolution — both spec grammars, rule override order, range
+    forms, malformed-spec rejection, head pooling for MLA-shaped caches;
+  * the ceiling algebra — ``eff = clamp(min(container, ceil), 1)``, rung
+    downshifts touching ONLY the lo (non-salient) stores with a 1-bit
+    floor, and the effective-bits accounting the benches report;
+  * cache/kernel integration — a ceiling at/above the container width is
+    BITWISE the unmapped path end-to-end through `compress_prefill`, a
+    narrower ceiling really bites, raw (>= 16-bit) stores are exempt, and
+    both decode kernels (mixed Pallas, paged page-walking) agree with
+    their dense oracles under a heterogeneous per-head map — maps are
+    invisible to kernels because the scale/zero absorb the narrowed range
+    inside unchanged containers.
+
+Engine-level conformance (precision-map axis, pressure scenario) lives in
+tests/test_backend_conformance.py; allocator-side downshift bookkeeping in
+tests/test_page_alloc.py; program-cache behavior in tests/test_retrace.py.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend as backend_lib
+from repro.core import kvcache as kvc
+from repro.core import precision
+from repro.core.policy import CompressionConfig
+
+# ---------------------------------------------------------------------------
+# parsing + resolution
+# ---------------------------------------------------------------------------
+
+
+def test_compact_grammar_resolves_with_override_order():
+    pm = precision.parse_precision_map(
+        "default=k8v8;layer:0-1=k4v4;layer:2-:head:0-1=k2v2;layer:3=k6v5")
+    t = pm.resolve(n_layers=4, n_heads=4)
+    assert t.shape == (4, 4, 2) and t.dtype == np.int32
+    assert (t[0] == [4, 4]).all() and (t[1] == [4, 4]).all()
+    assert (t[2, 0] == [2, 2]).all() and (t[2, 1] == [2, 2]).all()
+    assert (t[2, 2] == [8, 8]).all()           # default where no rule hits
+    assert (t[3] == [6, 5]).all()              # later rule overrides earlier
+
+
+def test_json_grammar_matches_compact():
+    """The KVTuner JSON shape and the compact rules resolve identically."""
+    pj = precision.parse_precision_map(
+        '{"default": {"nbits_key": 8, "nbits_value": 8},'
+        ' "1": {"nbits_key": 4, "nbits_value": 3},'
+        ' "2": {"0": {"nbits_key": 2, "nbits_value": 2}}}')
+    pc = precision.parse_precision_map(
+        "default=k8v8;layer:1=k4v3;layer:2:head:0=k2v2")
+    np.testing.assert_array_equal(pj.resolve(3, 2), pc.resolve(3, 2))
+
+
+def test_unmapped_default_is_raw_sentinel():
+    """No default rule -> RAW_BITS everywhere the rules miss: min(container,
+    16) is the container, i.e. 'no ceiling' — maps only narrow."""
+    t = precision.parse_precision_map("layer:0=k2v2").resolve(2, 2)
+    assert (t[0] == [2, 2]).all()
+    assert (t[1] == precision.RAW_BITS).all()
+
+
+def test_open_ranges_clip_to_model_shape():
+    t = precision.parse_precision_map("layer:1-:head:3-=k2v2").resolve(3, 8)
+    assert (t[1:, 3:] == 2).all()
+    assert (t[0] == precision.RAW_BITS).all()
+    assert (t[1:, :3] == precision.RAW_BITS).all()
+
+
+def test_empty_spec_disables():
+    assert precision.parse_precision_map("") is None
+    assert precision.parse_precision_map(None) is None
+    assert precision.parse_precision_map("   ") is None
+
+
+@pytest.mark.parametrize("bad", [
+    "layer:0",                       # no '='
+    "layer:0=4v2",                   # bits not kNvM
+    "layer:0=k4",                    # missing v
+    "layer:a-2=k4v2",                # non-integer range
+    "head:0=k4v2",                   # selector must start with layer
+    "layer:0:head=k4v2",             # truncated head selector
+    "layer:0=k0v2",                  # bits below the 1-bit floor
+    "layer:0=k4v99",                 # bits above RAW_BITS
+    '{"x": {"nbits_key": 4, "nbits_value": 2}}',   # non-integer layer key
+    '{"0": {"nbits_key": 4}}',       # missing nbits_value
+    '{"0": [4, 2]}',                 # layer entry not an object
+    '{bad json',                     # malformed JSON
+])
+def test_malformed_specs_raise_value_error(bad):
+    with pytest.raises(ValueError):
+        precision.parse_precision_map(bad)
+
+
+def test_pooled_table_min_pools_head_groups():
+    t = np.array([[[8, 8], [2, 4], [6, 6], [3, 7]]], np.int32)  # (1, 4, 2)
+    # MLA-style single latent head: strictest ceiling wins
+    np.testing.assert_array_equal(precision.pooled_table(t, 1),
+                                  [[[2, 4]]])
+    # GQA-style 2 kv heads over 4 map heads: per-group min
+    np.testing.assert_array_equal(precision.pooled_table(t, 2),
+                                  [[[2, 4], [3, 6]]])
+    # same head count: identity
+    np.testing.assert_array_equal(precision.pooled_table(t, 4), t)
+
+
+# ---------------------------------------------------------------------------
+# ceiling + rung algebra
+# ---------------------------------------------------------------------------
+
+
+def test_layer_eff_clamps_to_container_and_floor():
+    t = np.array([[[8, 8], [3, 1], [16, 16]]], np.int32)
+    le = precision.layer_eff(t, 0, high_bits=4, low_bits=2)
+    for f in le:
+        assert f.shape == (3, 1, 1)
+    np.testing.assert_array_equal(np.asarray(le.hi_k)[:, 0, 0], [4, 3, 4])
+    np.testing.assert_array_equal(np.asarray(le.lo_k)[:, 0, 0], [2, 2, 2])
+    np.testing.assert_array_equal(np.asarray(le.hi_v)[:, 0, 0], [4, 1, 4])
+    np.testing.assert_array_equal(np.asarray(le.lo_v)[:, 0, 0], [2, 1, 2])
+
+
+def test_rung_lowers_lo_only_with_one_bit_floor():
+    t = np.array([[[8, 8], [8, 8]]], np.int32)
+    le = precision.layer_eff(t, 0, high_bits=4, low_bits=2)
+    for rung, want_lo in [(0, 2), (1, 1), (5, 1)]:
+        re = precision.rung_eff(le, jnp.asarray(rung, jnp.int32), 4, 2)
+        np.testing.assert_array_equal(np.asarray(re.hi_k),
+                                      np.asarray(le.hi_k))   # hi untouched
+        assert float(np.asarray(re.lo_k).max()) == want_lo
+        assert float(np.asarray(re.lo_v).min()) == want_lo
+
+
+def test_rung_eff_batched_shape():
+    """(b,) rungs broadcast to (b, 1, 1, 1) against (b, h, S, d) stats —
+    the rows-masked fold program's operand shape."""
+    re = precision.rung_eff(None, jnp.asarray([0, 1, 3], jnp.int32),
+                            high_bits=4, low_bits=2)
+    assert re.lo_k.shape == (3, 1, 1, 1)
+    np.testing.assert_array_equal(np.asarray(re.lo_k)[:, 0, 0, 0], [2, 1, 1])
+    # eff None: bases are the container widths, hi stays at high_bits
+    assert float(np.asarray(re.hi_k)) == 4.0
+
+
+def test_effective_bits_accounting():
+    assert precision.effective_bits(None, 4, 2) == {"hi_bits": 4.0,
+                                                    "lo_bits": 2.0}
+    t = np.array([[[8, 8], [1, 1]]], np.int32)
+    eb = precision.effective_bits(t, 4, 2)
+    assert eb["hi_bits"] == pytest.approx(2.5)   # mean(min(4,8), min(4,1))
+    assert eb["lo_bits"] == pytest.approx(1.5)   # mean(min(2,8), min(2,1))
+
+
+# ---------------------------------------------------------------------------
+# cache integration: compress_prefill under maps
+# ---------------------------------------------------------------------------
+
+
+def _ccfg(policy="zipcache", **kw):
+    return dataclasses.replace(CompressionConfig.preset(policy, **kw),
+                               fp_window=8, recompress_interval=8)
+
+
+def _kv(rng, b=2, hk=2, l=48, d=16):
+    k = jnp.asarray(rng.normal(size=(b, hk, l, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, hk, l, d)).astype(np.float32))
+    s = jnp.asarray(rng.uniform(size=(b, l)).astype(np.float32))
+    return k, v, s
+
+
+def _layer_eff_for(ccfg, spec, layer=0, n_heads=2):
+    table = precision.parse_precision_map(spec).resolve(2, n_heads)
+    return precision.layer_eff(precision.pooled_table(table, n_heads),
+                               layer, ccfg.high_bits, ccfg.low_bits)
+
+
+@pytest.mark.parametrize("policy", ["zipcache", "kivi", "gear"])
+def test_prefill_with_ceiling_at_container_is_bitwise_default(policy, rng):
+    """A map whose every entry is >= the container widths must leave the
+    whole compressed tree BITWISE identical to no map at all — the
+    invariant that makes `--precision-map` safe to thread everywhere."""
+    k, v, s = _kv(rng)
+    ccfg = _ccfg(policy)
+    eff = _layer_eff_for(ccfg, "default=k16v16")
+    base = kvc.compress_prefill(ccfg, k, v,
+                                s if ccfg.uses_saliency else None,
+                                max_len=64, dtype=jnp.float32)
+    mapped = kvc.compress_prefill(ccfg, k, v,
+                                  s if ccfg.uses_saliency else None,
+                                  max_len=64, dtype=jnp.float32, eff=eff)
+    import jax
+    for a, b in zip(jax.tree_util.tree_leaves(base),
+                    jax.tree_util.tree_leaves(mapped)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_prefill_with_low_ceiling_changes_codes_not_shapes(rng):
+    k, v, s = _kv(rng)
+    ccfg = _ccfg()
+    eff = _layer_eff_for(ccfg, "default=k2v2")
+    base = kvc.compress_prefill(ccfg, k, v, s, max_len=64, dtype=jnp.float32)
+    mapped = kvc.compress_prefill(ccfg, k, v, s, max_len=64,
+                                  dtype=jnp.float32, eff=eff)
+    # containers unchanged: identical tree structure, shapes and dtypes
+    import jax
+    la, lb = (jax.tree_util.tree_leaves(t) for t in (base, mapped))
+    assert [(x.shape, x.dtype) for x in la] == [(x.shape, x.dtype) for x in lb]
+    # but the hi-store codes really narrowed (2-bit range inside the 4-bit
+    # container): ceilings bite
+    assert not np.array_equal(np.asarray(base.hi.k.codes),
+                              np.asarray(mapped.hi.k.codes))
+    from repro.core import packing
+    unpacked = np.asarray(packing.unpack(mapped.hi.k.codes,
+                                         mapped.hi.k.bits))
+    assert unpacked.max() <= packing.max_code(2)
+
+
+def test_recompress_with_rung_narrows_lo_store(rng):
+    """The ladder's requantize program at the cache level: recompress with
+    a rung-folded eff leaves hi codes' range intact and narrows lo."""
+    from repro.core import packing
+
+    k, v, s = _kv(rng)
+    ccfg = _ccfg()
+    cache = kvc.compress_prefill(ccfg, k, v, s, max_len=64,
+                                 dtype=jnp.float32)
+    for _ in range(3):
+        kt = jnp.asarray(rng.normal(size=(2, 2, 16)).astype(np.float32))
+        cache = kvc.append_token(cache, kt, kt * 0.5)
+    eff = precision.rung_eff(None, jnp.asarray(1, jnp.int32),
+                             ccfg.high_bits, ccfg.low_bits)
+    out = kvc.recompress(ccfg, cache, eff=eff)
+    lo = np.asarray(packing.unpack(out.lo.k.codes, out.lo.k.bits))
+    assert lo.max() <= packing.max_code(max(1, ccfg.low_bits - 1))
+    hi = np.asarray(packing.unpack(out.hi.k.codes, out.hi.k.bits))
+    assert hi.max() > packing.max_code(max(1, ccfg.high_bits - 1))
+
+
+# ---------------------------------------------------------------------------
+# kernel-vs-oracle under heterogeneous maps (maps must be kernel-invisible)
+# ---------------------------------------------------------------------------
+
+HETERO = "default=k8v8;layer:0:head:0=k3v2"   # head 0 narrowed, head 1 free
+
+
+def test_mixed_decode_kernel_matches_dense_under_heterogeneous_map(rng):
+    from repro.kernels.decode_qattn import ops as dq_ops
+
+    ccfg = dataclasses.replace(CompressionConfig.zipcache(saliency_ratio=0.4),
+                               fp_window=16, recompress_interval=16)
+    b, hq, hk, l, d = 2, 4, 2, 96, 32
+    k = jnp.asarray(rng.normal(size=(b, hk, l, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, hk, l, d)).astype(np.float32))
+    s = jnp.asarray(rng.uniform(size=(b, l)).astype(np.float32))
+    eff = _layer_eff_for(ccfg, HETERO, n_heads=hk)
+    cache = kvc.compress_prefill(ccfg, k, v, s, max_len=l + 16,
+                                 dtype=jnp.float32, eff=eff)
+    for _ in range(3):
+        kt = jnp.asarray(rng.normal(size=(b, hk, d)).astype(np.float32))
+        cache = kvc.append_token(cache, kt, kt * 0.5)
+    q = jnp.asarray(rng.normal(size=(b, hq, d)).astype(np.float32))
+    ref = kvc.attend_decode(q, cache).out
+    out = dq_ops.decode_attend_mixed(q, cache, block_s=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=1e-4)
+
+
+def test_paged_kernel_matches_gather_under_heterogeneous_map(rng):
+    from repro.kernels.paged_qattn import ops as pq_ops
+
+    ccfg = _ccfg("zipcache", saliency_ratio=0.4)
+    b, hq, hk, l, d = 2, 4, 2, 48, 16
+    k = jnp.asarray(rng.normal(size=(b, hk, l, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, hk, l, d)).astype(np.float32))
+    s = jnp.asarray(rng.uniform(size=(b, l)).astype(np.float32))
+    eff = _layer_eff_for(ccfg, HETERO, n_heads=hk)
+    be = backend_lib.of(ccfg, kind="paged", page_size=8)
+    cache = be.compress_prefill(k, v, s, 64, dtype=jnp.float32, eff=eff)
+    q = jnp.asarray(rng.normal(size=(b, hq, d)).astype(np.float32))
+    dense = kvc.attend_decode(q, cache.dense_view()).out
+    ker = pq_ops.attend_paged(q, cache)                  # interpret Pallas
+    orc = pq_ops.attend_paged(q, cache, use_ref=True)    # jnp oracle
+    np.testing.assert_allclose(np.asarray(ker.out), np.asarray(dense),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(orc.out), np.asarray(dense),
+                               atol=1e-5, rtol=1e-5)

@@ -209,6 +209,195 @@ def test_groupwise_param_layout(rng):
 
 
 # ---------------------------------------------------------------------------
+# precision maps: effective-bit ceilings inside fixed containers
+# (core/precision.py — per-layer/head maps and the downshift ladder both
+# reduce to the quantizers' `eff` parameter tested here)
+# ---------------------------------------------------------------------------
+
+# every (container, effective) pair the map machinery can produce: container
+# widths are the packable storage bits, effective bits anything from the
+# 1-bit ladder floor up to the container itself
+EFF_PAIRS = [(c, e) for c in (2, 4, 8) for e in range(1, 9) if e <= c]
+
+
+@given(pair=st.sampled_from(EFF_PAIRS), scheme=st.sampled_from(SCHEMES),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_eff_codes_fit_ceiling_and_container_roundtrip_property(pair, scheme,
+                                                                seed):
+    """For EVERY (container, effective) bit pair: codes stay within the
+    effective range [0, 2^eff - 1] (the map narrows the RANGE, the container
+    stays put), the container packing still round-trips them losslessly, and
+    the per-element error bound holds with the eff-absorbed scale."""
+    bits, eff = pair
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32) * 2)
+    qt = quant.quantize(x, bits, scheme, eff=float(eff))
+    codes = np.asarray(packing.unpack(qt.codes, bits))
+    assert codes.max() <= packing.max_code(eff), (codes.max(), eff)
+    assert codes.min() >= 0
+    np.testing.assert_array_equal(
+        np.asarray(packing.pack(jnp.asarray(codes), bits)),
+        np.asarray(qt.codes))
+    err = jnp.abs(qt.dequantize() - x)
+    scale = qt.scale.astype(jnp.float32)
+    if qt.channel_scale is not None:
+        scale = scale * qt.channel_scale.astype(jnp.float32)
+    assert bool(jnp.all(err <= jnp.broadcast_to(scale, x.shape) * 0.5001 + 1e-5))
+
+
+@given(bits=st.sampled_from([2, 4, 8]), scheme=st.sampled_from(SCHEMES),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_eff_at_container_width_is_bitwise_default_property(bits, scheme, seed):
+    """eff == container width must reproduce the no-map path BITWISE — the
+    guarantee that lets precision maps default on everywhere (engines build
+    one code path) without perturbing a single stored byte."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32) * 3)
+    q1 = quant.quantize(x, bits, scheme)
+    q2 = quant.quantize(x, bits, scheme, eff=float(bits))
+    np.testing.assert_array_equal(np.asarray(q1.codes), np.asarray(q2.codes))
+    np.testing.assert_array_equal(np.asarray(q1.scale), np.asarray(q2.scale))
+    np.testing.assert_array_equal(np.asarray(q1.zero), np.asarray(q2.zero))
+    np.testing.assert_array_equal(np.asarray(q1.dequantize()),
+                                  np.asarray(q2.dequantize()))
+
+
+@given(bits=st.sampled_from([4, 8]), scheme=st.sampled_from(SCHEMES),
+       seed=st.integers(0, 2**31 - 1),
+       effs=st.lists(st.integers(1, 4), min_size=3, max_size=3))
+@settings(max_examples=30, deadline=None)
+def test_heterogeneous_per_head_eff_is_per_head_quantization_property(
+        bits, scheme, seed, effs):
+    """A heterogeneous per-head map — the broadcast-ready (h, 1, 1) eff array
+    the engine threads — must be BITWISE the h independent quantizations at
+    each head's own scalar eff: heads never leak into each other's ranges."""
+    rng = np.random.default_rng(seed)
+    h = len(effs)
+    x = jnp.asarray(rng.normal(size=(h, 12, 16)).astype(np.float32) * 2)
+    eff = jnp.asarray(effs, jnp.float32)[:, None, None]
+    q_all = quant.quantize(x, bits, scheme, eff=eff)
+    for i, e in enumerate(effs):
+        q_one = quant.quantize(x[i], bits, scheme, eff=float(e))
+        np.testing.assert_array_equal(np.asarray(q_all.codes[i]),
+                                      np.asarray(q_one.codes))
+        np.testing.assert_array_equal(np.asarray(q_all.dequantize()[i]),
+                                      np.asarray(q_one.dequantize()))
+
+
+@given(bits=st.sampled_from([2, 4, 8]), scheme=st.sampled_from(SCHEMES),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_one_bit_eff_edge_property(bits, scheme, seed):
+    """The ladder's deepest rung: eff=1 yields binary codes in ANY container
+    and still reconstructs both range endpoints (min and max survive)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32) * 2)
+    qt = quant.quantize(x, bits, scheme, eff=1.0)
+    codes = np.asarray(packing.unpack(qt.codes, bits))
+    assert set(np.unique(codes)) <= {0, 1}, np.unique(codes)
+    # dequant still spans the data: error can never exceed the full range
+    # (a degenerate all-zero/all-max collapse would)
+    err = float(jnp.max(jnp.abs(qt.dequantize() - x)))
+    rng_span = float(jnp.max(x) - jnp.min(x))
+    assert err <= rng_span + 1e-5
+
+
+@given(pair=st.sampled_from(EFF_PAIRS), page=st.sampled_from([4, 8, 16]),
+       t=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_per_page_dequant_accumulate_matches_dense_under_eff_property(
+        pair, page, t, seed):
+    """The paged-kernel invariant under precision maps, for EVERY
+    (container, effective) pair including the 1-bit ladder floor: eff is
+    fully absorbed into the per-slot params, so the page-granular dequant
+    machinery (which never sees eff) stays bitwise the dense one-shot, and
+    per-page weighted accumulation matches the dense contraction."""
+    from repro.kernels.paged_qattn import ref as pq_ref
+
+    bits, eff = pair
+    rng = np.random.default_rng(seed)
+    c = 16
+    x = jnp.asarray(rng.normal(size=(t, c)).astype(np.float32) * 2)
+    npp = -(-t // page)
+    pad = npp * page - t
+    for scheme in ("channelwise", "cst"):
+        qt = quant.quantize(x, bits, scheme, eff=float(eff))
+        dense = np.asarray(qt.dequantize(), np.float32)
+        codes = jnp.pad(qt.codes, ((0, pad), (0, 0)))
+        if scheme == "cst":
+            ts = jnp.pad(qt.scale, ((0, pad), (0, 0)))
+            tz = jnp.pad(qt.zero, ((0, pad), (0, 0)))
+        pages = []
+        for j in range(npp):
+            sl = slice(j * page, (j + 1) * page)
+            if scheme == "channelwise":
+                pages.append(pq_ref.dequant_page_ref(
+                    codes[sl], bits, None, None, qt.scale, qt.zero, None))
+            else:
+                pages.append(pq_ref.dequant_page_ref(
+                    codes[sl], bits, ts[sl], tz[sl], None, None,
+                    qt.channel_scale))
+        paged = np.concatenate([np.asarray(p) for p in pages], 0)[:t]
+        np.testing.assert_array_equal(paged, dense)
+        w = jnp.asarray(rng.uniform(size=(t,)).astype(np.float32))
+        wp = jnp.pad(w, (0, pad))
+        acc = sum(jnp.einsum("s,sc->c", wp[j * page:(j + 1) * page],
+                             jnp.asarray(pages[j])) for j in range(npp))
+        one_shot = jnp.einsum("s,sc->c", w, jnp.asarray(dense))
+        np.testing.assert_allclose(np.asarray(acc), np.asarray(one_shot),
+                                   atol=1e-4, rtol=1e-5)
+
+
+@pytest.mark.parametrize("pair", EFF_PAIRS)
+def test_eff_pair_grid_deterministic(pair, rng):
+    """Deterministic companion to the eff property suite (runs even without
+    hypothesis): for every (container, effective) pair and scheme — ceiling
+    fit, container round-trip, bitwise-default at eff == container, and
+    per-head heterogeneous == per-head independent quantization."""
+    bits, eff = pair
+    x = jnp.asarray(rng.normal(size=(3, 12, 16)).astype(np.float32) * 2)
+    for scheme in SCHEMES:
+        qt = quant.quantize(x, bits, scheme, eff=float(eff))
+        codes = np.asarray(packing.unpack(qt.codes, bits))
+        assert 0 <= codes.min() and codes.max() <= packing.max_code(eff)
+        np.testing.assert_array_equal(
+            np.asarray(packing.pack(jnp.asarray(codes), bits)),
+            np.asarray(qt.codes))
+        if eff == bits:
+            q0 = quant.quantize(x, bits, scheme)
+            np.testing.assert_array_equal(np.asarray(q0.codes),
+                                          np.asarray(qt.codes))
+            np.testing.assert_array_equal(np.asarray(q0.dequantize()),
+                                          np.asarray(qt.dequantize()))
+        # heterogeneous per-head map == independent per-head quantization
+        effs = [eff, bits, max(1, eff - 1)]
+        ev = jnp.asarray(effs, jnp.float32)[:, None, None]
+        q_all = quant.quantize(x, bits, scheme, eff=ev)
+        for i, e in enumerate(effs):
+            q_one = quant.quantize(x[i], bits, scheme, eff=float(e))
+            np.testing.assert_array_equal(np.asarray(q_all.codes[i]),
+                                          np.asarray(q_one.codes))
+
+
+def test_raw16_ignores_precision_maps(rng):
+    """Raw >= 16-bit stores are exempt from maps by definition (there is no
+    quantizer whose range a ceiling could narrow): the kvcache threading
+    must leave them identity regardless of any eff in flight."""
+    from repro.core import kvcache as kvc
+    from repro.core.policy import CompressionConfig
+
+    x = jnp.asarray(rng.normal(size=(1, 2, 8, 16)).astype(np.float32))
+    ccfg = CompressionConfig.preset("h2o")       # hi store is raw 16-bit
+    pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (1, 8))
+    hi = kvc.build_store(x, x, pos, jnp.zeros((1, 8)), jnp.zeros((1, 8)),
+                         16, ccfg, eff_k=jnp.full((2, 1, 1), 3.0),
+                         eff_v=jnp.full((2, 1, 1), 3.0))
+    np.testing.assert_array_equal(np.asarray(hi.k.dequantize()), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
 # Appendix A compression-ratio algebra — exact paper numbers
 # ---------------------------------------------------------------------------
 

@@ -221,6 +221,50 @@ def test_http_server_loop_zero_compiles_at_steady_state():
     assert steady.count == 0
 
 
+def test_precision_map_engine_zero_compiles_at_steady_state():
+    """The precision-map axis of the retrace story: a non-uniform
+    per-layer map changes the EFFECTIVE bits via qmax values baked into
+    the (unchanged-shape) quantize programs, never the containers or any
+    array shape — so a mapped engine warms the exact same number of
+    program signatures and a second identically-shaped pass compiles
+    zero, same as the unmapped engine."""
+    cfg, eng = _engine(precision_map="default=k8v8;layer:1-=k3v3")
+
+    with compile_guard.count_compiles() as warm:
+        _drive_deferral_scenario(eng, _prompts(cfg, seed=0, n=3))
+    assert warm.count > 0, "warmup must compile (guard sanity check)"
+
+    with compile_guard.assert_no_compiles() as steady:
+        _drive_deferral_scenario(eng, _prompts(cfg, seed=1, n=3))
+    assert steady.count == 0
+
+
+def test_downshift_ladder_zero_compiles_at_steady_state():
+    """The ladder's latency claim: a downshift is an EARLY FOLD through
+    the same warm rung-taking recompress programs every armed fold uses —
+    the victim's rung rides in as a data operand (one program per
+    signature, not per rung), so pressure events at steady state compile
+    exactly zero.  The watermark over an exactly-sized pool makes the
+    trigger provably fire inside BOTH guarded regions."""
+    cfg, eng = _engine(backend="paged", page_size=8,
+                       page_allocator="freelist", pool_fraction=1.0,
+                       ladder_watermark=0.6)
+
+    with compile_guard.count_compiles() as warm:
+        _drive_deferral_scenario(eng, _prompts(cfg, seed=0, n=3))
+    assert warm.count > 0, "warmup must compile (guard sanity check)"
+    ds_before = eng.pool_stats()["downshift"]["downshifts"]
+    assert ds_before >= 1, "scenario must force a downshift"
+
+    with compile_guard.assert_no_compiles() as steady:
+        _drive_deferral_scenario(eng, _prompts(cfg, seed=1, n=3))
+    assert steady.count == 0
+    # the ladder fired again, inside the guarded region: rung bump, early
+    # fold, page return — all on warm programs
+    assert eng.pool_stats()["downshift"]["downshifts"] > ds_before
+    eng._alloc.check_invariants()
+
+
 def test_guard_counts_fresh_compiles():
     """The guard itself: a brand-new program inside the region is counted
     and named; `assert_no_compiles` raises `RetraceError` on it."""

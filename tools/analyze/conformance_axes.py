@@ -20,7 +20,15 @@ This checker cross-references three surfaces:
 
 Every flag-fed field must appear in the fixture or carry a justified
 exemption below.  Exemptions are per-entry and reviewed like code — they
-are the checker's analogue of the suppression comment.
+are the checker's analogue of the suppression comment; an exemption
+whose field no serve flag feeds anymore is itself a violation (stale
+exemptions rot into blanket waivers for future flags of the same name).
+
+This is the ratchet that forced `--precision-map` and
+`--ladder-watermark` (the adaptive-precision axes) into ENGINE_VARIANTS
+/ the pressure scenario before they could ship: any new numerics knob
+added to serve.py fails `make lint` here until the conformance fixture
+exercises it.
 
 A fourth surface when present: `repro.launch.serve_http` (the HTTP front)
 must populate its engine flags through `serve.add_engine_args` and build
@@ -226,4 +234,15 @@ def check(root: Path, live: bool = True) -> List[common.Violation]:
             "ENGINE_VARIANTS axis (or a justified EXEMPT_FIELDS entry in "
             "tools/analyze/conformance_axes.py) so the knob cannot ship "
             "untested"))
+
+    # the exemption list must not outlive the flags it waives: an entry
+    # for a field no serve flag feeds is dead weight that would silently
+    # pre-waive any FUTURE flag reusing the name
+    for field in sorted(EXEMPT_FIELDS):
+        if field not in fields:
+            violations.append(common.Violation(
+                CHECKER, "tools/analyze/conformance_axes.py", 1,
+                "EXEMPT_FIELDS", f"stale-exempt-{field}",
+                f"EXEMPT_FIELDS waives ServeConfig.{field}, but no serve "
+                "flag feeds that field — delete the stale exemption"))
     return violations
