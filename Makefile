@@ -4,7 +4,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-conformance test-kernels test-alloc \
     test-scheduling test-http test-prefix test-precision test-retrace \
-    test-ci lint docs-check dev serve bench
+    test-swap test-ci lint docs-check dev serve bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -75,6 +75,15 @@ test-precision:
 	$(PYTHON) -m pytest -x -q -k "eff or precision or downshift or raw16" \
 	    tests/test_quant.py tests/test_backend_conformance.py \
 	    tests/test_page_alloc.py tests/test_retrace.py
+
+# host swap tier: pool/allocator roundtrip invariants (partition, host-byte
+# conservation, refusal counting), the bitwise swap == recompute ==
+# uncontended pressure scenario + the unpressured conformance axis, the
+# aging/starvation scheduler tests, and the zero-compile swapping proof
+test-swap:
+	$(PYTHON) -m pytest -x -q -k "swap or aging" \
+	    tests/test_page_alloc.py tests/test_backend_conformance.py \
+	    tests/test_scheduling.py tests/test_retrace.py
 
 # README/docs stay mechanically honest: flag tables vs the live argparse
 # surface, python snippets parse, referenced paths exist (tools/check_docs.py)

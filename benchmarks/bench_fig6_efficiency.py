@@ -140,6 +140,10 @@ def run():
     # ---- measured (CPU): shared-system-prompt dedup, prefix cache on/off
     run_shared_prefix()
 
+    # ---- measured (CPU): preempt+recompute vs host swap tier under a
+    # priority burst — restore latency and the prefill-replay tax
+    run_swap_vs_recompute()
+
 
 def run_head_of_line():
     """Head-of-line latency under a long-budget monopoly: two requests with
@@ -214,6 +218,98 @@ def run_head_of_line():
             f"ft_s_p99:{np.percentile(secs, 99):.3f};"
             f"total_steps:{eng._step_no - base_step};"
             f"preemptions:{ps['preemptions']};deferrals:{ps['deferrals']}")
+
+
+def run_swap_vs_recompute():
+    """Preempt+recompute vs the host swap tier on the same priority burst:
+    two full-budget longs hold both slots when high-priority shorts arrive,
+    so one long is evicted and later re-admitted.  Recompute replays the
+    victim's prompt + generated tokens through prefill (FLOPs proportional
+    to everything decoded so far); swap pays two host transfers of the
+    EXACT quantized cache (a few hundred KB of packed codes) and re-grants
+    pages — no prefill program runs on re-admission.  Emitted per policy:
+    contended wall-clock (uncontended same-engine baseline in the detail
+    string), total scheduler steps, the victim's evict->next-token resume
+    latency in steps, preemption/swap counters, and the swap entry size.
+    Both rows must produce BITWISE the uncontended run's tokens — asserted
+    here, not just in the test suite (tests/test_backend_conformance.py
+    covers the same bar with allocator invariants per step)."""
+    import dataclasses
+
+    from repro import configs
+    from repro.core.policy import CompressionConfig
+    from repro.serving import (ContinuousEngine, PreemptedEvent, Request,
+                               ServeConfig, SwappedEvent, TokenEvent)
+    from repro.models import registry
+
+    cfg = configs.get_arch("yi-6b", smoke=True)
+    params = registry.materialize_params(cfg, 0)
+    ccfg = dataclasses.replace(CompressionConfig.zipcache(),
+                               fp_window=8, recompress_interval=8)
+    slots, prompt_len, long_budget, n_short = 2, 32, 24, 2
+    rng = np.random.default_rng(0)
+    longs = [rng.integers(2, cfg.vocab, size=(prompt_len,)).astype(np.int32)
+             for _ in range(slots)]
+    shorts = [rng.integers(2, cfg.vocab, size=(prompt_len,)).astype(np.int32)
+              for _ in range(n_short)]
+
+    def contend(eng):
+        """Longs monopolize, shorts preempt; returns (long ids, events)."""
+        lids = [eng.submit(Request(tokens=p, max_new_tokens=long_budget))
+                for p in longs]
+        for _ in range(3):
+            eng.step()
+        for p in shorts:
+            eng.submit(Request(tokens=p, max_new_tokens=2, priority=1))
+        events = []
+        while eng.pending:
+            events += eng.step()
+        return lids, events
+
+    for label, kw in (("recompute", dict(preemption="recompute")),
+                      ("swap", dict(preemption="swap", swap_pool_mb=8))):
+        scfg = ServeConfig(batch_size=slots, prompt_len=prompt_len,
+                           max_new_tokens=long_budget, backend="paged",
+                           page_size=8, page_allocator="freelist",
+                           pool_fraction=1.0, scheduler="priority", **kw)
+        eng = ContinuousEngine(cfg, ccfg, scfg, params)
+        contend(eng)        # warm-up: compile the full program family,
+        eng.results.clear()  # including the evict/re-admit path under test
+
+        # uncontended baseline on the warm engine: the bitwise reference
+        wids = [eng.submit(Request(tokens=p, max_new_tokens=long_budget))
+                for p in longs]
+        t0 = time.perf_counter()
+        eng.run()
+        t_base = time.perf_counter() - t0
+        ref = [eng.result(w).tokens for w in wids]
+
+        base_step = eng._step_no
+        t0 = time.perf_counter()
+        lids, events = contend(eng)
+        t = time.perf_counter() - t0
+        for rid, reft in zip(lids, ref):
+            np.testing.assert_array_equal(eng.result(rid).tokens, reft)
+
+        evict_step, resume_steps = {}, []
+        for ev in events:
+            if isinstance(ev, PreemptedEvent) or (
+                    isinstance(ev, SwappedEvent) and ev.direction == "out"):
+                evict_step[ev.request_id] = ev.step
+            elif isinstance(ev, TokenEvent) and ev.request_id in evict_step:
+                resume_steps.append(ev.step - evict_step.pop(ev.request_id))
+        ps = eng.pool_stats()
+        sw = ps.get("swap") or {}
+        common.emit(
+            f"fig6.swap_vs_recompute.{label}", t * 1e6,
+            f"uncontended_us:{t_base * 1e6:.0f};"
+            f"total_steps:{eng._step_no - base_step};"
+            f"resume_steps:{max(resume_steps, default=0)};"
+            f"preemptions:{ps['preemptions']};"
+            f"swaps_out:{sw.get('swaps_out', 0)};"
+            f"swaps_in:{sw.get('swaps_in', 0)};"
+            f"swap_refusals:{sw.get('swap_refusals', 0)};"
+            f"entry_KiB:{sw.get('entry_bytes', 0) / 1024:.1f}")
 
 
 def run_pool_elasticity():

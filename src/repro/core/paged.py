@@ -529,6 +529,85 @@ def insert_slot(dst: PagedKVCache, src: PagedKVCache, slot,
                                 src.win_v_pages, src.win_table))
 
 
+def extract_slot(cache: PagedKVCache, slot, batch_axis: int = 0):
+    """One slot's complete device state: payload pages in LOGICAL order per
+    segment plus its dense metadata rows — the device half of swap-out
+    (`core/swap.py` owns the host mirrors).
+
+    Payload is gathered through the slot's page table with `_slot_pages`, so
+    each segment yields (npp, h, page, c) regardless of which physical pages
+    the slot holds.  Table entries past the granted prefix are NULL (sink id)
+    and gather sink garbage — harmless, because validity is pos-driven and
+    `restore_slot` scatters those logical pages back into the sink.  Keeping
+    the full npp extent (instead of the valid prefix) keeps shapes static so
+    ONE warm program serves every occupancy.
+
+    Returns a dict pytree (`hi_k/hi_v/lo_k/lo_v/win_k/win_v` page stacks and
+    a `meta` leaf list) rather than a PagedKVCache: the b=1 metadata rows and
+    the logical page stacks don't form a valid cache (no pools/tables), and a
+    flat list sidesteps the QuantizedTensor aux-shape mismatch exactly like
+    `kvcache.tree_update_rows`.  batch_axis=1 vmaps over a stacked leading
+    group axis (5-d pools)."""
+    if batch_axis == 1:
+        return jax.vmap(lambda c: extract_slot(c, slot))(cache)
+
+    def gather_seg(pages, table):
+        if table.shape[1] == 0:
+            return pages[:0]
+        return _slot_pages(pages, table, slot)
+
+    return {
+        "hi_k": gather_seg(cache.hi.k_pages, cache.hi.table),
+        "hi_v": gather_seg(cache.hi.v_pages, cache.hi.table),
+        "lo_k": gather_seg(cache.lo.k_pages, cache.lo.table),
+        "lo_v": gather_seg(cache.lo.v_pages, cache.lo.table),
+        "win_k": gather_seg(cache.win_k_pages, cache.win_table),
+        "win_v": gather_seg(cache.win_v_pages, cache.win_table),
+        "meta": [jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=0)
+                 for x in jax.tree_util.tree_leaves(_meta_only(cache))],
+    }
+
+
+def restore_slot(cache: PagedKVCache, payload, slot,
+                 batch_axis: int = 0) -> PagedKVCache:
+    """Inverse of `extract_slot`: scatter a swapped-out slot's payload onto
+    the physical pages its NEW table row grants and rewrite its metadata
+    rows.  The allocator re-granted `pages_for(occ)` pages host-side before
+    this runs, so every live logical page lands on a real physical page;
+    logical pages past the grant hit NULL entries and are absorbed by the
+    sink (don't-care, validity is pos-driven).  Bitwise: pages and metadata
+    return exactly the bytes `extract_slot` captured."""
+    if batch_axis == 1:
+        return jax.vmap(lambda c, p: restore_slot(c, p, slot))(cache, payload)
+
+    def scatter_seg(pages, table, logical):
+        if table.shape[1] == 0:
+            return pages
+        row = jax.lax.dynamic_slice_in_dim(table, slot, 1, axis=0)[0]
+        return pages.at[row].set(logical.astype(pages.dtype))
+
+    meta_leaves, treedef = jax.tree_util.tree_flatten(_meta_only(cache))
+    new_meta = [jax.lax.dynamic_update_slice_in_dim(d, s.astype(d.dtype),
+                                                    slot, axis=0)
+                for d, s in zip(meta_leaves, payload["meta"])]
+    out = _with_payload_of(jax.tree_util.tree_unflatten(treedef, new_meta),
+                           cache)
+    hi = dataclasses.replace(
+        out.hi,
+        k_pages=scatter_seg(cache.hi.k_pages, cache.hi.table, payload["hi_k"]),
+        v_pages=scatter_seg(cache.hi.v_pages, cache.hi.table, payload["hi_v"]))
+    lo = dataclasses.replace(
+        out.lo,
+        k_pages=scatter_seg(cache.lo.k_pages, cache.lo.table, payload["lo_k"]),
+        v_pages=scatter_seg(cache.lo.v_pages, cache.lo.table, payload["lo_v"]))
+    return dataclasses.replace(
+        out, hi=hi, lo=lo,
+        win_k_pages=scatter_seg(cache.win_k_pages, cache.win_table,
+                                payload["win_k"]),
+        win_v_pages=scatter_seg(cache.win_v_pages, cache.win_table,
+                                payload["win_v"]))
+
+
 def free_slot(cache: PagedKVCache, slot, batch_axis: int = 0) -> PagedKVCache:
     """Retire a slot: invalidate its dense metadata rows.  Pages are left
     stale (validity is pos-driven, exactly as in the mixed layout).  With

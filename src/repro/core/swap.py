@@ -1,0 +1,157 @@
+"""Host-memory KV swap tier — the fourth backpressure lever.
+
+Under pool pressure the engine can defer admission, preempt+recompute, or
+downshift precision (core/precision.py).  This module adds the lever
+ROADMAP item 4 left open: swap a victim's EXACT quantized cache to host
+memory and bring it back later, paying two PCIe transfers instead of
+prefill-replay FLOPs.  ZipCache's packed codes make the trade lopsided —
+a slot's pages are a few hundred KB at 4/2-bit, far cheaper to move than
+to recompute.
+
+`HostSwapPool` owns PREALLOCATED host-side numpy buffers mirroring the
+payload pytree `registry.extract_caches` produces for one slot (packed
+hi/lo codes, staging window, per-slot quant metadata).  The engine's
+swap-out runs one warm jitted gather per slot, `device_get`s the result
+into a reserved entry, and returns the slot's pages to the freelist;
+swap-in re-grants pages host-side, uploads the entry, and scatters it
+through the new table — no prefill, no recompute, bitwise the bytes that
+left.  Handles are plain ints; entry shapes/dtypes are fixed at
+construction so occupancy never reallocates.
+
+Host-purity contract: this module is in `tools/analyze`'s host-pure set
+(purity.py) AND its `store`/`load` are hostsync roots — swap is the ONE
+module allowed to cross the device<->host boundary, and every crossing
+below carries an explicitly-reasoned ``ok()`` suppression so the lint
+documents the exception instead of ignoring the file.  Everything else
+here (handles, free list, counters, byte math) is plain numpy/python.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class HostSwapPool:
+    """Fixed-capacity pool of host-side mirrors of one slot's cache state.
+
+    template: a pytree of `jax.ShapeDtypeStruct`s (the engine builds it with
+    `jax.eval_shape` over its swap-extract program) — one entry's layout.
+    swap_pool_mb: host budget; 0 means "one entry per batch slot"
+    (`fallback_entries`), the default that can always hold every slot.
+    """
+
+    def __init__(self, template: Any, swap_pool_mb: int = 0,
+                 fallback_entries: int = 1):
+        import jax  # function-local: tree bookkeeping only (host-pure module)
+
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        self._treedef = treedef
+        self._specs: List[Tuple[Tuple[int, ...], np.dtype]] = [
+            (tuple(int(d) for d in x.shape), np.dtype(x.dtype))
+            for x in leaves]
+        self.entry_bytes = int(sum(
+            int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+            for shape, dt in self._specs))
+        if swap_pool_mb > 0:
+            cap = (int(swap_pool_mb) << 20) // max(self.entry_bytes, 1)
+        else:
+            cap = int(fallback_entries)
+        self.capacity = max(cap, 0)
+        # preallocated once: swapping at steady state never allocates host
+        # memory (entry shapes are static, np.copyto reuses the buffers)
+        self._buffers: List[List[np.ndarray]] = [
+            [np.zeros(shape, dt) for shape, dt in self._specs]
+            for _ in range(self.capacity)]
+        self._free: List[int] = list(range(self.capacity))
+        self._occupied: set = set()
+        self.swaps_out = 0
+        self.swaps_in = 0
+        self.refusals: Dict[str, int] = {"aliased": 0, "pool_full": 0}
+
+    # -- handles ------------------------------------------------------------
+
+    def reserve(self) -> Optional[int]:
+        """Claim an entry for an imminent swap-out; None (and a pool_full
+        refusal) when every entry is resident — the engine then falls back
+        to preempt+recompute, so head-of-line progress never blocks on
+        host-pool capacity."""
+        if not self._free:
+            self.refusals["pool_full"] += 1
+            return None
+        h = self._free.pop()
+        self._occupied.add(h)
+        return h
+
+    def release(self, handle: int) -> None:
+        """Return an entry to the free list (after swap-in, or when a
+        swapped request is cancelled).  Buffers stay allocated — only the
+        handle recycles."""
+        self._occupied.discard(handle)
+        if handle not in self._free:
+            self._free.append(handle)
+
+    def note_refusal(self, reason: str) -> None:
+        """Count a swap-out the engine refused before reserving (e.g.
+        `aliased`: refcount>1 prefix-shared slots swap as a unit or not at
+        all — privatizing just to evict would copy pages we are about to
+        free)."""
+        self.refusals[reason] = self.refusals.get(reason, 0) + 1
+
+    # -- the two sanctioned boundary crossings ------------------------------
+
+    def store(self, handle: int, payload: Any) -> None:
+        """Mirror one slot's device payload into entry `handle`.
+
+        One batched `device_get` of the whole leaf list — a single
+        device->host transfer per swap-out, never per leaf/scalar."""
+        import jax  # function-local: the pool imports no device runtime at module scope
+
+        leaves = jax.tree_util.tree_leaves(payload)
+        if len(leaves) != len(self._specs):
+            raise ValueError(
+                f"swap payload has {len(leaves)} leaves, pool entries hold "
+                f"{len(self._specs)}")
+        host = jax.device_get(leaves)  # purity: ok(swap-out IS the d2h boundary — one batched transfer per eviction, off the per-step path) # sync: ok(one batched device_get per swap-out; swapping replaces prefill-replay FLOPs, the transfer is the feature)
+        for buf, arr in zip(self._buffers[handle], host):
+            np.copyto(buf, arr)
+        self.swaps_out += 1
+
+    def load(self, handle: int) -> Any:
+        """Upload entry `handle` back to the device as the payload pytree
+        the restore program consumes.  Bitwise: the arrays are the exact
+        bytes `store` captured.
+
+        Buffer-reuse safety: jax's CPU client may zero-copy alias these
+        aligned numpy buffers, and a LATER `store` rewrites them in place.
+        That is safe here only because every consumer is ordered through
+        the engine's cache lineage — the restore scatter reads the upload,
+        any later swap-out's gather depends on the scatter's output, and
+        `store`'s blocking `device_get` completes that gather before the
+        first `np.copyto` runs.  Do not hand these buffers to anything
+        outside that lineage."""
+        import jax  # function-local: tree bookkeeping + the sanctioned upload below
+        import jax.numpy as jnp  # purity: ok(swap-in is the one sanctioned h2d path of this host-pure module)
+
+        up = [jnp.asarray(buf) for buf in self._buffers[handle]]  # purity: ok(uploading the mirrored entry IS swap-in) # sync: ok(one upload per swap-in, off the per-step path — the alternative is whole-prompt recompute)
+        self.swaps_in += 1
+        return jax.tree_util.tree_unflatten(self._treedef, up)
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        """Counters for `pool_stats()` / `GET /v1/stats`.  `host_bytes` is
+        RESIDENT bytes (occupied entries x entry size) — it returns to zero
+        when every swapped request has been restored or cancelled, which is
+        the conservation invariant tests/test_page_alloc.py asserts."""
+        return {
+            "capacity": self.capacity,
+            "resident": len(self._occupied),
+            "entry_bytes": self.entry_bytes,
+            "host_bytes": len(self._occupied) * self.entry_bytes,
+            "swaps_out": self.swaps_out,
+            "swaps_in": self.swaps_in,
+            "swap_refusals": int(sum(self.refusals.values())),
+            "refusals": dict(self.refusals),
+        }

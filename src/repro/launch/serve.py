@@ -42,6 +42,10 @@ slot can be evicted (pages returned, tokens retained host-side) so an
 urgent request is never stuck behind a long-budget monopolist, and is
 later re-admitted by replaying its retained tokens — deterministic, the
 victim's final tokens are unchanged (tests/test_scheduling.py).
+--preemption swap (freelist only) evicts by mirroring the victim's exact
+quantized cache into host memory (--swap-pool-mb budgets the host tier)
+and re-admits by uploading it back through a freshly granted page table —
+no prefill replay, tokens bitwise unchanged.
 """
 
 from __future__ import annotations
@@ -120,7 +124,7 @@ def add_engine_args(ap: argparse.ArgumentParser) -> None:
                          "reference); priority = highest Request.priority "
                          "first, FIFO within a class")
     ap.add_argument("--preemption", default="off",
-                    choices=("off", "recompute", "downshift"),
+                    choices=("off", "recompute", "downshift", "swap"),
                     help="--scheduler priority only: recompute lets the "
                          "scheduler evict a running lower-priority slot "
                          "(pages returned, tokens retained host-side) and "
@@ -131,7 +135,18 @@ def add_engine_args(ap: argparse.ArgumentParser) -> None:
                          "window one precision rung lower, so only its "
                          "window pages return — cheap preemption that "
                          "trades the victim's precision for the urgent "
-                         "request's pages; off never evicts")
+                         "request's pages; swap (freelist only) mirrors "
+                         "the victim's exact quantized cache into host "
+                         "memory and re-admits by uploading it back — no "
+                         "prefill replay, tokens bitwise unchanged "
+                         "(aliased victims and a full host pool fall back "
+                         "to recompute); off never evicts")
+    ap.add_argument("--swap-pool-mb", type=int, default=0,
+                    help="--preemption swap only: host-memory budget (MiB) "
+                         "for the swap tier's preallocated entry buffers; "
+                         "0 sizes the pool at one entry per batch slot, a "
+                         "positive budget caps entries at floor(mb/entry) "
+                         "and further swap-outs fall back to recompute")
     ap.add_argument("--precision-map", default="",
                     help="per-layer/head (key,value) effective-bit ceilings "
                          "for the quantizers (core/precision.py): compact "
@@ -171,6 +186,13 @@ def validate_engine_args(args, ap: argparse.ArgumentParser,
         # a downshift's whole yield is the window pages its early fold
         # returns — without the free-list pools there is nothing to return
         ap.error("--preemption downshift requires --page-allocator freelist")
+    if args.preemption == "swap" and args.page_allocator != "freelist":
+        # swap-out's whole yield is the victim's pages going back to the
+        # shared pools — without the free list there is nothing to return
+        ap.error("--preemption swap requires --page-allocator freelist")
+    if args.swap_pool_mb != 0 and args.preemption != "swap":
+        ap.error("--swap-pool-mb requires --preemption swap (only the swap "
+                 "tier allocates host entry buffers)")
     if args.ladder_watermark != 0.0 and args.page_allocator != "freelist":
         ap.error("--ladder-watermark requires --page-allocator freelist "
                  "(pressure is free-list pool pressure)")
@@ -216,7 +238,8 @@ def build_serve_config(args) -> ServeConfig:
                        preemption=args.preemption,
                        prefix_cache=args.prefix_cache == "on",
                        precision_map=args.precision_map,
-                       ladder_watermark=args.ladder_watermark)
+                       ladder_watermark=args.ladder_watermark,
+                       swap_pool_mb=args.swap_pool_mb)
 
 
 def build_compression_config(args) -> CompressionConfig:
@@ -286,6 +309,11 @@ def main(argv=None):
                 print(f"[serve] downshift ladder: {ds['downshifts']} "
                       f"downshifts freed {ds['pages_freed']} window pages, "
                       f"{ds['refusals']} aliased-slot refusals")
+            sw = ps.get("swap")
+            if sw is not None and (sw["swaps_out"] or sw["swap_refusals"]):
+                print(f"[serve] swap tier: {sw['swaps_out']} out / "
+                      f"{sw['swaps_in']} in, {sw['host_bytes']} host bytes "
+                      f"resident, {sw['swap_refusals']} refusals")
             px = ps["prefix"]
             if px["hits"] or px["misses"]:
                 print(f"[serve] prefix cache: {px['hits']} hits / "

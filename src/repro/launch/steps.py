@@ -320,6 +320,36 @@ def make_copy_pages_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
     return copy, ctx
 
 
+def make_swap_extract_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                           ccfg: Optional[CompressionConfig] = None, ctx=None):
+    """extract(caches, slot) — one slot's complete state (logical pages +
+    metadata rows) as a payload pytree, the device half of swap-out.  The
+    slot id is a traced data operand and every leaf keeps the full static
+    page extent, so ONE warm program serves every slot and occupancy —
+    swapping at steady state never retraces (tests/test_retrace.py)."""
+    ctx = ctx or serve_ctx(cfg, shape, mesh, ccfg)
+
+    def extract(caches, slot):
+        return registry.extract_caches(caches, slot)
+
+    return extract, ctx
+
+
+def make_swap_restore_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                           ccfg: Optional[CompressionConfig] = None, ctx=None):
+    """restore(caches, payload, slot) — scatter a swapped-out slot's payload
+    back through its freshly re-granted page table and rewrite its metadata
+    rows.  No prefill, no recompute: the bytes uploaded are the bytes the
+    extract program captured, so the restored slot decodes bitwise like one
+    that was never evicted."""
+    ctx = ctx or serve_ctx(cfg, shape, mesh, ccfg)
+
+    def restore(caches, payload, slot):
+        return registry.restore_caches(caches, payload, slot)
+
+    return restore, ctx
+
+
 def continuous_decode_lowering_inputs(cfg: ArchConfig, shape: ShapeConfig, mesh, ctx):
     """Abstract (params, caches, token, probes, active) + shardings for the
     continuous decode program.  mesh=None returns abstract inputs with no

@@ -121,6 +121,62 @@ def insert_caches(dst: Any, src: Any, slot) -> Any:
     return ins(dst, src, 1)
 
 
+def extract_caches(caches: Any, slot) -> Any:
+    """Capture one slot's complete state across the cache tree — the device
+    half of swap-out (`core/swap.py` mirrors the result into host buffers).
+    Paged elements gather their payload pages through the slot's table plus
+    their metadata rows (`paged.extract_slot`); everything else (mixed
+    caches, SSM states) is a plain leading-axis row slice.  The result is a
+    pytree of arrays, NOT a cache — `restore_caches` pairs it back up
+    positionally against the live tree, same contract as `insert_caches`.
+    Jittable with a traced `slot`; static shapes (one warm program serves
+    every slot and occupancy)."""
+    from repro.core import paged as paged_lib
+
+    def ext(d, axis):
+        is_paged = lambda x: isinstance(x, paged_lib.PagedKVCache)
+        leaves = jax.tree_util.tree_flatten(d, is_leaf=is_paged)[0]
+        return [paged_lib.extract_slot(el, slot, batch_axis=axis)
+                if is_paged(el)
+                else jax.lax.dynamic_slice_in_dim(el, slot, 1, axis=axis)
+                for el in leaves]
+
+    if isinstance(caches, dict) and "prefix" in caches:
+        return {"prefix": [ext(d, 0) for d in caches["prefix"]],
+                "groups": ext(caches["groups"], 1)}
+    return ext(caches, 1)
+
+
+def restore_caches(caches: Any, payload: Any, slot) -> Any:
+    """Inverse of `extract_caches`: write a swapped-out slot's payload back
+    into batch row `slot` of the live tree.  Paged elements scatter onto the
+    physical pages the allocator re-granted host-side (`paged.restore_slot`);
+    the rest are plain row writes.  Bitwise: the restored rows/pages are
+    exactly the bytes `extract_caches` captured, so a swapped-then-restored
+    request decodes identically to one that was never evicted."""
+    from repro.core import paged as paged_lib
+
+    def rst(d, p, axis):
+        is_paged = lambda x: isinstance(x, paged_lib.PagedKVCache)
+        leaves, treedef = jax.tree_util.tree_flatten(d, is_leaf=is_paged)
+        if len(leaves) != len(p):
+            raise ValueError(
+                f"swap payload has {len(p)} elements, batch has {len(leaves)}")
+        out = [paged_lib.restore_slot(el, pl, slot, batch_axis=axis)
+               if is_paged(el)
+               else jax.lax.dynamic_update_slice_in_dim(
+                   el, pl.astype(el.dtype), slot, axis=axis)
+               for el, pl in zip(leaves, p)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    if isinstance(caches, dict) and "prefix" in caches:
+        prefix = [rst(d, p, 0)
+                  for d, p in zip(caches["prefix"], payload["prefix"])]
+        groups = rst(caches["groups"], payload["groups"], 1)
+        return {"prefix": prefix, "groups": groups}
+    return rst(caches, payload, 1)
+
+
 def copy_caches(caches: Any, moves: Any) -> Any:
     """Apply one set of physical page moves ({segment: (src_ids, dst_ids)})
     to every paged element of the cache tree — the device half of

@@ -16,10 +16,12 @@ from repro.serving.engine import (  # noqa: F401
 from repro.serving.events import (  # noqa: F401
     CallbackErrorEvent,
     CancelledEvent,
+    DownshiftEvent,
     EngineClosedError,
     Event,
     FinishedEvent,
     PreemptedEvent,
+    SwappedEvent,
     TokenEvent,
     UnknownRequestError,
 )

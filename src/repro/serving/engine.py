@@ -60,6 +60,7 @@ import numpy as np
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import alloc as alloc_lib
 from repro.core import backend as backend_lib
+from repro.core import swap as swap_lib
 from repro.core.policy import CompressionConfig
 from repro.launch import steps as steps_lib
 from repro.models import registry
@@ -152,6 +153,12 @@ class ServeConfig:
     # ladder rung lower (lo-store effective bits -1, floor 1) so only its
     # window pages come back.  Unblocks page pressure without recompute's
     # re-prefill cost; trades the victim's precision instead of its latency
+    # "swap" (paged+freelist): the victim's EXACT quantized cache is
+    # mirrored into host memory (core/swap.py) and its pages returned;
+    # re-admission uploads the mirror through the re-granted table — no
+    # prefill, no recompute, tokens bitwise as if never evicted.  Aliased
+    # (refcount>1) victims and a full host pool refuse the swap and fall
+    # back to preempt+recompute, so progress never blocks on the host tier
     preemption: str = "off"
     # "paged"+"freelist" only: content-hash shared-prefix page dedup with
     # copy-on-write tables (core/alloc.py).  Admission hashes the request's
@@ -170,6 +177,12 @@ class ServeConfig:
     # every cache/pool/kernel shape is map-independent.  "" disables maps:
     # the bitwise-default static-qmax path.
     precision_map: str = ""
+    # preemption="swap" only: host-memory budget for the swap tier's
+    # preallocated entry buffers, in MiB.  0 sizes the pool at one entry
+    # per batch slot (every running request could swap out at once); a
+    # positive budget caps entries at floor(mb / entry_bytes) and swap-outs
+    # beyond it fall back to recompute (counted as pool_full refusals).
+    swap_pool_mb: int = 0
     # Downshift ladder ("paged"+"freelist" only): when the min free
     # fraction across the page pools drops to or below this watermark, the
     # engine early-folds the oldest eligible slot's staging window at a
@@ -254,6 +267,20 @@ class _Slot:
     t_submit: float = 0.0
     t_admit: float = 0.0
     prefill_s: float = 0.0
+
+
+@dataclasses.dataclass
+class _SwapState:
+    """Host-side record of one swapped-out request (rides on the Request
+    between eviction and re-admission): the swap-pool handle plus every
+    per-slot counter the restore must reinstate for bitwise resumption —
+    allocator occupancy (drives the page re-grant), probe/fold counters,
+    and the downshift-ladder rung."""
+    handle: int
+    occ: alloc_lib.Occupancy
+    steps: int
+    since_rc: int
+    rung: int
 
 
 def pack_requests(requests: Sequence[np.ndarray], batch_size: int,
@@ -568,10 +595,10 @@ class EngineCore(_EngineBase):
             raise ValueError(
                 f"ServeConfig.backpressure must be 'defer' or 'error', got "
                 f"{scfg.backpressure!r}")
-        if scfg.preemption not in ("off", "recompute", "downshift"):
+        if scfg.preemption not in ("off", "recompute", "downshift", "swap"):
             raise ValueError(
-                f"ServeConfig.preemption must be 'off', 'recompute' or "
-                f"'downshift', got {scfg.preemption!r}")
+                f"ServeConfig.preemption must be 'off', 'recompute', "
+                f"'downshift' or 'swap', got {scfg.preemption!r}")
         self._alloc: Optional[alloc_lib.FreeListAllocator] = None
         self._last_deferred: Optional[str] = None
         if getattr(self.ctx.backend, "allocator", "static") == "freelist":
@@ -610,6 +637,31 @@ class EngineCore(_EngineBase):
         if self._alloc is not None:
             self._copy_pages = jax.jit(steps_lib.make_copy_pages_step(
                 cfg, self._shape, mesh, ccfg, ctx=self.ctx)[0])
+        # Host swap tier (preemption="swap", core/swap.py): ONE warm
+        # extract/restore program pair (traced slot operand, full static
+        # page extents) plus a host pool of preallocated entry buffers
+        # sized from the extract program's output template.  Built only
+        # when swap can fire, so every other mode keeps the exact program
+        # set of the bitwise-default path.
+        self._swap: Optional[swap_lib.HostSwapPool] = None
+        self._swap_extract = None
+        self._swap_restore = None
+        if scfg.preemption == "swap":
+            if self._alloc is None:
+                raise ValueError(
+                    "preemption='swap' requires backend='paged' with "
+                    "page_allocator='freelist' (swap-out returns the "
+                    "victim's pages to the free pools)")
+            self._swap_extract = jax.jit(steps_lib.make_swap_extract_step(
+                cfg, self._shape, mesh, ccfg, ctx=self.ctx)[0])
+            self._swap_restore = jax.jit(steps_lib.make_swap_restore_step(
+                cfg, self._shape, mesh, ccfg, ctx=self.ctx)[0])
+            template = jax.eval_shape(   # cold path: shapes only, no device work
+                self._swap_extract, self.caches,
+                jax.ShapeDtypeStruct((), jnp.int32))
+            self._swap = swap_lib.HostSwapPool(
+                template, swap_pool_mb=scfg.swap_pool_mb,
+                fallback_entries=scfg.batch_size)
 
     # ------------------------------------------------------------------
     # lifecycle API
@@ -802,6 +854,12 @@ class EngineCore(_EngineBase):
         # never re-admitted, so retire it here with whatever it decoded
         req = next(r for r in self.queue if r.id == request_id)
         self.queue.remove(req)
+        # a swapped-out request dies with its host mirror: release the
+        # entry so host_bytes returns to zero (the conservation invariant)
+        st = getattr(req, "_swap_state", None)
+        if st is not None:
+            self._swap.release(st.handle)
+            del req._swap_state
         now = time.perf_counter()
         resume = getattr(req, "_resume_tokens", None)
         tokens = list(resume) if resume is not None else []
@@ -903,11 +961,15 @@ class EngineCore(_EngineBase):
         the shared-prefix block — index
         entries, hit/miss/eviction counts, CoW copies, currently shared
         pages, pages dedup is saving right now, and the prefill tokens
-        whose FLOPs hits skipped.  Served verbatim by `/v1/stats`."""
+        whose FLOPs hits skipped — and, when preemption="swap", the host
+        swap tier's block (swaps_out/swaps_in, resident host_bytes,
+        swap_refusals).  Served verbatim by `/v1/stats`."""
         if self._alloc is None:
             return None
         stats = self._alloc.stats()
         stats["prefix"]["prefill_tokens_skipped"] = self._prefix_tokens_skipped
+        if self._swap is not None:
+            stats["swap"] = self._swap.stats()
         return stats
 
     def free(self, slot_id: int) -> None:
@@ -1077,13 +1139,22 @@ class EngineCore(_EngineBase):
             for slot_id, req in plan.admissions:
                 self.queue.remove(req)
                 self._admit_one(slot_id, req)
-            if (self.scfg.preemption in ("recompute", "downshift")
+            if (self.scfg.preemption in ("recompute", "downshift", "swap")
                     and self.queue and n_evicted < self.scfg.batch_size):
                 victim = self.scheduler.select_victim(
                     list(self.queue), self._running_views(), self._pool_view())
                 if victim is not None:
                     if self.scfg.preemption == "recompute":
                         self._preempt(victim)
+                        n_evicted += 1
+                        continue   # re-plan with the freed slot and pages
+                    if self.scfg.preemption == "swap":
+                        # swap the victim's exact cache to the host tier;
+                        # a refused swap (aliased pages, full host pool)
+                        # falls back to preempt+recompute so eviction still
+                        # frees the slot either way
+                        if not self._swap_out(victim):
+                            self._preempt(victim)
                         n_evicted += 1
                         continue   # re-plan with the freed slot and pages
                     # "downshift": cheap preemption — the victim keeps its
@@ -1151,6 +1222,12 @@ class EngineCore(_EngineBase):
         hold (the donor inserted from the same device buffers) — harmless
         by idempotence, so one warm `_insert` program serves both paths."""
         t0 = time.perf_counter()
+        if getattr(req, "_swap_state", None) is not None:
+            # host state exists: swap-in beats recompute (two PCIe
+            # transfers instead of prefill + replay FLOPs), and the
+            # uploaded bytes are exactly what left — no prefill below
+            self._swap_in(slot_id, req, t0)
+            return
         n = int(req.tokens.shape[-1])  # sync: ok(np shape tuple, host-side)
         bucket = self._bucket_len(n)
         resume = getattr(req, "_resume_tokens", None)
@@ -1236,13 +1313,21 @@ class EngineCore(_EngineBase):
         b = self.scfg.batch_size
         interval = self.ccfg.recompress_interval
         # same staging-matrix scheme as step(): one transfer per replayed
-        # step (sampling rows stay zero — replay never samples)
-        stage = np.zeros((6, b), np.int32)
-        stage[_ROW_ACT, slot_id] = 1
+        # step (sampling rows stay zero — replay never samples).  The
+        # matrix MUST be fresh each iteration: jax's CPU client zero-copies
+        # 64-byte-aligned numpy uploads, and this loop never blocks on
+        # device work, so rewriting one shared matrix in place can be
+        # observed by a still-queued earlier iteration's unstage — the
+        # replayed token silently changes and the rebuilt cache diverges
+        # (heap-alignment + dispatch-backlog dependent, so token tests
+        # only catch it intermittently; tests/test_scheduling.py pins the
+        # no-mutation-after-upload discipline directly).
         for i in range(len(tokens) - 1):
             if self._alloc is not None:
                 self._alloc.note_append(slot_id)
                 self._sync_tables()
+            stage = np.zeros((6, b), np.int32)
+            stage[_ROW_ACT, slot_id] = 1
             stage[_ROW_TOK, slot_id] = int(tokens[i])
             stage[_ROW_PROBE, slot_id] = probe_flag(
                 s.steps, interval, self.scfg.seed)
@@ -1279,6 +1364,98 @@ class EngineCore(_EngineBase):
         self.queue.insert(pos, req)
         self._events.append(events_lib.PreemptedEvent(
             req.id, self._step_no, n_generated=len(req._resume_tokens)))
+
+    def _swap_out(self, slot_id: int) -> bool:
+        """Evict a running slot to the host swap tier: mirror its EXACT
+        device state (one warm jitted gather, one batched device_get),
+        return every page it holds to the free pools, and requeue it at
+        its arrival position.  Re-admission takes `_admit_one`'s swap-in
+        branch — upload + table re-grant, no prefill, no recompute.
+
+        Returns False with no side effects beyond a counted refusal when
+        the slot still aliases shared-prefix pages (refcount > 1: its
+        hi/lo pages are not exclusively its own — freeing them would pull
+        pages other slots read, and privatizing first would ALLOCATE pages,
+        the opposite of relief) or when the host pool has no free entry;
+        the caller falls back to preempt+recompute so eviction still
+        makes progress."""
+        s = self.slots[slot_id]
+        if s is None:
+            return False
+        if self._alloc.needs_privatize(slot_id):
+            self._swap.note_refusal("aliased")
+            return False
+        handle = self._swap.reserve()    # a full pool counts its own refusal
+        if handle is None:
+            return False
+        req = s.request
+        now = time.perf_counter()
+        # capture BEFORE free(): the allocator clears occupancy and the
+        # rung dies with the slot.  Occupancy is a frozen dataclass, so
+        # holding the reference is safe.
+        st = _SwapState(
+            handle=handle, occ=self._alloc.occ[slot_id],
+            steps=s.steps, since_rc=s.since_rc,
+            rung=int(self._rungs[slot_id]))  # sync: ok(_rungs is a host-side numpy array)
+        payload = self._swap_extract(
+            self.caches,
+            jnp.asarray(slot_id, jnp.int32))  # sync: ok(one scalar upload per swap-out event, not per step)
+        self._swap.store(handle, payload)
+        req._swap_state = st
+        # same host-side request bookkeeping as _preempt: _resume_tokens
+        # keeps cancel()/result() uniform for evicted requests, and the
+        # swap-in branch restores generated from it
+        req._resume_tokens = list(s.generated)
+        req._t_preempt = now
+        req._n_preempts += 1
+        req._prefill_s_acc += s.prefill_s
+        req._decode_s_acc += max(now - s.t_admit - s.prefill_s, 0.0)
+        self._alloc.preemptions += 1
+        self.free(slot_id)
+        pos = next((j for j, r in enumerate(self.queue)
+                    if getattr(r, "_seq", 0) > req._seq), len(self.queue))
+        self.queue.insert(pos, req)
+        self._events.append(events_lib.SwappedEvent(
+            req.id, self._step_no, direction="out",
+            n_generated=len(req._resume_tokens),
+            host_bytes=self._swap.stats()["host_bytes"]))
+        return True
+
+    def _swap_in(self, slot_id: int, req: Request, t0: float) -> None:
+        """Re-admit a swapped-out request WITHOUT recompute: re-grant its
+        pages from the captured occupancy (legal by construction — the
+        same worst-case reservation covered this occupancy while it ran),
+        upload the host mirror, scatter it through the new table, and
+        reinstate every per-slot counter.  The restored slot's next decode
+        step consumes exactly the device bytes and counter state the
+        evicted slot would have had — tokens stay bitwise identical to
+        recompute and to the uncontended run."""
+        st: _SwapState = req._swap_state
+        resume = req._resume_tokens
+        bucket = self._bucket_len(int(req.tokens.shape[-1]))  # sync: ok(np shape tuple, host-side)
+        self._alloc.admit(slot_id, st.occ, self._request_total_tokens(req),
+                          bucket)
+        self._sync_tables()
+        payload = self._swap.load(st.handle)
+        self.caches = self._swap_restore(
+            self.caches, payload,
+            jnp.asarray(slot_id, jnp.int32))  # sync: ok(one scalar upload per swap-in event, not per step)
+        self._swap.release(st.handle)
+        req._preempt_s += t0 - req._t_preempt
+        t1 = time.perf_counter()
+        self.slots[slot_id] = _Slot(
+            request=req, generated=list(resume),
+            steps=st.steps, since_rc=st.since_rc,
+            t_submit=getattr(req, "_t_submit", t0), t_admit=t0,
+            prefill_s=t1 - t0)   # admission cost = two PCIe transfers, no FLOPs
+        self._rungs[slot_id] = st.rung   # later folds stay at the ladder rung
+        del req._swap_state
+        del req._resume_tokens
+        self._events.append(events_lib.SwappedEvent(
+            req.id, self._step_no, direction="in",
+            n_generated=len(resume),
+            host_bytes=self._swap.stats()["host_bytes"]))
+        self._maybe_finish(slot_id)
 
     def _downshift(self, slot_id: int) -> bool:
         """One ladder downshift of a running slot: bump its rung and
@@ -1401,7 +1578,7 @@ class EngineCore(_EngineBase):
                 self.caches = self._recompress_rows_rung(
                     self.caches,
                     jnp.asarray(due),  # sync: ok(one mask upload per fold event, cadence 1/interval steps)
-                    jnp.asarray(self._rungs))  # sync: ok(one (b,) rung upload per fold event)
+                    jnp.asarray(self._rungs.copy()))  # sync: ok(one (b,) rung upload per fold event; copied because the live array mutates host-side between steps and CPU uploads may zero-copy alias it)
             else:
                 self.caches = self._recompress_rows(
                     self.caches,

@@ -1,7 +1,7 @@
 """Typed event stream + typed API errors for the serving engine.
 
 `EngineCore.step()` returns the list of events that iteration produced, in
-order.  Six event kinds cover the request lifecycle after admission:
+order.  Seven event kinds cover the request lifecycle after admission:
 
   * ``TokenEvent``     — one freshly decoded token (``index`` is its position
     in the request's output stream; the first token, sampled from the
@@ -24,6 +24,12 @@ order.  Six event kinds cover the request lifecycle after admission:
     back to the pool).  The request keeps decoding — a downshift trades
     precision for memory instead of evicting (``preemption="downshift"``)
     or deferring admissions (``ServeConfig.ladder_watermark``).
+  * ``SwappedEvent``    — the request's exact quantized cache crossed the
+    host boundary (``direction="out"``: pages returned to the pool, state
+    mirrored into the host swap tier; ``direction="in"``: state uploaded
+    and re-granted pages rewritten — no prefill, no recompute).  A
+    swapped-then-restored request decodes bitwise as if never evicted;
+    like recompute replay, nothing is re-emitted on restore.
   * ``CallbackErrorEvent`` — a `Request.on_token` callback raised.  The
     engine contains the exception (``step()`` stays transactional — slot
     counters, fold cadence, and tokens are untouched), detaches the
@@ -101,6 +107,13 @@ class CancelledEvent(Event):
 class DownshiftEvent(Event):
     rung: int           # the slot's ladder rung AFTER this downshift
     pages_freed: int    # window pages the early fold returned to the pool
+
+
+@dataclasses.dataclass(frozen=True)
+class SwappedEvent(Event):
+    direction: str      # "out" (evicted to host) | "in" (restored, no recompute)
+    n_generated: int    # tokens decoded so far (retained host-side with the cache)
+    host_bytes: int     # resident bytes in the swap pool AFTER this transfer
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,15 @@
+"""Deliberately-impure swap pool: unsuppressed boundary crossings in a
+host-pure module whose store/load are hostsync roots."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class HostSwapPool:
+    def store(self, handle, payload):
+        leaves = jax.tree_util.tree_leaves(payload)
+        return [np.asarray(jax.device_get(x)) for x in leaves]
+
+    def load(self, handle):
+        return jnp.asarray(np.zeros(4))

@@ -1,0 +1,20 @@
+"""Known-good swap pool: host-pure except the two sanctioned, reasoned
+boundary crossings (mirrors the real core/swap.py contract)."""
+
+import numpy as np
+
+
+class HostSwapPool:
+    def __init__(self, n):
+        self._buffers = [np.zeros(4) for _ in range(n)]
+
+    def store(self, handle, payload):
+        import jax  # function-local: tree bookkeeping only
+        leaves = jax.tree_util.tree_leaves(payload)
+        host = jax.device_get(leaves)  # purity: ok(swap-out IS the d2h boundary) # sync: ok(one batched device_get per swap-out)
+        for buf, arr in zip(self._buffers, host):
+            np.copyto(buf, arr)
+
+    def load(self, handle):
+        import jax.numpy as jnp  # purity: ok(the one sanctioned h2d path)
+        return [jnp.asarray(b) for b in self._buffers]  # purity: ok(uploading the mirror IS swap-in) # sync: ok(one upload per swap-in)

@@ -32,7 +32,8 @@ from repro.core import backend as backend_lib
 from repro.core import kvcache as kvc
 from repro.core.policy import CompressionConfig
 from repro.models import registry
-from repro.serving import ContinuousEngine, Request, ServeConfig
+from repro.serving import (ContinuousEngine, PreemptedEvent, Request,
+                           ServeConfig, SwappedEvent)
 
 BACKENDS = ["mixed", "paged"]
 # attention tolerance for the 4/2-bit mixed policy, as in test_kvcache.py
@@ -207,6 +208,16 @@ ENGINE_VARIANTS = {
     "downshift-preempt": dict(backend="paged", paged_kernel=False,
                               page_allocator="freelist", pool_fraction=1.0,
                               scheduler="priority", preemption="downshift"),
+    # the SWAP-PREEMPTION axis: the host swap tier armed as the priority
+    # scheduler's preemption policy.  Equal priorities and a non-blocking
+    # pool mean no victim is ever selected, so no transfer fires — but the
+    # armed engine builds its extract/restore programs and the host pool
+    # (swap_pool_mb=0: one entry per slot), and must degenerate BITWISE to
+    # the default path with every swap counter at zero
+    "swap-preempt": dict(backend="paged", paged_kernel=False,
+                         page_allocator="freelist", pool_fraction=1.0,
+                         scheduler="priority", preemption="swap",
+                         swap_pool_mb=0),
 }
 
 
@@ -514,6 +525,98 @@ def test_continuous_engine_token_identical_with_downshift_preempt(engine_outputs
             assert a.finish_reason == b.finish_reason
     ds = stats["downshift-preempt"]["downshift"]
     assert ds == {"downshifts": 0, "pages_freed": 0, "refusals": 0}, ds
+
+
+def test_continuous_engine_token_identical_with_swap_preempt(engine_outputs):
+    """The swap-preemption axis, unpressured: with equal priorities and a
+    non-blocking pool no victim is ever selected, so the armed engine
+    (extract/restore programs built, host pool allocated) must be bitwise
+    the unarmed path with every swap counter at zero — arming the fourth
+    lever may not change numerics."""
+    outs, fills, _, stats = engine_outputs
+    for other in ("mixed", "priority-sched"):
+        np.testing.assert_array_equal(fills[other], fills["swap-preempt"])
+        for (ra, a), (rb, b) in zip(outs[other].items(),
+                                    outs["swap-preempt"].items()):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert a.finish_reason == b.finish_reason
+    sw = stats["swap-preempt"]["swap"]
+    assert sw["swaps_out"] == 0 and sw["swaps_in"] == 0, sw
+    assert sw["swap_refusals"] == 0 and sw["host_bytes"] == 0, sw
+    assert sw["capacity"] >= 2, sw      # swap_pool_mb=0: one entry per slot
+
+
+def test_swap_pressure_scenario():
+    """The PRESSURE side of the swap axis — the acceptance bar.  Three runs
+    of the same workload (two priority-0 longs, then a priority-2 short that
+    forces a victim once both slots are held):
+
+      * uncontended — the short is never submitted: the longs' reference;
+      * recompute   — the victim is preempted and replayed by prefill;
+      * swap        — the victim's exact quantized cache crosses to host and
+        back: at least one swap-out AND one swap-in must fire, the freelist
+        partition must hold after every step, resident host bytes must
+        return to zero once drained — and every request's tokens must be
+        BITWISE identical to the recompute run, with the longs bitwise the
+        uncontended run (a swapped-then-restored slot decodes as if never
+        evicted: no prefill, no recompute, no numeric drift).
+    """
+    cfg = configs.get_arch("yi-6b", smoke=True)
+    ccfg = _ccfg()
+    params = registry.materialize_params(cfg, 0)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab, size=(48,)).astype(np.int32)
+               for _ in range(3)]
+
+    def run(preemption, contended=True, swap_pool_mb=0):
+        # explicit keywords (not **kw): the conformance-axes checker reads
+        # ServeConfig call keywords to prove swap_pool_mb is covered
+        scfg = ServeConfig(batch_size=2, prompt_len=48, max_new_tokens=12,
+                           page_size=8, backend="paged",
+                           page_allocator="freelist", pool_fraction=1.0,
+                           scheduler="priority", preemption=preemption,
+                           swap_pool_mb=swap_pool_mb)
+        eng = ContinuousEngine(cfg, ccfg, scfg, params)
+        rids = [eng.submit(Request(tokens=prompts[0])),
+                eng.submit(Request(tokens=prompts[1]))]
+        for _ in range(4):
+            eng.step()
+        if contended:
+            rids.append(eng.submit(Request(tokens=prompts[2],
+                                           max_new_tokens=3, priority=2)))
+        events = []
+        while eng.pending:
+            events += eng.step()
+            eng._alloc.check_invariants()
+        outs = [(tuple(eng.result(r).tokens.tolist()),
+                 eng.result(r).finish_reason) for r in rids]
+        return outs, eng.pool_stats(), events
+
+    out_ref, _, _ = run("recompute", contended=False)
+    out_rc, st_rc, ev_rc = run("recompute")
+    out_sw, st_sw, ev_sw = run("swap", swap_pool_mb=1)
+
+    assert any(isinstance(e, PreemptedEvent) for e in ev_rc), \
+        "scenario must force a preemption for the comparison to mean anything"
+    swaps = [e for e in ev_sw if isinstance(e, SwappedEvent)]
+    assert sum(e.direction == "out" for e in swaps) >= 1, ev_sw
+    assert sum(e.direction == "in" for e in swaps) >= 1, ev_sw
+    assert not any(isinstance(e, PreemptedEvent) for e in ev_sw), \
+        "swap must replace recompute, not fall back to it in this scenario"
+
+    # the bitwise bar: swap == recompute == uncontended
+    assert out_sw == out_rc
+    assert out_sw[:2] == out_ref
+
+    sw = st_sw["swap"]
+    assert sw["swaps_out"] >= 1 and sw["swaps_in"] == sw["swaps_out"], sw
+    assert sw["host_bytes"] == 0 and sw["resident"] == 0, sw
+    assert sw["entry_bytes"] > 0 and sw["capacity"] >= 1, sw
+    assert "swap" not in st_rc   # the tier exists only when armed
+    # every page home again once everything drained, on both engines
+    for st in (st_rc, st_sw):
+        assert all(v["used"] == 0 for v in st.values()
+                   if isinstance(v, dict) and "used" in v)
 
 
 def test_downshift_ladder_pressure_scenario():

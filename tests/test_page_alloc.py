@@ -35,6 +35,7 @@ except ImportError:
 from repro import configs
 from repro.core import alloc as alloc_lib
 from repro.core import kvcache as kvc
+from repro.core import swap as swap_lib
 from repro.core.policy import CompressionConfig
 from repro.models import registry
 from repro.serving import ContinuousEngine, Request, ServeConfig
@@ -459,6 +460,213 @@ def test_downshift_storm_preserves_refcount_partition():
         assert len(seg.free) == seg.pool_pages, name
         assert not seg.refcount.any(), name
     assert alloc.pool_pressure() == 1.0          # idle pools: no pressure
+
+
+# ---------------------------------------------------------------------------
+# (a'') host swap tier: roundtrip invariants against the allocator protocol
+# ---------------------------------------------------------------------------
+
+def _swap_pool(entries=2, mb=0):
+    """A tiny `HostSwapPool` over a two-leaf template — enough to exercise
+    handle recycling, byte conservation, and bitwise store/load without
+    building an engine."""
+    template = {"codes": jax.ShapeDtypeStruct((4, 8), jnp.int8),
+                "meta": [jax.ShapeDtypeStruct((3,), jnp.float32)]}
+    return swap_lib.HostSwapPool(template, swap_pool_mb=mb,
+                                 fallback_entries=entries)
+
+
+def _swap_payload(seed: int):
+    rng = np.random.default_rng(seed)
+    return {"codes": jnp.asarray(
+                rng.integers(-128, 127, size=(4, 8), dtype=np.int8)),
+            "meta": [jnp.asarray(rng.normal(size=(3,)).astype(np.float32))]}
+
+
+def _assert_payload_roundtrip(loaded, seed: int) -> None:
+    exp = _swap_payload(seed)
+    np.testing.assert_array_equal(np.asarray(loaded["codes"]),
+                                  np.asarray(exp["codes"]))
+    np.testing.assert_array_equal(np.asarray(loaded["meta"][0]),
+                                  np.asarray(exp["meta"][0]))
+
+
+def _drive_swap(alloc, pool, ops, budgets):
+    """Replay admit/append/fold/free PLUS the engine's swap protocol:
+    swap-out captures the victim's frozen `Occupancy` BEFORE `free` (exactly
+    `EngineCore._swap_out`), swap-in re-admits with that occupancy — a
+    mid-decode re-grant, legal because granted pages equal
+    ``pages_for(occ)`` at every step boundary.  The freelist partition and
+    the host-pool byte ledger are checked after every op.  Returns
+    (swaps_completed, outstanding-entry list for the caller to drain)."""
+    slots = alloc.slots
+    active = [None] * slots                 # slot -> budget while running
+    swapped = []                            # (handle, occ, budget, seed)
+    roundtrips = 0
+    for i, (op, arg) in enumerate(ops):
+        slot = arg % slots
+        if op == "admit":
+            if active[slot] is None:
+                t_max = budgets[arg % len(budgets)]
+                if alloc.can_admit(t_max):
+                    prompt = max(t_max // 2, 1)
+                    hi = min(int(0.4 * prompt), alloc.s_hi)
+                    lo = min(prompt - hi, alloc.s_lo)
+                    alloc.admit(slot, alloc_lib.Occupancy(hi=hi, lo=lo, win=0),
+                                t_max)
+                    active[slot] = t_max
+        elif op == "append" and active[slot] is not None:
+            o = alloc.occ[slot]
+            if o.win < alloc.window and o.hi + o.lo + o.win < active[slot]:
+                alloc.note_append(slot)
+        elif op == "fold" and active[slot] is not None:
+            alloc.fold_grant(slot)
+            alloc.fold_shrink(slot)
+        elif op == "free" and active[slot] is not None:
+            alloc.free(slot)
+            active[slot] = None
+        elif op == "swap" and active[slot] is not None:
+            handle = pool.reserve()
+            if handle is None:              # pool full: recompute fallback
+                alloc.free(slot)            # (engine preempts instead)
+            else:
+                occ = alloc.occ[slot]       # frozen: safe across free()
+                pool.store(handle, _swap_payload(i))
+                alloc.free(slot)
+                swapped.append((handle, occ, active[slot], i))
+            active[slot] = None
+        elif op == "swap_in" and swapped and active[slot] is None:
+            handle, occ, t_max, seed = swapped[arg % len(swapped)]
+            if alloc.can_admit(t_max):
+                swapped.remove((handle, occ, t_max, seed))
+                alloc.admit(slot, occ, t_max)
+                _assert_payload_roundtrip(pool.load(handle), seed)
+                pool.release(handle)
+                active[slot] = t_max
+                roundtrips += 1
+        alloc.check_invariants()
+        st = pool.stats()
+        assert st["resident"] == len(swapped)
+        assert st["host_bytes"] == len(swapped) * st["entry_bytes"]
+    # drain: restore-or-cancel every outstanding entry, then free all —
+    # conservation must close exactly on BOTH ledgers
+    for handle, occ, t_max, seed in swapped:
+        free_slots = [s for s in range(slots) if active[s] is None]
+        if free_slots and alloc.can_admit(t_max):
+            slot = free_slots[0]
+            alloc.admit(slot, occ, t_max)
+            _assert_payload_roundtrip(pool.load(handle), seed)
+            active[slot] = t_max
+            roundtrips += 1
+        pool.release(handle)                # cancel path when no slot fits
+        alloc.check_invariants()
+    for s in range(slots):
+        if active[s] is not None:
+            alloc.free(s)
+    alloc.check_invariants()
+    for name, seg in alloc.segs.items():
+        assert len(seg.free) == seg.pool_pages, name
+    assert pool.stats()["host_bytes"] == 0
+    return roundtrips
+
+
+def _swap_op_sequence(seed: int, n: int):
+    rng = np.random.default_rng(seed)
+    kinds = ("admit", "admit", "append", "append", "fold",
+             "swap", "swap_in", "free")
+    return [(kinds[int(rng.integers(len(kinds)))], int(rng.integers(64)))
+            for _ in range(n)]
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       slots=st.integers(min_value=1, max_value=4),
+       page=st.sampled_from([4, 8]),
+       fraction=st.floats(min_value=0.5, max_value=1.5))
+@settings(max_examples=40, deadline=None)
+def test_swap_roundtrip_invariants_random(seed, slots, page, fraction):
+    """Random interleavings of the swap protocol with admit/append/fold/free:
+    the freelist partition holds after every op (a swapped slot's pages are
+    FREE, not leaked), resident host bytes always equal
+    ``outstanding x entry_bytes`` and return to zero once every entry is
+    restored or cancelled, and every restore is bitwise the stored bytes."""
+    caps = (24, 40, 8)
+    pools = tuple(
+        max(int(np.ceil(slots * alloc_lib.pages_for(c, page) * fraction)),
+            alloc_lib.pages_for(c, page))
+        for c in caps)
+    alloc = alloc_lib.FreeListAllocator(slots, page, caps, pools)
+    _drive_swap(alloc, _swap_pool(entries=max(slots - 1, 1)),
+                _swap_op_sequence(seed, 120), [16, 40, 64, 72])
+
+
+def test_swap_roundtrip_deterministic_sweep():
+    """Stub-proof variant of the swap property test (hypothesis is an
+    optional dev extra): a fixed-seed sweep that must complete at least one
+    swap-out -> swap-in roundtrip, or the run is vacuous."""
+    total = 0
+    for seed in range(20):
+        slots, page, fraction = 1 + seed % 4, (4, 8)[seed % 2], \
+            (0.6, 1.0, 1.4)[seed % 3]
+        caps = (24, 40, 8)
+        pools = tuple(
+            max(int(np.ceil(slots * alloc_lib.pages_for(c, page) * fraction)),
+                alloc_lib.pages_for(c, page))
+            for c in caps)
+        alloc = alloc_lib.FreeListAllocator(slots, page, caps, pools)
+        total += _drive_swap(alloc, _swap_pool(entries=max(slots, 2)),
+                             _swap_op_sequence(seed, 150), [16, 40, 64, 72])
+    assert total > 0, "sweep never completed a swap roundtrip — vacuous run"
+
+
+def test_swap_refuses_aliased_and_full_pool_counts():
+    """The two refusal paths, against a pool that also holds a registered
+    prefix: aliased referents (donor AND alias hold refcount>1 pages) must
+    be refused BEFORE reserving an entry — swapping through shared tables
+    would free pages the other referent still reads — and a full host pool
+    refuses with a counted ``pool_full`` so the engine can fall back to
+    recompute.  Restore closes conservation on both ledgers."""
+    alloc = _prefix_alloc(3, 8, 1.5)
+    pool = _swap_pool(entries=1)
+    assert pool.capacity == 1 and pool.entry_bytes == 4 * 8 + 3 * 4
+    assert _swap_pool(mb=1).capacity == (1 << 20) // pool.entry_bytes
+
+    alloc.admit(0, _PREFIX_OCC, 40, _PREFIX_PROMPT)       # donor
+    assert alloc.prefix_register("sys", 0)
+    alloc.admit_alias(1, "sys", 40, _PREFIX_PROMPT, can_fold=True)
+    alloc.admit(2, _PREFIX_OCC, 40, _PREFIX_PROMPT)       # the only victim
+    alloc.check_invariants()
+
+    # engine protocol: aliased victims never reach reserve()
+    for victim in (0, 1):
+        assert alloc.needs_privatize(victim)
+        pool.note_refusal("aliased")
+    assert not alloc.needs_privatize(2)
+
+    occ = alloc.occ[2]
+    handle = pool.reserve()
+    assert handle is not None
+    pool.store(handle, _swap_payload(7))
+    alloc.free(2)
+    alloc.check_invariants()
+
+    # capacity 1, one entry resident: the next reservation must refuse
+    assert pool.reserve() is None
+    st = pool.stats()
+    assert st["refusals"] == {"aliased": 2, "pool_full": 1}
+    assert st["swap_refusals"] == 3
+    assert st["host_bytes"] == st["entry_bytes"] > 0
+
+    # restore: mid-decode re-grant with the frozen occupancy, bitwise load
+    alloc.admit(2, occ, 40, _PREFIX_PROMPT)
+    _assert_payload_roundtrip(pool.load(handle), 7)
+    pool.release(handle)
+    alloc.check_invariants()
+    st = pool.stats()
+    assert st["host_bytes"] == 0 and st["resident"] == 0
+    assert st["swaps_out"] == 1 and st["swaps_in"] == 1
+
+    # released handle recycles into the SAME preallocated buffers
+    assert pool.reserve() == handle
 
 
 # ---------------------------------------------------------------------------

@@ -32,7 +32,7 @@ from repro.core.policy import CompressionConfig
 from repro.models import registry
 from repro.runtime import compile_guard
 from repro.serving import (ContinuousEngine, PreemptedEvent, Request,
-                           SamplingParams, ServeConfig)
+                           SamplingParams, ServeConfig, SwappedEvent)
 
 INTERVAL = 8
 
@@ -262,6 +262,47 @@ def test_downshift_ladder_zero_compiles_at_steady_state():
     # the ladder fired again, inside the guarded region: rung bump, early
     # fold, page return — all on warm programs
     assert eng.pool_stats()["downshift"]["downshifts"] > ds_before
+    eng._alloc.check_invariants()
+
+
+@pytest.mark.parametrize("extra_kw", [
+    dict(pool_fraction=1.0),
+    dict(pool_fraction=1.0, admit_watermark=0.25),
+], ids=["plain", "watermarked"])
+def test_swap_tier_zero_compiles_at_steady_state(extra_kw):
+    """The swap tier's latency claim: swap-out is ONE warm gather program +
+    one batched device_get, swap-in one host upload + one warm scatter
+    program — the victim slot rides in as a data operand and the host pool
+    preallocates its buffers at __init__, so steady-state swapping compiles
+    exactly zero and allocates no host memory.  The mixed scenario's
+    priority-2 short forces a swap-out (and the later re-admission a
+    swap-in) inside BOTH guarded regions; parametrized over the plain and
+    watermarked freelist configurations, since the watermark changes the
+    admission schedule around the swap events."""
+    cfg, eng = _engine(backend="paged", page_size=8,
+                       page_allocator="freelist", scheduler="priority",
+                       preemption="swap", **extra_kw)
+
+    with compile_guard.count_compiles() as warm:
+        events = _drive_mixed_scenario(eng, _prompts(cfg, seed=0, n=4))
+    assert warm.count > 0, "warmup must compile (guard sanity check)"
+    dirs = [e.direction for e in events if isinstance(e, SwappedEvent)]
+    assert "out" in dirs and "in" in dirs, dirs
+    swaps_before = eng.pool_stats()["swap"]["swaps_in"]
+    assert swaps_before >= 1
+
+    # identically-shaped traffic on the SAME engine: the swap roundtrip
+    # fires again, entirely on warm programs and preallocated host buffers
+    with compile_guard.assert_no_compiles() as steady:
+        events = _drive_mixed_scenario(eng, _prompts(cfg, seed=1, n=4))
+    assert steady.count == 0
+    dirs = [e.direction for e in events if isinstance(e, SwappedEvent)]
+    assert "out" in dirs and "in" in dirs, dirs
+    assert not any(isinstance(e, PreemptedEvent) for e in events), \
+        "swap must replace recompute, not fall back to it in this scenario"
+    sw = eng.pool_stats()["swap"]
+    assert sw["swaps_in"] > swaps_before
+    assert sw["host_bytes"] == 0 and sw["resident"] == 0, sw
     eng._alloc.check_invariants()
 
 

@@ -32,9 +32,15 @@ from tools.analyze import common
 
 CHECKER = "purity"
 
-# modules that must stay host-pure (repo-relative paths)
+# modules that must stay host-pure (repo-relative paths).
+# core/swap.py is deliberately IN this set despite being the swap tier's
+# device<->host boundary: its two sanctioned crossings (HostSwapPool.store /
+# .load) carry reasoned `# purity: ok(...)` suppressions, so the lint
+# DOCUMENTS the exception instead of ignoring the file — any new jax usage
+# there must argue its case inline the same way.
 DEFAULT_MODULES: Sequence[str] = (
     "src/repro/core/alloc.py",
+    "src/repro/core/swap.py",
     "src/repro/serving/scheduler.py",
     "src/repro/serving/router.py",
 )
